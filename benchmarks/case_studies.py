@@ -1,0 +1,91 @@
+"""Sec.-5 case studies = the three hillclimb cells.
+
+Cell selection is computed from the dry-run baseline table
+(results/dryrun/*.json), per the assignment's criteria:
+  1. worst roofline fraction  (model-FLOPs time / roofline step time)
+  2. most collective-bound    (largest collective_s / total_s)
+  3. most representative of the paper's technique — the MoE all-to-all
+     trainer (the paper's own "shuffling" stress benchmark analogue)
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Tuple
+
+from repro.core import costmodel
+from repro.core.params import default_config
+
+DRYRUN = pathlib.Path(__file__).resolve().parent.parent / "results" / "dryrun"
+REPRESENTATIVE = ("olmoe-1b-7b", "train_4k")
+
+
+def _records() -> List[Dict]:
+    out = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") == "ok" and "multipod" not in d["mesh"]:
+            out.append(d)
+    return out
+
+
+def roofline_fraction(rec: Dict) -> float:
+    """useful model-FLOPs time / roofline step time, per chip."""
+    from repro.configs import get_config, get_shape
+    rl = rec["roofline"]
+    mf = costmodel.model_flops(get_config(rec["arch"]),
+                               get_shape(rec["shape"]))
+    model_s = (mf / 256) / costmodel.HW["flops_bf16"]
+    return model_s / max(rl["total_s"], 1e-12)
+
+
+def select_cells() -> List[Tuple[str, str, str]]:
+    recs = _records()
+    if not recs:
+        raise RuntimeError("run repro.launch.dryrun first")
+    worst = min(recs, key=roofline_fraction)
+    coll = max(recs, key=lambda r: (r["roofline"]["collective_s"]
+                                    / max(r["roofline"]["total_s"], 1e-12)))
+    cells = []
+    seen = set()
+    for why, rec in [("worst-roofline-fraction", worst),
+                     ("most-collective-bound", coll)]:
+        key = (rec["arch"], rec["shape"])
+        if key in seen:   # fall to next-worst distinct cell
+            pool = sorted(recs, key=roofline_fraction)
+            rec = next(r for r in pool
+                       if (r["arch"], r["shape"]) not in seen)
+            key = (rec["arch"], rec["shape"])
+        seen.add(key)
+        cells.append((rec["arch"], rec["shape"], why))
+    if REPRESENTATIVE not in seen:
+        cells.append((*REPRESENTATIVE, "paper-technique-representative"))
+    else:
+        pool = [r for r in recs if (r["arch"], r["shape"]) not in seen]
+        rec = max(pool, key=lambda r: r["roofline"]["collective_s"])
+        cells.append((rec["arch"], rec["shape"], "next-collective-bound"))
+    return cells
+
+
+def run_case_studies(threshold: float = 0.05):
+    from benchmarks.common import save
+    from repro.core import report
+    from repro.core.tree import run_tuning
+    from repro.core.trial import RooflineEvaluator, TrialRunner, Workload
+    reps = []
+    for arch, shape, why in select_cells():
+        wl = Workload(arch, shape)
+        runner = TrialRunner(wl, RooflineEvaluator())
+        rep = run_tuning(runner,
+                         default_config(shard_strategy="fsdp_tp",
+                                        attn_impl="pallas"),
+                         threshold=threshold)
+        md = f"Selection criterion: **{why}**\n\n" + report.tuning_markdown(rep)
+        save(f"case_study_{wl.key()}.md", md)
+        reps.append(rep)
+    return reps
+
+
+if __name__ == "__main__":
+    for rep in run_case_studies():
+        print(rep.workload, f"x{rep.speedup:.2f} in {rep.n_trials} trials")

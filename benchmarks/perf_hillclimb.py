@@ -1,0 +1,229 @@
+"""§Perf beyond-paper hillclimbing for the three selected cells.
+
+Sequence per the assignment: (1) the paper-faithful tuning tree produces
+the PAPER BASELINE config (recorded by benchmarks/case_studies.py);
+(2) THIS driver continues from that config with hypothesis-driven changes
+the paper doesn't have — Pallas flash attention (+VMEM tile sweep),
+attention batch-resharding, wire-dtype refinements — following the
+hypothesis -> napkin-math -> change -> measure -> verdict loop.  Stops
+after 3 consecutive <5% improvements on the dominant term.
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_hillclimb
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+PERF = ROOT / "results" / "perf"
+
+
+def candidate_moves(kind: str) -> List[Dict]:
+    """Ordered (by napkin-math predicted win) hypothesis list."""
+    moves = [
+        dict(name="ABLATION: unfused XLA attention",
+             targets="ablation",
+             delta=dict(attn_impl="xla"),
+             hypothesis=("quantify the flash kernel the baseline ships "
+                         "with: the XLA path round-trips the (B,H,S,S) "
+                         "f32 score/softmax tensors through HBM ~4x "
+                         "(n_layers*B*H*S^2*16B/chips of traffic). "
+                         "Expect a large memory-term regression — kept "
+                         "only as the measured ablation, always rejected.")),
+        dict(name="bigger VMEM tiles (file.buffer up)",
+             targets="memory",
+             delta=dict(attn_block_q=512, attn_block_kv=512),
+             hypothesis=("with flash on, K/V are re-fetched once per "
+                         "Q-tile: S/block_q passes. 128->512 cuts the "
+                         "refetch factor 4x; VMEM still fits "
+                         "(512*128*4B*4 buffers ~ 1MB).")),
+        dict(name="smaller VMEM tiles (file.buffer down)",
+             targets="memory",
+             delta=dict(attn_block_q=256, attn_block_kv=256),
+             hypothesis="midpoint of the tile sweep (paper tests both "
+                        "directions of file.buffer)."),
+        dict(name="attention batch-reshard over model axis",
+             targets="compute",
+             delta=dict(attn_tp_fallback="batch_shard"),
+             hypothesis=("archs whose head count does not divide the "
+                         "model axis replicate attention compute 16x over "
+                         "it; resharding batch over (data, model) for the "
+                         "attention op costs 2 all-to-alls but divides "
+                         "attention FLOPs+bytes by 16.")),
+        dict(name="sequence-parallel residual stream",
+             targets="memory",
+             delta=dict(seq_parallel=True),
+             hypothesis=("memory-bound train cells keep the (B,S,d) "
+                         "residual + norms replicated over the 16-wide "
+                         "model axis; seq-sharding it divides those bytes "
+                         "by 16 for the cost of an all-gather at the "
+                         "attention boundary (bytes ~ B*S*d*2/16 per "
+                         "block — cheaper than the saved HBM traffic "
+                         "when d is small relative to S).")),
+        dict(name="bf16 remat-save (spill.compress)",
+             targets="memory",
+             delta=dict(remat_save_dtype="bfloat16"),
+             hypothesis="halves the saved-residual bytes between layers "
+                        "when compute is f32; no-op if bf16 already won.")
+        ,
+        dict(name="int8 collective codec",
+             targets="collective",
+             delta=dict(comm_codec="int8"),
+             hypothesis=("collective term: MoE all-to-all bytes halve vs "
+                         "bf16 (quant scales add <1%). Only bites "
+                         "all-to-all-bound cells.")),
+        dict(name="int8+EF gradient all-reduce (dp)",
+             targets="collective",
+             delta=dict(shard_strategy="dp", grad_comm_dtype="int8_ef",
+                        fuse_grad_collectives=True),
+             hypothesis=("for models whose replicated params fit HBM, dp "
+                         "with 2-phase int8 error-feedback reduction cuts "
+                         "grad wire bytes 4x vs f32 ring and removes the "
+                         "per-layer FSDP all-gathers entirely; napkin: "
+                         "only wins when params*4B < HBM/3 — expect a "
+                         "crash verdict for >=7B archs (the trial decides).")),
+        dict(name="4-way microbatching",
+             targets="memory",
+             delta=dict(microbatches=4),
+             hypothesis=("peak-memory lever (maxSizeInFlight): 4x smaller "
+                         "live activation set at ~same FLOPs; helps only "
+                         "if the cell is peak-limited, not bandwidth-"
+                         "limited — expect a small memory-term win; "
+                         "verify it does not regress collectives.")),
+    ]
+    if kind == "decode":
+        moves.insert(0, dict(
+            name="int8 KV cache (rdd.compress)",
+            targets="memory",
+            delta=dict(kv_cache_dtype="int8"),
+            hypothesis=("decode is KV-bandwidth-bound: reading the cache "
+                        "dominates memory_s; int8 halves cache bytes vs "
+                        "bf16 at per-(token,head) scales.")))
+        moves.insert(1, dict(
+            name="revisit shuffle.manager AFTER rdd.compress",
+            targets="collective",
+            delta=dict(shard_strategy="fsdp"),
+            hypothesis=("tree-ordering artifact the paper acknowledges: "
+                        "the manager stage ran BEFORE int8-KV was "
+                        "accepted, so fsdp crashed on the bf16 cache and "
+                        "was rejected; with the int8 cache in place, "
+                        "fsdp removes the per-token replicated-weight "
+                        "traffic — its rejected trial already showed the "
+                        "collective term collapsing.")))
+        moves.insert(2, dict(
+            name="revisit manager: tp after rdd.compress",
+            targets="collective",
+            delta=dict(shard_strategy="tp"),
+            hypothesis="second manager alternative on the revisit pass."))
+    return moves
+
+
+def hillclimb(arch: str, shape: str, paper_config: Optional[dict] = None,
+              threshold: float = 0.05, patience: int = 3):
+    from repro.core import costmodel
+    from repro.core.params import TunableConfig, default_config
+    from repro.core.trial import RooflineEvaluator, TrialRunner, Workload
+
+    wl = Workload(arch, shape)
+    ev = RooflineEvaluator()
+    incumbent = (TunableConfig(**paper_config) if paper_config
+                 else default_config(shard_strategy="fsdp_tp"))
+    log = []
+    base = ev(wl, incumbent)
+    best = base.cost_s if not base.crashed else float("inf")
+    model_s = (costmodel.model_flops(wl.cfg, wl.shp) / 256 /
+               costmodel.HW["flops_bf16"])
+    log.append(dict(step="paper-faithful tuned baseline",
+                    hypothesis="(output of the Fig-4 tree)",
+                    config=incumbent.as_dict(), cost_s=best,
+                    roofline=base.roofline, verdict="baseline",
+                    frac=model_s / best if best > 0 else 0.0))
+    stale = 0
+    bottleneck = (base.roofline or {}).get("bottleneck", "memory")
+    moves = candidate_moves(wl.shp.kind)
+    # hit the dominant term first (hypothesis ordering by predicted win)
+    moves.sort(key=lambda m: (m.get("targets") != "ablation",
+                              m.get("targets") != bottleneck))
+    for mv in moves:
+        if stale >= patience:
+            break
+        if all(getattr(incumbent, k) == v for k, v in mv["delta"].items()):
+            continue
+        cand = incumbent.replace(**mv["delta"])
+        res = ev(wl, cand)
+        entry = dict(step=mv["name"], hypothesis=mv["hypothesis"],
+                     delta=mv["delta"], cost_s=res.cost_s,
+                     roofline=res.roofline)
+        ablation = mv.get("targets") == "ablation"
+        if res.crashed:
+            entry["verdict"] = "crashed — rejected"
+            stale += 0 if ablation else 1
+        elif res.cost_s < best * (1 - threshold):
+            entry["verdict"] = (f"confirmed — {best*1e3:.1f}ms -> "
+                                f"{res.cost_s*1e3:.1f}ms "
+                                f"({100*(1-res.cost_s/best):.0f}%)")
+            incumbent, best, stale = cand, res.cost_s, 0
+        else:
+            gain = 100 * (1 - res.cost_s / max(best, 1e-12))
+            entry["verdict"] = f"refuted/marginal ({gain:+.1f}%) — rejected"
+            stale += 0 if ablation else 1
+        entry["frac"] = model_s / res.cost_s if res.cost_s > 0 else 0.0
+        log.append(entry)
+    return dict(workload=wl.key(), final_config=incumbent.as_dict(),
+                baseline_cost=log[0]["cost_s"], final_cost=best,
+                roofline_fraction=model_s / best if best > 0 else 0.0,
+                log=log)
+
+
+def to_markdown(result: dict) -> str:
+    out = [f"### Beyond-paper hillclimb: `{result['workload']}`", "",
+           f"* paper-faithful tuned: {result['baseline_cost']*1e3:.2f} ms"
+           f" -> beyond-paper: {result['final_cost']*1e3:.2f} ms "
+           f"(x{result['baseline_cost']/max(result['final_cost'],1e-12):.2f})",
+           f"* final roofline fraction: "
+           f"**{result['roofline_fraction']:.3f}** of 256-chip bf16 peak",
+           ""]
+    for e in result["log"]:
+        rl = e.get("roofline") or {}
+        out += [f"**{e['step']}**",
+                f"- hypothesis: {e['hypothesis']}",
+                f"- result: {e['cost_s']*1e3:.2f} ms "
+                f"(compute {rl.get('compute_s', 0)*1e3:.1f} / memory "
+                f"{rl.get('memory_s', 0)*1e3:.1f} / collective "
+                f"{rl.get('collective_s', 0)*1e3:.1f}; bottleneck "
+                f"{rl.get('bottleneck','-')}; frac {e.get('frac',0):.3f})",
+                f"- verdict: {e['verdict']}", ""]
+    return "\n".join(out)
+
+
+def main():
+    from benchmarks.case_studies import select_cells
+    from repro.core.params import default_config
+    from repro.core.tree import run_tuning
+    from repro.core.trial import RooflineEvaluator, TrialRunner, Workload
+    PERF.mkdir(parents=True, exist_ok=True)
+    for arch, shape, why in select_cells():
+        key = f"{arch}__{shape}__pod"
+        # phase 1 (paper-faithful): the Fig-4 tree's output is the
+        # hillclimb starting point (cache-hit instant after case studies)
+        rep = run_tuning(
+            TrialRunner(Workload(arch, shape), RooflineEvaluator()),
+            default_config(shard_strategy="fsdp_tp", attn_impl="pallas"),
+            threshold=0.05)
+        res = hillclimb(arch, shape, rep.final_config)
+        md = f"Selection criterion: **{why}**\n\n" + to_markdown(res)
+        (PERF / f"hillclimb_{key}.md").write_text(md)
+        (PERF / f"hillclimb_{key}.json").write_text(
+            json.dumps(res, indent=1, default=str))
+        print(f"{key}: frac {res['roofline_fraction']:.3f} "
+              f"({res['baseline_cost']*1e3:.1f} -> "
+              f"{res['final_cost']*1e3:.1f} ms)")
+
+
+if __name__ == "__main__":
+    main()

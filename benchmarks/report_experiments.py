@@ -1,0 +1,146 @@
+"""Assemble EXPERIMENTS.md from results/ artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report_experiments
+
+Sections: §Dry-run (every cell x mesh), §Roofline (three terms +
+bottleneck + useful-FLOPs ratio, single-pod), §Perf (case-study tuning
+logs + beyond-paper hillclimbs, merged from results/perf/*.md).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DRYRUN = ROOT / "results" / "dryrun"
+BENCH = ROOT / "results" / "benchmarks"
+PERF = ROOT / "results" / "perf"
+
+
+def _recs():
+    out = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def _fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_section(recs) -> str:
+    lines = [
+        "## §Dry-run",
+        "",
+        "Every (architecture × input-shape × mesh) cell, lowered and",
+        "compiled with `ShapeDtypeStruct` inputs (no allocation) on",
+        "placeholder meshes: single-pod `(data=16, model=16)` = 256 chips,",
+        "multi-pod `(pod=2, data=16, model=16)` = 512 chips.  `peak/chip` is",
+        "`memory_analysis()` arguments+temps of the deployable (scanned)",
+        "step; collective mix is parsed from the partitioned HLO.",
+        "`fits` compares against 16 GB v5e HBM — baseline configs that",
+        "exceed it are the paper's \"crash\" analogue and are exactly what",
+        "the tuner's memoryFraction/serializer stages repair (§Perf).",
+        "",
+        "| arch | shape | mesh | status | peak/chip GB | fits | collectives (per-chip bytes) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"SKIP ({r['reason'][:48]}...) | – | – | – |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAIL {r.get('error','')[:40]} | – | – | – |")
+            continue
+        ma = r["memory_analysis"]
+        coll = r["roofline"]["coll_summary"]
+        cs = "; ".join(f"{k}×{int(v['count'])}:{v['bytes']/1e6:.0f}MB"
+                       for k, v in sorted(coll.items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{_fmt_bytes(ma['peak_bytes'])} | "
+            f"{'Y' if r['fits_hbm'] else '**N**'} | {cs or '-'} |")
+    return "\n".join(lines)
+
+
+def roofline_section(recs) -> str:
+    lines = [
+        "## §Roofline",
+        "",
+        "Single-pod (256-chip) UNTUNED-ENGINE baseline: `fsdp_tp` cluster",
+        "sharding with f32 \"Java-serializer\" compute, store-everything",
+        "remat, unfused XLA attention, no compression (the exact config is",
+        "recorded per cell in results/dryrun/*.json `tunable`).  The tuned",
+        "configurations appear in §Perf.  Terms are calibrated per",
+        "DESIGN.md §7 (XLA counts `while` bodies once; terms are",
+        "extrapolated from two small unrolled compiles); peak memory is",
+        "the exact `memory_analysis` of the full scanned compile.",
+        "`useful` = MODEL_FLOPS / HLO_FLOPs; `frac` = model-FLOPs time /",
+        "roofline step time (the roofline fraction that §Perf hillclimbs).",
+        "",
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck | useful | frac | one-line diagnosis |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    from repro.configs import get_config, get_shape
+    from repro.core import costmodel
+    diags = {
+        "memory": "unfused attention + f32 + remat=none residuals round-trip HBM",
+        "collective": "f32 param all-gathers / grad reduce dominate ICI",
+        "compute": "MXU-bound; push data-format + kernel fusion",
+    }
+    for r in recs:
+        if r["status"] != "ok" or "multipod" in r["mesh"]:
+            continue
+        rl = r["roofline"]
+        mf = costmodel.model_flops(get_config(r["arch"]),
+                                   get_shape(r["shape"]))
+        model_s = (mf / 256) / costmodel.HW["flops_bf16"]
+        frac = model_s / max(rl["total_s"], 1e-12)
+        useful = (mf / 256) / max(rl["flops_per_chip"], 1e-12)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3f} | "
+            f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | "
+            f"**{rl['bottleneck']}** | {useful:.3f} | "
+            f"{frac:.3f} | {diags[rl['bottleneck']]} |")
+    return "\n".join(lines)
+
+
+def perf_section() -> str:
+    lines = ["## §Perf", ""]
+    intro = PERF / "intro.md"
+    if intro.exists():
+        lines.append(intro.read_text())
+    for f in sorted(BENCH.glob("case_study_*.md")):
+        lines += ["", f.read_text()]
+    for f in sorted(PERF.glob("hillclimb_*.md")):
+        lines += ["", f.read_text()]
+    tv = BENCH / "tree_variants.md"
+    if tv.exists():
+        lines += ["", tv.read_text()]
+    t2 = BENCH / "table2_impact.md"
+    if t2.exists():
+        lines += ["", "### Sensitivity analysis (Table 2 analogue)", "",
+                  "Mean |%Δ| of the calibrated roofline step time vs the",
+                  "baseline, per knob per workload class:", "",
+                  t2.read_text()]
+    return "\n".join(lines)
+
+
+def main():
+    recs = _recs()
+    doc = "\n\n".join([
+        "# EXPERIMENTS",
+        "",
+        dryrun_section(recs),
+        roofline_section(recs),
+        perf_section(),
+    ])
+    (ROOT / "EXPERIMENTS.md").write_text(doc)
+    print(f"wrote EXPERIMENTS.md ({len(doc)} chars, "
+          f"{len([r for r in recs if r['status']=='ok'])} ok cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = calibrated
+roofline step time of the baseline config on the 256-chip mesh; derived =
+per-figure summary).  Markdown/CSV artifacts land in results/benchmarks/.
+
+MUST set the placeholder device count before ANY jax-touching import.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import json
+import sys
+import time
+
+
+def fig1_sortbykey():
+    """Fig. 1 analogue: OFAT sensitivity, shuffle-intensive workload."""
+    from benchmarks.common import WORKLOADS, save, sensitivity_for
+    from repro.core import report
+    rep = sensitivity_for(WORKLOADS["sortbykey~glm4-9b/train_4k"])
+    save("fig1_sortbykey.csv", report.sensitivity_csv(rep))
+    return rep
+
+
+def fig2_shuffling():
+    """Fig. 2 analogue: OFAT sensitivity, all-to-all-dominated MoE."""
+    from benchmarks.common import WORKLOADS, save, sensitivity_for
+    from repro.core import report
+    rep = sensitivity_for(WORKLOADS["shuffling~olmoe-1b-7b/train_4k"])
+    save("fig2_shuffling.csv", report.sensitivity_csv(rep))
+    return rep
+
+
+def fig3_kmeans():
+    """Fig. 3 analogue: compute-bound workload at two input scales."""
+    from benchmarks.common import WORKLOADS, save, sensitivity_for
+    from repro.core import report
+    rep_a = sensitivity_for(WORKLOADS["kmeans~smollm-135m/train_4k"])
+    rep_b = sensitivity_for(WORKLOADS["kmeans2~smollm-135m/prefill_32k"])
+    save("fig3_kmeans_scale1.csv", report.sensitivity_csv(rep_a))
+    save("fig3_kmeans_scale2.csv", report.sensitivity_csv(rep_b))
+    return rep_a, rep_b
+
+
+def table2(reports):
+    """Table 2: mean |%| impact per knob per workload + average."""
+    from benchmarks.common import save
+    from repro.core import report
+    md = report.sensitivity_markdown(reports)
+    save("table2_impact.md", md)
+    return md
+
+
+def case_studies():
+    """Sec. 5: the tuning tree applied to the three hillclimb cells."""
+    from benchmarks.case_studies import run_case_studies
+    return run_case_studies()
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    r1 = fig1_sortbykey()
+    print(f"fig1_sortbykey,{r1.baseline_cost*1e6:.0f},"
+          f"top_knob={max(r1.impacts, key=lambda i: i.mean_abs_pct).knob}")
+    r2 = fig2_shuffling()
+    print(f"fig2_shuffling,{r2.baseline_cost*1e6:.0f},"
+          f"top_knob={max(r2.impacts, key=lambda i: i.mean_abs_pct).knob}")
+    r3a, r3b = fig3_kmeans()
+    print(f"fig3_kmeans_scale1,{r3a.baseline_cost*1e6:.0f},"
+          f"top={max(r3a.impacts, key=lambda i: i.mean_abs_pct).mean_abs_pct:.1f}%")
+    print(f"fig3_kmeans_scale2,{r3b.baseline_cost*1e6:.0f},"
+          f"top={max(r3b.impacts, key=lambda i: i.mean_abs_pct).mean_abs_pct:.1f}%")
+    reports = {"sort-by-key": r1, "shuffling": r2, "k-means": r3a,
+               "k-means-2x": r3b}
+    table2(reports)
+    avg = {}
+    for rep in reports.values():
+        for i in rep.impacts:
+            avg.setdefault(i.knob, []).append(i.mean_abs_pct)
+    top = max(avg, key=lambda k: sum(avg[k]) / len(avg[k]))
+    print(f"table2_impact,0,avg_top_knob={top}")
+    for rep in case_studies():
+        print(f"case_study_{rep.workload},{rep.final_cost*1e6:.0f},"
+              f"speedup=x{rep.speedup:.2f}_in_{rep.n_trials}_trials")
+    from benchmarks.tree_variants import run_variants
+    for row in run_variants()[0]:
+        print(f"tree_variant_{row['variant']},"
+              f"{row['final_cost_s']*1e6:.0f},"
+              f"speedup=x{row['speedup']}_accepted={row['accepted']}")
+    print(f"# total wall time: {time.time()-t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Sec.-5 variants the paper sketches: acceptance-threshold sensitivity
+("less restrictive manner ... 5% or 10%") and the shorter tree that
+omits file.buffer ("two required runs less").
+
+Runs against the trial cache, so invoke after benchmarks/run.py.
+    PYTHONPATH=src python -m benchmarks.tree_variants
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import json
+
+
+def run_variants(arch: str = "olmoe-1b-7b", shape: str = "train_4k"):
+    from benchmarks.common import baseline_rt, save
+    from repro.core.tree import default_tree, run_tuning, short_tree
+    from repro.core.trial import RooflineEvaluator, TrialRunner, Workload
+
+    wl = Workload(arch, shape)
+    rows = []
+    for label, stages, threshold in [
+            ("tree@0%", None, 0.0),
+            ("tree@5%", None, 0.05),
+            ("tree@10%", None, 0.10),
+            ("short-tree@5%", short_tree(wl.shp.kind), 0.05)]:
+        runner = TrialRunner(wl, RooflineEvaluator())
+        rep = run_tuning(runner, baseline_rt(), threshold=threshold,
+                         stages=stages)
+        rows.append({"variant": label, "trials": rep.n_trials,
+                     "accepted": len(rep.accepted),
+                     "final_cost_s": rep.final_cost,
+                     "speedup": round(rep.speedup, 3)})
+    md = ["### Tree variants (threshold + shorter tree), cell "
+          f"`{wl.key()}`", "",
+          "| variant | trials | accepted | final cost | speedup |",
+          "|---|---|---|---|---|"]
+    for r in rows:
+        md.append(f"| {r['variant']} | {r['trials']} | {r['accepted']} | "
+                  f"{r['final_cost_s']*1e3:.1f} ms | x{r['speedup']} |")
+    text = "\n".join(md)
+    save("tree_variants.md", text)
+    return rows, text
+
+
+if __name__ == "__main__":
+    rows, text = run_variants()
+    print(text)

@@ -1,0 +1,26 @@
+"""Quickstart: train a small LM end-to-end on whatever devices exist.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 100]
+
+Uses the public API only: config registry -> model -> train step bundle
+-> data pipeline -> checkpointed loop (same path as launch/train.py).
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]]  # delegate with explicit args below
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--arch", default="smollm-135m")
+    args, _ = ap.parse_known_args()
+    raise SystemExit(train_main([
+        "--arch", args.arch, "--reduced",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128",
+        "--ckpt-dir", "/tmp/repro_quickstart_ckpt",
+        "--ckpt-interval", "25",
+    ]))

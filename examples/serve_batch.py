@@ -1,0 +1,13 @@
+"""Batched serving example: prefill a prompt batch, stream decode steps,
+compare bf16 vs int8 KV cache (spark.rdd.compress analogue).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    for kv in ("bfloat16", "int8"):
+        print(f"\n=== kv_cache_dtype={kv} ===")
+        serve_main(["--arch", "glm4-9b", "--reduced", "--batch", "4",
+                    "--prompt-len", "32", "--gen-tokens", "12",
+                    "--kv-dtype", kv])

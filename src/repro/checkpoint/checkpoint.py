@@ -1,0 +1,149 @@
+"""Atomic, async, mesh-agnostic checkpoints (no orbax dependency).
+
+Layout:  <dir>/step_<N>/  manifest.json  +  one .npy per leaf.
+Writes go to ``<dir>/.tmp_step_<N>`` and are committed with an atomic
+rename, so a preemption mid-save never corrupts the latest checkpoint.
+Restore places leaves with any sharding, so a checkpoint written on one
+mesh restores onto another (elastic remesh, ft/elastic.py).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(directory: str, step: int, tree, extra: Optional[Dict] = None,
+         _sync: bool = True) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    tmp = directory / f".tmp_step_{step:08d}"
+    final = directory / f"step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten(tree)
+    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"][key] = {"file": fname, "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)        # atomic commit
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    d = pathlib.Path(directory)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.glob("step_*")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, target_tree,
+            shardings=None) -> Any:
+    """Restore into the structure of ``target_tree`` (shapes verified).
+
+    ``shardings``: matching pytree of NamedShardings (or None = default
+    placement) — this is where cross-mesh resharding happens."""
+    d = pathlib.Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    flat_target = _flatten(target_tree)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    if set(manifest["leaves"]) != set(flat_target):
+        missing = set(flat_target) ^ set(manifest["leaves"])
+        raise ValueError(f"checkpoint/target tree mismatch: {sorted(missing)[:5]}")
+    out = {}
+    for key, meta in manifest["leaves"].items():
+        arr = np.load(d / meta["file"])
+        want = flat_target[key]
+        if tuple(arr.shape) != tuple(want.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {want.shape}")
+        sh = flat_shard.get(key)
+        out[key] = (jax.device_put(arr, sh) if sh is not None
+                    else jax.device_put(arr))
+    # rebuild the original structure
+    leaves_in_order = []
+    for path, _ in jax.tree_util.tree_flatten_with_path(target_tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        leaves_in_order.append(out[key])
+    treedef = jax.tree_util.tree_structure(target_tree)
+    return jax.tree_util.tree_unflatten(treedef, leaves_in_order)
+
+
+def manifest_extra(directory: str, step: int) -> Dict:
+    d = pathlib.Path(directory) / f"step_{step:08d}"
+    return json.loads((d / "manifest.json").read_text())["extra"]
+
+
+class CheckpointManager:
+    """Periodic + on-demand checkpoints, keep-N retention, async commit."""
+
+    def __init__(self, directory: str, interval: int = 100, keep: int = 3):
+        self.directory = pathlib.Path(directory)
+        self.interval = interval
+        self.keep = keep
+        self._pool = cf.ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[cf.Future] = None
+        self._lock = threading.Lock()
+
+    def maybe_save(self, step: int, tree, extra=None, force: bool = False):
+        if not force and (self.interval <= 0 or step % self.interval != 0):
+            return None
+        return self.save_async(step, tree, extra)
+
+    def save_async(self, step: int, tree, extra=None) -> cf.Future:
+        # snapshot to host NOW (donated buffers may be reused next step)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self.wait()
+        with self._lock:
+            self._pending = self._pool.submit(self._save_and_gc, step,
+                                              host_tree, extra)
+        return self._pending
+
+    def _save_and_gc(self, step, host_tree, extra):
+        path = save(self.directory, step, host_tree, extra)
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.directory.glob("step_*"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.directory / f"step_{s:08d}",
+                          ignore_errors=True)
+        return path
+
+    def wait(self):
+        with self._lock:
+            pending = self._pending
+        if pending is not None:
+            pending.result()
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    def restore_latest(self, target_tree, shardings=None):
+        s = self.latest_step()
+        if s is None:
+            return None, None
+        return restore(self.directory, s, target_tree, shardings), s

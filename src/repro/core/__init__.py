@@ -1,0 +1,5 @@
+# The paper's primary contribution: black-box trial-and-error tuning of
+# the 12-knob execution configuration — params (Sec. 3), sensitivity
+# (Sec. 4 / Table 2), tree (Fig. 4), trial (the experimental-run
+# protocol), costmodel (the CPU-container roofline evaluator).
+from repro.core.params import TunableConfig, default_config  # noqa: F401

@@ -1,0 +1,136 @@
+"""The tunable-parameter space — the TPU/JAX analogue of the paper's Sec. 3.
+
+Each field of :class:`TunableConfig` maps 1:1 to one of the 12 Spark
+parameters the paper tunes (``PARAM_DOCS`` records the mapping; the two
+memoryFraction parameters are one *joint* knob, exactly as the paper tunes
+them: "shuffle/storage.memoryFraction = 0.4/0.4").
+
+The tuner (core/tree.py) treats the step function as a black box and only
+ever edits these fields; the runtime (runtime/stepfn.py) consumes them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Tuple
+
+# value domains (first entry = Spark-like default)
+DOMAINS: Dict[str, Tuple[Any, ...]] = {
+    "compute_dtype":        ("float32", "bfloat16"),
+    "shard_strategy":       ("dp", "fsdp", "tp", "fsdp_tp"),
+    "grad_comm_dtype":      ("float32", "bfloat16", "int8_ef"),
+    "comm_codec":           ("bfloat16", "float16", "int8", "float32"),
+    # default 'dots' = Spark's balanced default fractions (0.2/0.6);
+    # 'none' = storage-heavy (store everything, 0.1/0.7);
+    # 'full' = shuffle-heavy (recompute everything)
+    "remat_policy":         ("dots", "none", "full"),
+    "microbatches":         (1, 2, 4),
+    "attn_block_q":         (128, 256, 512),
+    "attn_block_kv":        (128, 256, 512),
+    "fuse_grad_collectives": (False, True),
+    "kv_cache_dtype":       ("bfloat16", "int8", "float32"),
+    "remat_save_dtype":     ("float32", "bfloat16"),
+    "donate_buffers":       (True, False),
+    # beyond-paper knob (see DESIGN.md): how attention is distributed when
+    # head counts don't divide the model axis
+    "attn_tp_fallback":     ("replicate", "batch_shard"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TunableConfig:
+    """One point in the 12-knob configuration space (Sec. 3 analogue)."""
+    # 1. spark.serializer (Java -> Kryo)
+    compute_dtype: str = "float32"
+    # 2. spark.shuffle.manager (sort | hash | tungsten-sort)
+    shard_strategy: str = "dp"
+    # 3. spark.shuffle.compress
+    grad_comm_dtype: str = "float32"
+    # 4. spark.io.compression.codec (snappy | lzf | lz4; float32 = off)
+    comm_codec: str = "bfloat16"
+    # 5+6. spark.shuffle.memoryFraction / spark.storage.memoryFraction (joint)
+    remat_policy: str = "dots"
+    # 7. spark.reducer.maxSizeInFlight
+    microbatches: int = 1
+    # 8. spark.shuffle.file.buffer (Pallas VMEM tile)
+    attn_block_q: int = 128
+    attn_block_kv: int = 128
+    # 9. spark.shuffle.consolidateFiles
+    fuse_grad_collectives: bool = False
+    # 10. spark.rdd.compress
+    kv_cache_dtype: str = "bfloat16"
+    # 11. spark.shuffle.spill.compress
+    remat_save_dtype: str = "float32"
+    # 12. spark.shuffle.io.preferDirectBufs
+    donate_buffers: bool = True
+    # beyond-paper
+    attn_tp_fallback: str = "replicate"
+    attn_impl: str = "xla"       # xla | pallas (pallas on TPU; xla on dry-run)
+    seq_parallel: bool = False   # shard residual seq dim over the model axis
+    # infrastructure (not tuned): unrolled layer stack for cost
+    # calibration / cross-layer fusion experiments
+    unroll_layers: bool = False
+
+    def replace(self, **kw) -> "TunableConfig":
+        return dataclasses.replace(self, **kw)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def validate(self) -> None:
+        for k, dom in DOMAINS.items():
+            v = getattr(self, k)
+            if v not in dom:
+                raise ValueError(f"{k}={v!r} not in domain {dom}")
+
+    def describe_delta(self, other: "TunableConfig") -> str:
+        ds = [f"{k}={v!r}" for k, v in other.as_dict().items()
+              if self.as_dict().get(k) != v]
+        return ", ".join(ds) if ds else "(no change)"
+
+
+# Spark parameter <-> knob documentation (DESIGN.md §2.1, Table 2 rows)
+PARAM_DOCS: Dict[str, str] = {
+    "compute_dtype":        "spark.serializer (Java -> Kryo)",
+    "shard_strategy":       "spark.shuffle.manager (sort/hash/tungsten-sort)",
+    "grad_comm_dtype":      "spark.shuffle.compress",
+    "comm_codec":           "spark.io.compression.codec (snappy/lzf/lz4)",
+    "remat_policy":         "spark.shuffle.memoryFraction + spark.storage.memoryFraction",
+    "microbatches":         "spark.reducer.maxSizeInFlight",
+    "attn_block_q":         "spark.shuffle.file.buffer (q tile)",
+    "attn_block_kv":        "spark.shuffle.file.buffer (kv tile)",
+    "fuse_grad_collectives": "spark.shuffle.consolidateFiles",
+    "kv_cache_dtype":       "spark.rdd.compress",
+    "remat_save_dtype":     "spark.shuffle.spill.compress",
+    "donate_buffers":       "spark.shuffle.io.preferDirectBufs",
+    "attn_tp_fallback":     "(beyond-paper) attention TP fallback",
+}
+
+# Knobs swept by the Sec.-4 sensitivity analysis, with the values tested
+# (default first, mirroring the paper's value-selection rules: binary ->
+# non-default; categorical -> all; numeric -> neighbours of default).
+SENSITIVITY_SWEEP: Dict[str, Tuple[Any, ...]] = {
+    "compute_dtype":        ("float32", "bfloat16"),
+    "shard_strategy":       ("fsdp_tp", "dp", "fsdp", "tp"),
+    "grad_comm_dtype":      ("float32", "bfloat16"),
+    "comm_codec":           ("bfloat16", "float16", "int8"),
+    "remat_policy":         ("dots", "none", "full"),
+    "microbatches":         (1, 2, 4),
+    "attn_block_q":         (128, 256, 512),
+    "fuse_grad_collectives": (False, True),
+    "kv_cache_dtype":       ("bfloat16", "int8"),
+    "remat_save_dtype":     ("float32", "bfloat16"),
+    "donate_buffers":       (True, False),
+}
+
+
+def default_config(**overrides) -> TunableConfig:
+    """Paper-faithful default (all-Spark-defaults analogue)."""
+    c = TunableConfig(**overrides)
+    c.validate()
+    return c
+
+
+def exhaustive_size() -> int:
+    """Size of the exhaustive grid the paper's 10-trial tree avoids."""
+    return len(list(itertools.product(*DOMAINS.values())))

@@ -1,0 +1,71 @@
+"""Markdown / CSV emission for EXPERIMENTS.md artifacts."""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+from repro.core.sensitivity import SensitivityReport
+from repro.core.tree import TuningReport
+
+
+def sensitivity_markdown(reports: Dict[str, SensitivityReport]) -> str:
+    """Table-2 analogue: rows = knobs, cols = workloads + average."""
+    knobs = [i.knob for i in next(iter(reports.values())).impacts]
+    lines = ["| knob (Spark analogue) | " +
+             " | ".join(reports) + " | Average |",
+             "|---" * (len(reports) + 2) + "|"]
+    for k in knobs:
+        row = [k]
+        vals = []
+        for rep in reports.values():
+            imp = next(i for i in rep.impacts if i.knob == k)
+            cell = f"{imp.mean_abs_pct:.1f}%"
+            if imp.crashes:
+                cell += f" ({imp.crashes} crash)"
+            row.append(cell)
+            vals.append(imp.mean_abs_pct)
+        row.append(f"{sum(vals)/len(vals):.1f}%")
+        lines.append("| " + " | ".join(row) + " |")
+    return "\n".join(lines)
+
+
+def sensitivity_csv(rep: SensitivityReport) -> str:
+    lines = ["knob,value,deviation_pct,crashed"]
+    for imp in rep.impacts:
+        for v, d in zip(imp.values, imp.deviations_pct):
+            lines.append(f"{imp.knob},{v},"
+                         f"{'' if d != d else round(d, 2)},{d != d}")
+    return "\n".join(lines)
+
+
+def tuning_markdown(rep: TuningReport) -> str:
+    out = [f"### Case study: `{rep.workload}`",
+           "",
+           f"* baseline cost: **{_fmt_s(rep.baseline_cost)}**",
+           f"* final cost:    **{_fmt_s(rep.final_cost)}** "
+           f"(speedup x{rep.speedup:.2f})",
+           f"* trials used:   {rep.n_trials} (cap 10)",
+           f"* accepted: {'; '.join(rep.accepted) or '(none)'}",
+           "",
+           "| # | stage | change | cost | vs incumbent | verdict |",
+           "|---|---|---|---|---|---|"]
+    prev = None
+    for i, e in enumerate(rep.log):
+        cost = e["result"].get("cost_s", float("nan"))
+        crashed = e["result"].get("crashed")
+        verdict = ("CRASH" if crashed else
+                   "accept" if e.get("accepted") else "reject")
+        if i == 0:
+            verdict = "baseline"
+        delta = ", ".join(f"{k}={v}" for k, v in e["delta"].items()) or "-"
+        out.append(f"| {i} | {e['name']} | {delta} | {_fmt_s(cost)} | "
+                   f"{e.get('note','')} | {verdict} |")
+    return "\n".join(out)
+
+
+def _fmt_s(x: float) -> str:
+    if x != x or x == float("inf") or x >= 1e29:
+        return "crash"
+    if x >= 1.0:
+        return f"{x:.3f} s"
+    return f"{x*1e3:.2f} ms"

@@ -1,0 +1,71 @@
+"""Sec.-4 sensitivity analysis: one-factor-at-a-time sweeps + Table 2.
+
+For each of the 12 knobs, every non-default value is evaluated against
+the workload's baseline (values chosen by the paper's rules: binary ->
+non-default, categorical -> all values, numeric -> neighbours).  The
+impact statistic is the paper's: mean |% deviation| from the baseline
+runtime, regardless of sign.  Crashes are recorded (sort-by-key 0.1/0.7
+analogue) and excluded from the mean, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+from repro.core.params import (PARAM_DOCS, SENSITIVITY_SWEEP, TunableConfig)
+from repro.core.trial import TrialRunner, Workload
+
+
+@dataclasses.dataclass
+class KnobImpact:
+    knob: str
+    spark_name: str
+    values: List[Any]
+    deviations_pct: List[float]        # one per tested value (nan = crash)
+    crashes: int
+
+    @property
+    def mean_abs_pct(self) -> float:
+        vals = [abs(d) for d in self.deviations_pct if d == d]
+        return sum(vals) / len(vals) if vals else 0.0
+
+
+@dataclasses.dataclass
+class SensitivityReport:
+    workload: str
+    baseline_cost: float
+    impacts: List[KnobImpact]
+    n_trials: int
+
+    def table(self) -> List[Dict]:
+        return [{"knob": i.knob, "spark": i.spark_name,
+                 "mean_abs_pct": round(i.mean_abs_pct, 1),
+                 "crashes": i.crashes} for i in self.impacts]
+
+
+def run_sensitivity(runner: TrialRunner, baseline: TunableConfig,
+                    knobs: Optional[Dict[str, tuple]] = None
+                    ) -> SensitivityReport:
+    knobs = knobs or SENSITIVITY_SWEEP
+    base_res = runner.run(baseline, "baseline", {})
+    base_cost = base_res.cost_s
+    impacts: List[KnobImpact] = []
+    for knob, values in knobs.items():
+        default = getattr(baseline, knob)
+        devs, tested, crashes = [], [], 0
+        for v in values:
+            if v == default:
+                continue
+            cand = baseline.replace(**{knob: v})
+            res = runner.run(cand, f"ofat:{knob}", {knob: v})
+            tested.append(v)
+            if res.crashed:
+                crashes += 1
+                devs.append(float("nan"))
+                runner.log[-1].note = "crashed"
+            else:
+                devs.append(100.0 * (res.cost_s - base_cost) / base_cost)
+        impacts.append(KnobImpact(knob, PARAM_DOCS.get(knob, ""), tested,
+                                  devs, crashes))
+    return SensitivityReport(runner.workload.key(), base_cost, impacts,
+                             runner.n_trials)

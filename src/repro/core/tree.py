@@ -1,0 +1,151 @@
+"""The paper's Fig. 4 — the trial-and-error tuning tree.
+
+A tree stage tests one (or two *alternative*, correlated-pair) parameter
+changes against the incumbent configuration.  A change is accepted iff it
+improves the observed cost by more than ``threshold`` (relative, the
+paper's 5-10%); accepted values propagate to every later stage.  At most
+10 trial configurations are evaluated per application — against the
+exhaustive grid of |domains| combinations (core/params.exhaustive_size()).
+
+Stage map (Spark parameter -> TPU knob, DESIGN.md §2.1):
+  1. serializer          -> compute_dtype=bf16
+  2. shuffle.manager     -> shard_strategy alternatives, each with its
+     documented companion (tungsten+lzf -> tp+f16 codec;
+     hash+consolidateFiles -> fsdp+fused grad collectives)
+  3. shuffle.compress    -> grad_comm_dtype=bf16          (train only)
+  4. memoryFraction pair -> remat_policy dots / full alternatives
+  5. spill.compress      -> remat_save_dtype=bf16
+  6. reducer.maxSizeInFlight -> microbatches 2 / 4        (train only)
+  7. rdd.compress        -> kv_cache_dtype=int8           (serving only)
+  8. file.buffer         -> attn tile 256 (pallas path)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.params import TunableConfig
+from repro.core.trial import TrialRunner, TrialResult, Workload
+
+
+@dataclasses.dataclass
+class Stage:
+    name: str
+    spark_name: str
+    alternatives: Sequence[Dict[str, Any]]   # each alt: knob deltas
+    kinds: Sequence[str] = ("train", "prefill", "decode")
+
+
+def default_tree(kind: str = "train") -> List[Stage]:
+    stages = [
+        Stage("serializer", "spark.serializer",
+              [dict(compute_dtype="bfloat16")]),
+        Stage("shuffle.manager", "spark.shuffle.manager",
+              [dict(shard_strategy="tp", comm_codec="float16"),
+               dict(shard_strategy="fsdp", fuse_grad_collectives=True)]),
+        Stage("shuffle.compress", "spark.shuffle.compress",
+              [dict(grad_comm_dtype="bfloat16")], kinds=("train",)),
+        Stage("memoryFraction", "spark.shuffle/storage.memoryFraction",
+              [dict(remat_policy="none"), dict(remat_policy="full")],
+              kinds=("train",)),
+        Stage("spill.compress", "spark.shuffle.spill.compress",
+              [dict(remat_save_dtype="bfloat16")], kinds=("train",)),
+        Stage("maxSizeInFlight", "spark.reducer.maxSizeInFlight",
+              [dict(microbatches=2)], kinds=("train",)),
+        Stage("rdd.compress", "spark.rdd.compress",
+              [dict(kv_cache_dtype="int8")], kinds=("prefill", "decode")),
+        Stage("file.buffer", "spark.shuffle.file.buffer",
+              [dict(attn_block_q=256, attn_block_kv=256)]),
+    ]
+    return [s for s in stages if kind in s.kinds]
+
+
+def short_tree(kind: str = "train") -> List[Stage]:
+    """The paper's shorter variant: "a shorter version of our methodology
+    with two required runs less, would omit it [file.buffer]"."""
+    return [s for s in default_tree(kind) if s.name != "file.buffer"]
+
+
+MAX_TRIALS = 10
+
+
+@dataclasses.dataclass
+class TuningReport:
+    workload: str
+    baseline_cost: float
+    final_cost: float
+    final_config: Dict[str, Any]
+    n_trials: int
+    accepted: List[str]
+    log: List[Dict]
+
+    @property
+    def speedup(self) -> float:
+        if self.final_cost <= 0:
+            return float("nan")
+        return self.baseline_cost / self.final_cost
+
+
+def run_tuning(runner: TrialRunner, baseline: TunableConfig,
+               threshold: float = 0.05,
+               stages: Optional[List[Stage]] = None) -> TuningReport:
+    """Walk the tree: evaluate alternatives, keep what clears the threshold."""
+    kind = runner.workload.shp.kind
+    stages = stages if stages is not None else default_tree(kind)
+    incumbent = baseline
+    base_res = runner.run(baseline, "baseline", {})
+    runner.log[-1].accepted = True
+    runner.log[-1].note = "baseline (defaults after cluster-level config)"
+    best_cost = base_res.cost_s if not base_res.crashed else float("inf")
+    baseline_cost = best_cost
+    accepted: List[str] = []
+
+    for stage in stages:
+        if runner.n_trials >= MAX_TRIALS:
+            break
+        cand_results = []
+        for alt in stage.alternatives:
+            if runner.n_trials >= MAX_TRIALS:
+                break
+            # skip alternatives that are no-ops on the incumbent
+            if all(getattr(incumbent, k) == v for k, v in alt.items()):
+                continue
+            cand = incumbent.replace(**alt)
+            res = runner.run(cand, stage.name, alt)
+            cand_results.append((alt, cand, res))
+        if not cand_results:
+            continue
+        viable = [(a, c, r) for a, c, r in cand_results if not r.crashed]
+        for a, c, r in cand_results:
+            # annotate crashes (the paper's 0.1/0.7 sort-by-key outcome)
+            if r.crashed:
+                idx = [e for e in runner.log if e.config == c.as_dict()]
+                if idx:
+                    idx[-1].note = "crashed (exceeds per-chip HBM)"
+                    idx[-1].accepted = False
+        if not viable:
+            continue
+        alt, cand, res = min(viable, key=lambda t: t[2].cost_s)
+        improves = (best_cost == float("inf")
+                    or res.cost_s < best_cost * (1.0 - threshold))
+        for e in runner.log:
+            if e.accepted is None and e.config == cand.as_dict():
+                e.accepted = bool(improves)
+        if improves:
+            incumbent = cand
+            best_cost = res.cost_s
+            accepted.append(f"{stage.name}: {alt}")
+        # non-winning alternatives are rejected
+        for e in runner.log:
+            if e.accepted is None:
+                e.accepted = False
+
+    return TuningReport(
+        workload=runner.workload.key(),
+        baseline_cost=baseline_cost,
+        final_cost=best_cost,
+        final_config=incumbent.as_dict(),
+        n_trials=runner.n_trials,
+        accepted=accepted,
+        log=[dataclasses.asdict(e) for e in runner.log],
+    )

@@ -1,0 +1,233 @@
+"""Black-box trial runner (the paper's "experimental run").
+
+A trial = one configuration of the 12 knobs applied to one workload cell
+(arch x shape x mesh).  The application is a black box: the runner only
+observes a scalar cost.
+
+Two evaluators:
+  * RooflineEvaluator — lower+compile on the production mesh, cost =
+    analytic roofline step time (CPU-only infrastructure, DESIGN.md §2.2).
+    A config whose compiled peak memory exceeds per-chip HBM *crashes*,
+    exactly like the paper's sort-by-key 0.1/0.7 run.
+  * WallClockEvaluator — median of N real executions (the paper's
+    protocol; used on real hardware and in the CPU examples/tests).
+
+Results are cached on disk keyed by (cell, config) so sensitivity sweeps,
+the tuning tree and benchmarks never recompile the same point twice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+import time
+import traceback
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import costmodel
+from repro.core.params import TunableConfig
+
+CACHE_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "trials"
+
+
+@dataclasses.dataclass
+class TrialResult:
+    cost_s: float                  # observed "runtime" (black-box metric)
+    crashed: bool = False
+    error: str = ""
+    roofline: Optional[Dict] = None
+    peak_bytes: Optional[float] = None
+    fits_hbm: bool = True
+    compile_s: float = 0.0
+    cached: bool = False
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Workload:
+    """One tunable application instance (cell)."""
+    arch: str
+    shape: str
+    multi_pod: bool = False
+
+    @property
+    def cfg(self) -> ArchConfig:
+        return get_config(self.arch)
+
+    @property
+    def shp(self) -> ShapeConfig:
+        return get_shape(self.shape)
+
+    def key(self) -> str:
+        return f"{self.arch}__{self.shape}__" + \
+            ("multipod" if self.multi_pod else "pod")
+
+
+class RooflineEvaluator:
+    """cost = calibrated analytic roofline seconds of the compiled step.
+
+    XLA counts `while` bodies once, so instead of one full compile the
+    evaluator compiles two small UNROLLED variants (1 and 3 layer-units)
+    and extrapolates every term to the true depth
+    (core/costmodel.calibration_points) — which also makes a trial ~10x
+    cheaper than compiling the full stack."""
+
+    def __init__(self, mesh_factory: Callable = None, use_cache: bool = True,
+                 hbm_limit: float = None):
+        from repro.launch.mesh import make_production_mesh
+        self._mesh_factory = mesh_factory or make_production_mesh
+        self.use_cache = use_cache
+        self.hbm_limit = hbm_limit or costmodel.HW["hbm_per_chip"]
+
+    def _cache_path(self, wl: Workload, rt: TunableConfig) -> pathlib.Path:
+        blob = json.dumps(rt.as_dict(), sort_keys=True)
+        h = hashlib.sha1(blob.encode()).hexdigest()[:16]
+        return CACHE_DIR / f"{wl.key()}__{h}.json"
+
+    def _roofline_at(self, cfg, shape, rt: TunableConfig, mesh,
+                     multi_pod: bool):
+        from repro.runtime.stepfn import build_step
+        bundle = build_step(cfg, shape, rt, mesh)
+        with mesh:
+            compiled = bundle.lower().compile()
+        return costmodel.analyze(
+            compiled, compute_dtype=rt.compute_dtype,
+            pod_size=256 if multi_pod else 10**9)
+
+    def calibrated_roofline(self, wl: Workload, rt: TunableConfig):
+        """Compute + collective terms from two small UNROLLED compiles
+        (while bodies count once, §7.1); PEAK memory from two small
+        SCANNED compiles (buffer reuse only shows up scanned); the
+        MEMORY term from the first-principles analytic traffic model
+        (§7.3 — XLA-CPU 'bytes accessed' is unreliable for HBM traffic).
+        The pallas-vs-xla attention distinction and every knob
+        (remat/microbatch/dtypes/tiles/donation) enter analytically."""
+        mesh = self._mesh_factory(multi_pod=wl.multi_pod)
+        points, units = costmodel.calibration_points(wl.cfg)
+        rt_unroll = rt.replace(unroll_layers=True, attn_impl="xla")
+        r1 = self._roofline_at(points[0][0], wl.shp, rt_unroll, mesh,
+                               wl.multi_pod)
+        r3 = self._roofline_at(points[1][0], wl.shp, rt_unroll, mesh,
+                               wl.multi_pod)
+        rl = costmodel.extrapolate_roofline(r1, r3, units)
+        rt_scan = rt.replace(unroll_layers=False, attn_impl="xla")
+        p1 = self._roofline_at(points[0][0], wl.shp, rt_scan, mesh,
+                               wl.multi_pod)
+        p3 = self._roofline_at(points[1][0], wl.shp, rt_scan, mesh,
+                               wl.multi_pod)
+        peak = costmodel.extrapolate(p1.peak_mem_bytes or 0.0,
+                                     p3.peak_mem_bytes or 0.0, units)
+        data_size = 1
+        for a in ("pod", "data"):
+            data_size *= mesh.shape.get(a, 1)
+        model_size = mesh.shape.get("model", 1)
+        mem_bytes = costmodel.analytic_memory_bytes(
+            wl.cfg, wl.shp, rt, data_size, model_size)
+        if rt.attn_impl == "pallas":
+            pcorr = costmodel.flash_peak_correction_bytes(
+                wl.cfg, wl.shp, rt, data_size, model_size)
+            peak = max(peak * 0.02, peak - pcorr)
+        return dataclasses.replace(
+            rl, memory_s=mem_bytes / costmodel.HW["hbm_bw"],
+            bytes_per_chip=mem_bytes, peak_mem_bytes=peak)
+
+    def __call__(self, wl: Workload, rt: TunableConfig) -> TrialResult:
+        path = self._cache_path(wl, rt)
+        if self.use_cache and path.exists():
+            d = json.loads(path.read_text())
+            d["cached"] = True
+            return TrialResult(**d)
+        t0 = time.time()
+        try:
+            rl = self.calibrated_roofline(wl, rt)
+            peak = rl.peak_mem_bytes
+            fits = peak is None or peak <= self.hbm_limit
+            res = TrialResult(cost_s=rl.total_s, crashed=not fits,
+                              roofline=rl.as_dict(), peak_bytes=peak,
+                              fits_hbm=fits,
+                              compile_s=round(time.time() - t0, 1))
+        except Exception as e:
+            res = TrialResult(cost_s=float("inf"), crashed=True,
+                              error=f"{type(e).__name__}: {e}"[:500],
+                              compile_s=round(time.time() - t0, 1))
+        if self.use_cache:
+            CACHE_DIR.mkdir(parents=True, exist_ok=True)
+            d = res.as_dict()
+            d.pop("cached", None)
+            d["cost_s"] = d["cost_s"] if np.isfinite(d["cost_s"]) else 1e30
+            path.write_text(json.dumps(d))
+        return res
+
+
+class WallClockEvaluator:
+    """The paper's protocol: median of n repeats of the real step."""
+
+    def __init__(self, mesh_factory: Callable, make_args: Callable,
+                 repeats: int = 5):
+        self._mesh_factory = mesh_factory
+        self._make_args = make_args     # (wl, rt, mesh) -> concrete args
+        self.repeats = repeats
+
+    def __call__(self, wl: Workload, rt: TunableConfig) -> TrialResult:
+        from repro.runtime.stepfn import build_step
+        try:
+            mesh = self._mesh_factory(multi_pod=wl.multi_pod)
+            bundle = build_step(wl.cfg, wl.shp, rt, mesh)
+            args = self._make_args(wl, rt, mesh)
+            with mesh:
+                compiled = bundle.fn.lower(*args).compile()
+                ts = []
+                for _ in range(self.repeats):
+                    t0 = time.time()
+                    out = compiled(*args)
+                    jax.block_until_ready(out)
+                    ts.append(time.time() - t0)
+                    if rt.donate_buffers and bundle.kind == "train":
+                        args = (out[0], out[1], args[2])
+                    elif rt.donate_buffers and bundle.kind == "decode":
+                        args = (args[0], out[1], args[2])
+            return TrialResult(cost_s=float(np.median(ts)))
+        except Exception as e:
+            return TrialResult(cost_s=float("inf"), crashed=True,
+                               error=f"{type(e).__name__}: {e}"[:500])
+
+
+@dataclasses.dataclass
+class TrialLogEntry:
+    name: str
+    delta: Dict[str, Any]
+    config: Dict[str, Any]
+    result: Dict[str, Any]
+    accepted: Optional[bool] = None
+    note: str = ""
+
+
+class TrialRunner:
+    """Counts and logs every run (the paper's <=10-runs budget is checked
+    by tests against this counter)."""
+
+    def __init__(self, workload: Workload, evaluator: Callable):
+        self.workload = workload
+        self.evaluator = evaluator
+        self.log: list[TrialLogEntry] = []
+
+    @property
+    def n_trials(self) -> int:
+        return len(self.log)
+
+    def run(self, rt: TunableConfig, name: str,
+            delta: Dict[str, Any] = None) -> TrialResult:
+        res = self.evaluator(self.workload, rt)
+        self.log.append(TrialLogEntry(
+            name=name, delta=delta or {}, config=rt.as_dict(),
+            result={k: v for k, v in res.as_dict().items()
+                    if k != "roofline"}))
+        return res

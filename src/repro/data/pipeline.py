@@ -1,0 +1,130 @@
+"""Deterministic sharded synthetic-token pipeline.
+
+The batch at step *t* is a pure function of (seed, t) — no iterator
+state — so checkpoint/restart resumes the exact data order by saving
+only the step counter (ft/ relies on this), and elastic remeshing is
+trivial (any device layout draws the same global batch).  Each device
+materializes only its addressable shard (``make_array_from_callback``).
+
+Tokens are Zipf-distributed (text-like marginals) with a deterministic
+per-(step, position) stream; labels are next-token shifted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.params import TunableConfig
+from repro.models.model import input_specs
+
+
+def _tokens_for(seed: int, step: int, lo: int, hi: int, seq: int,
+                vocab: int, zipf_a: float = 1.3) -> np.ndarray:
+    """Rows [lo, hi) of the global (B, seq+1) token matrix at ``step``."""
+    out = np.empty((hi - lo, seq + 1), np.int32)
+    for r in range(lo, hi):
+        rng = np.random.RandomState(
+            (seed * 1_000_003 + step * 8_191 + r) % (2**31 - 1))
+        z = rng.zipf(zipf_a, size=seq + 1).astype(np.int64)
+        out[r - lo] = (z % vocab).astype(np.int32)
+    return out
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """batch_at(step) -> sharded {tokens, labels, extras} matching
+    ``input_specs``."""
+    cfg: ArchConfig
+    shape: ShapeConfig
+    rt: TunableConfig
+    mesh: jax.sharding.Mesh
+    seed: int = 0
+
+    def __post_init__(self):
+        self.specs = input_specs(self.cfg, self.shape, self.rt)
+        batch_axes = tuple(a for a in ("pod", "data")
+                           if a in self.mesh.shape)
+        self._shardings: Dict[str, NamedSharding] = {}
+        for name, s in self.specs.items():
+            spec = [None] * len(s.shape)
+            if s.shape[0] % max(
+                    1, int(np.prod([self.mesh.shape[a]
+                                    for a in batch_axes]))) == 0:
+                spec[0] = batch_axes
+            self._shardings[name] = NamedSharding(self.mesh, P(*spec))
+
+    def batch_at(self, step: int) -> Dict[str, jax.Array]:
+        out = {}
+        seq = self.specs["tokens"].shape[1]
+        B = self.specs["tokens"].shape[0]
+
+        def tok_cb(idx):
+            lo, hi = idx[0].start or 0, idx[0].stop or B
+            toks = _tokens_for(self.seed, step, lo, hi, seq, self.cfg.vocab)
+            return toks[:, :-1]
+
+        def lab_cb(idx):
+            lo, hi = idx[0].start or 0, idx[0].stop or B
+            toks = _tokens_for(self.seed, step, lo, hi, seq, self.cfg.vocab)
+            return toks[:, 1:]
+
+        out["tokens"] = jax.make_array_from_callback(
+            (B, seq), self._shardings["tokens"], tok_cb)
+        if "labels" in self.specs:
+            out["labels"] = jax.make_array_from_callback(
+                (B, seq), self._shardings["labels"], lab_cb)
+        for extra in ("frontend_embeds", "frames"):
+            if extra in self.specs:
+                s = self.specs[extra]
+
+                def emb_cb(idx, s=s):
+                    shp = tuple((dim.stop or full) - (dim.start or 0)
+                                for dim, full in zip(idx, s.shape))
+                    rng = np.random.RandomState(
+                        (self.seed * 31 + step * 7 + 13) % (2**31 - 1))
+                    return rng.standard_normal(shp).astype(s.dtype) * 0.02
+
+                out[extra] = jax.make_array_from_callback(
+                    s.shape, self._shardings[extra], emb_cb)
+        return out
+
+
+class Prefetcher:
+    """Background-thread prefetch queue over ``batch_at`` (depth N)."""
+
+    def __init__(self, source: SyntheticLM, start_step: int = 0,
+                 depth: int = 2):
+        self._source = source
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                self._q.put((step, self._source.batch_at(step)), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(timeout=5)

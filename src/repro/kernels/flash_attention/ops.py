@@ -1,0 +1,26 @@
+"""Jitted public wrapper: (B, S, H, hd) layout used by the model zoo.
+
+On CPU (tests, this container) the kernel body runs in interpret mode;
+on TPU it compiles to Mosaic.  The XLA reference path stays the dry-run
+default so cost_analysis reflects honest HLO (DESIGN.md §2.2).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128):
+    """q/k/v: (B, S, H, hd) (kv already GQA-repeated) -> (B, S, H, hd)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_bhsd(qt, kt, vt, causal=causal, block_q=block_q,
+                             block_kv=block_kv, interpret=_on_cpu())
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,103 @@
+"""Flash-decode Pallas-TPU kernel: one-token attention against a long
+KV cache, with fused int8 dequantization.
+
+Decode is KV-bandwidth-bound (the §Roofline decode rows): the cache is
+read once per token, so the kernel's job is to stream K/V tiles through
+VMEM exactly once at the stored dtype (bf16 or int8+scales — fusing the
+dequant means int8 halves HBM traffic end-to-end, the rdd.compress
+analogue), computing the online-softmax reduction per tile.
+
+Grid: (B, H, S/block_kv); the KV-position axis is the sequential TPU
+axis, so (m, l, acc) live in VMEM scratch across tiles.  GQA: the kernel
+sees K/V already expanded to query heads via an index map (no HBM copy —
+the same (kv_head) tile is mapped to each query head in its group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, len_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, block_kv: int, quantized: bool,
+                   scale: float):
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[0, 0].astype(jnp.float32)         # (bk, 1) scales
+        v = v * vs_ref[0, 0].astype(jnp.float32)
+    s = (k @ q[0]).reshape(1, -1)                        # (1, bk)
+    # mask positions beyond the live cache length
+    pos = j * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (1, block_kv), 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = corr * acc_ref[...] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0, 0, ...] = (acc_ref[...] /
+                            jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "n_rep",
+                                             "interpret"))
+def flash_decode_bhsd(q, k, v, k_scale, v_scale, length, *,
+                      block_kv: int = 512, n_rep: int = 1,
+                      interpret: bool = False):
+    """q: (B, H, 1, hd); k/v: (B, Hkv, S, hd) (+ (B, Hkv, S, 1) scales
+    when int8); length: (1,) live cache length.  H = Hkv * n_rep."""
+    B, H, _, hd = q.shape
+    S = k.shape[2]
+    block_kv = min(block_kv, S)
+    assert S % block_kv == 0
+    quantized = k.dtype == jnp.int8
+    scale = 1.0 / (hd ** 0.5)
+    grid = (B, H, S // block_kv)
+    kv_map = lambda b, h, j: (b, h // n_rep, j, 0)   # GQA group mapping
+    dummy = jnp.zeros((B, k.shape[1], S, 1), jnp.float32)
+    ks = k_scale if k_scale is not None else dummy
+    vs = v_scale if v_scale is not None else dummy
+    kernel = functools.partial(_decode_kernel, block_kv=block_kv,
+                               quantized=quantized, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), kv_map),
+            pl.BlockSpec((1, 1, block_kv, hd), kv_map),
+            pl.BlockSpec((1, 1, block_kv, 1), kv_map),
+            pl.BlockSpec((1, 1, block_kv, 1), kv_map),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, ks, vs, length)

@@ -1,0 +1,30 @@
+"""Jitted public wrapper: model-zoo layout (B,1,H,hd) q + (B,S,Hkv,hd)
+cache -> (B,1,H,hd)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.flash_decode import flash_decode_bhsd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_decode(q, k_cache, v_cache, length, k_scale=None, v_scale=None,
+                 *, block_kv: int = 512):
+    """q: (B,1,H,hd); caches: (B,S,Hkv,hd) [+ (B,S,Hkv,1) scales];
+    length: scalar int32 live length."""
+    B, _, H, hd = q.shape
+    Hkv = k_cache.shape[2]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k_cache.transpose(0, 2, 1, 3)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    ks = k_scale.transpose(0, 2, 1, 3) if k_scale is not None else None
+    vs = v_scale.transpose(0, 2, 1, 3) if v_scale is not None else None
+    o = flash_decode_bhsd(qt, kt, vt, ks, vs,
+                          jnp.asarray([length], jnp.int32),
+                          block_kv=block_kv, n_rep=H // Hkv,
+                          interpret=_on_cpu())
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_ref(q, k, v, k_scale, v_scale, length):
+    """q: (B,H,1,hd); k/v: (B,Hkv,S,hd) (+(B,Hkv,S,1) int8 scales);
+    length: (1,) live positions.  Returns (B,H,1,hd) f32."""
+    B, H, _, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale
+        vf = vf * v_scale
+    n_rep = H // Hkv
+    kf = jnp.repeat(kf, n_rep, axis=1)
+    vf = jnp.repeat(vf, n_rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf)
+    s = s / (hd ** 0.5)
+    mask = jnp.arange(S)[None, None, None, :] < length[0]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf)

@@ -1,0 +1,18 @@
+"""Jitted public wrapper: accepts (..., d), flattens leading dims."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_2d
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 256):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    y = rmsnorm_2d(x2, scale, eps=eps, block_rows=block_rows,
+                   interpret=_on_cpu())
+    return y.reshape(shape)

@@ -1,0 +1,28 @@
+"""Jitted public wrapper: model-zoo layout (B,S,H,P) -> kernel layout."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssm_scan.ssm_scan import ssm_scan_grid
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def ssm_scan(X, Bm, Cm, dt, la, *, chunk: int = 256):
+    """X: (B,S,H,P); Bm/Cm: (B,S,N); dt/la: (B,S,H) -> (Y, h_final)."""
+    B, S, H, P = X.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    Xg = X.reshape(B, nc, chunk, H, P).transpose(0, 3, 1, 2, 4)
+    Bg = Bm.reshape(B, nc, chunk, N)
+    Cg = Cm.reshape(B, nc, chunk, N)
+    dtg = dt.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2)
+    lag = la.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2)
+    Y, hF = ssm_scan_grid(Xg, Bg, Cg, dtg, lag, chunk=chunk,
+                          interpret=_on_cpu())
+    Y = Y.transpose(0, 2, 3, 1, 4).reshape(B, S, H, P)
+    return Y, hF

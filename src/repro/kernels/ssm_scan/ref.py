@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the chunked SSD kernel: sequential recurrence.
+
+h_t = exp(la_t) * h_{t-1} + dt_t * X_t (x) B_t ;  y_t = C_t . h_t
+(the mathematically exact per-token form; the chunked algorithm must
+match it up to fp tolerance).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(X, Bm, Cm, dt, la):
+    """X: (B,S,H,P); Bm/Cm: (B,S,N); dt/la: (B,S,H).
+
+    Returns (Y (B,S,H,P), h_final (B,H,P,N))."""
+    B, S, H, P = X.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        x_t, b_t, c_t, dt_t, la_t = inp
+        h = (jnp.exp(la_t)[:, :, None, None] * h
+             + jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t, b_t))
+        y = jnp.einsum("bn,bhpn->bhp", c_t, h)
+        return h, y
+
+    mv = lambda t: jnp.moveaxis(t.astype(f32), 1, 0)
+    h0 = jnp.zeros((B, H, P, N), f32)
+    hF, Y = jax.lax.scan(step, h0,
+                         (mv(X), mv(Bm), mv(Cm), mv(dt), mv(la)))
+    return jnp.moveaxis(Y, 0, 1).astype(X.dtype), hF

@@ -1,0 +1,93 @@
+"""Chunked Mamba2/SSD scan Pallas-TPU kernel.
+
+TPU adaptation of the SSD algorithm (DESIGN.md §2.2): the within-chunk
+quadratic term is tiled per (batch, head, chunk) so the (Q x Q) decay
+matrix lives only in VMEM (the XLA reference materializes it in HBM for
+every head), and the cross-chunk recurrence exploits the TPU grid's
+sequential last axis: the running (P x N) state is VMEM scratch carried
+across chunk steps — no HBM round-trip between chunks.
+
+Grid: (B, H, S/chunk).  Layouts prepared by ops.py:
+  X  (B, H, nc, Q, P)   token inputs (head-split)
+  Bm (B, nc, Q, N)      input projections (shared across heads)
+  Cm (B, nc, Q, N)      output projections (shared across heads)
+  dt (B, H, nc, Q)      step sizes
+  la (B, H, nc, Q)      log decay (dt * A)
+Outputs: Y (B, H, nc, Q, P); final state (B, H, P, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, la_ref, y_ref, hout_ref,
+                h_ref, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    X = x_ref[0, 0, 0].astype(jnp.float32)          # (Q, P)
+    Bm = b_ref[0, 0].astype(jnp.float32)            # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)            # (Q, N)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)        # (Q,)
+    la = la_ref[0, 0, 0].astype(jnp.float32)        # (Q,)
+
+    cum = jnp.cumsum(la)                             # (Q,)
+    # within-chunk: scores[t, j] = (C_t . B_j) * exp(cum_t - cum_j) * dt_j
+    Lmat = jnp.exp(cum[:, None] - cum[None, :])
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    Lmat = jnp.where(rows >= cols, Lmat, 0.0)
+    G = Cm @ Bm.T                                    # (Q, Q)
+    scores = G * Lmat * dt[None, :]
+    y = scores @ X                                   # (Q, P) intra
+    # inter-chunk: y_t += exp(cum_t) * C_t . h_prev
+    h = h_ref[...]                                   # (P, N)
+    y = y + jnp.exp(cum)[:, None] * (Cm @ h.T)
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    # state update: h = exp(cum_last) * h + sum_j w_j X_j (x) B_j
+    w = dt * jnp.exp(cum[-1] - cum)                  # (Q,)
+    h_ref[...] = jnp.exp(cum[-1]) * h + (w[:, None] * X).T @ Bm
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        hout_ref[0, 0] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan_grid(X, Bm, Cm, dt, la, *, chunk: int = 256,
+                  interpret: bool = False):
+    """See module docstring for layouts.  Returns (Y, h_final)."""
+    B, H, nc, Q, P = X.shape
+    N = Bm.shape[-1]
+    assert Q == chunk
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc, Q, P), X.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(X, Bm, Cm, dt, la)

@@ -1,0 +1,53 @@
+"""Apply the paper's trial-and-error methodology to one workload cell.
+
+MUST set the placeholder device count before ANY jax-touching import.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import pathlib
+import sys
+
+from repro.core import report
+from repro.core.params import default_config
+from repro.core.tree import run_tuning
+from repro.core.trial import RooflineEvaluator, TrialRunner, Workload
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "tuning"
+
+
+def tune_cell(arch: str, shape: str, multi_pod: bool = False,
+              threshold: float = 0.05, baseline_overrides=None):
+    wl = Workload(arch, shape, multi_pod)
+    runner = TrialRunner(wl, RooflineEvaluator())
+    # attn_impl=pallas is infrastructure (the execution engine's kernel),
+    # not one of the 12 tunables — see DESIGN.md §2.2
+    baseline = default_config(shard_strategy="fsdp_tp",
+                              attn_impl="pallas",
+                              **(baseline_overrides or {}))
+    rep = run_tuning(runner, baseline, threshold=threshold)
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"{wl.key()}.json").write_text(
+        json.dumps(rep.__dict__, indent=1, default=str))
+    (RESULTS_DIR / f"{wl.key()}.md").write_text(report.tuning_markdown(rep))
+    return rep
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--threshold", type=float, default=0.05)
+    args = ap.parse_args(argv)
+    rep = tune_cell(args.arch, args.shape, args.multi_pod, args.threshold)
+    print(report.tuning_markdown(rep))
+    print(f"\nspeedup: x{rep.speedup:.2f} in {rep.n_trials} trials")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,193 @@
+"""Encoder-decoder transformer (Seamless-M4T backbone).
+
+Encoder consumes precomputed frame embeddings from the (stubbed) audio
+frontend; decoder is a causal transformer with cross-attention.  Decode
+carries a self-attention KV cache plus a fixed cross-attention cache
+computed at prefill.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import TunableConfig
+from repro.models import layers as L
+from repro.runtime import remat
+from repro.runtime.loops import scan_layers
+
+
+def _enc_block_spec(cfg) -> Dict[str, L.PSpec]:
+    return {
+        "ln1": L.rmsnorm_spec(cfg.d_model),
+        "attn": L.attn_spec(cfg),
+        "ln2": L.rmsnorm_spec(cfg.d_model),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def _dec_block_spec(cfg) -> Dict[str, L.PSpec]:
+    out = _enc_block_spec(cfg)
+    out["lnx"] = L.rmsnorm_spec(cfg.d_model)
+    out["xattn"] = L.attn_spec(cfg)
+    return out
+
+
+def spec(cfg) -> Dict:
+    return {
+        "embed": L.embed_spec(cfg),
+        "enc_blocks": L.stacked(cfg.enc_layers, _enc_block_spec(cfg)),
+        "dec_blocks": L.stacked(cfg.n_layers, _dec_block_spec(cfg)),
+        "enc_norm": L.rmsnorm_spec(cfg.d_model),
+        "final_norm": L.rmsnorm_spec(cfg.d_model),
+    }
+
+
+def encode(p, frames, cfg, rt: TunableConfig, rules):
+    """frames: (B, S_enc, d) stub frontend embeddings -> encoder output."""
+    h = L.cast(frames, rt)
+    if rules is not None:
+        h = rules.constrain(h, "batch", None, None)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, bp):
+        x = remat.from_carry(x, rt)
+        hn = L.rmsnorm(x, bp["ln1"], rt, cfg.norm_eps)
+        x = x + L.attention_block(bp["attn"], hn, cfg=cfg, rt=rt,
+                                  rules=rules, positions=positions,
+                                  causal=False)
+        hn = L.rmsnorm(x, bp["ln2"], rt, cfg.norm_eps)
+        x = x + L.mlp_block(bp["mlp"], hn, cfg=cfg, rt=rt, rules=rules)
+        return remat.to_carry(x, rt), None
+
+    h, _ = scan_layers(remat.wrap_layer(body, rt), remat.to_carry(h, rt),
+                       p["enc_blocks"], unroll=rt.unroll_layers)
+    return L.rmsnorm(remat.from_carry(h, rt), p["enc_norm"], rt,
+                     cfg.norm_eps)
+
+
+def _dec_block(bp, x, enc_out, positions, cfg, rt, rules):
+    hn = L.rmsnorm(x, bp["ln1"], rt, cfg.norm_eps)
+    x = x + L.attention_block(bp["attn"], hn, cfg=cfg, rt=rt, rules=rules,
+                              positions=positions)
+    hn = L.rmsnorm(x, bp["lnx"], rt, cfg.norm_eps)
+    x = x + L.attention_block(bp["xattn"], hn, cfg=cfg, rt=rt, rules=rules,
+                              positions=positions, kv_x=enc_out)
+    hn = L.rmsnorm(x, bp["ln2"], rt, cfg.norm_eps)
+    return x + L.mlp_block(bp["mlp"], hn, cfg=cfg, rt=rt, rules=rules)
+
+
+def loss_fn(p, batch, cfg, rt: TunableConfig, rules):
+    enc_out = encode(p, batch["frames"], cfg, rt, rules)
+    h = L.embed(p["embed"], batch["tokens"], rt)
+    if rules is not None:
+        h = rules.constrain(h, "batch", None, None)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, bp):
+        x = remat.from_carry(x, rt)
+        x = _dec_block(bp, x, enc_out, positions, cfg, rt, rules)
+        return remat.to_carry(x, rt), None
+
+    h, _ = scan_layers(remat.wrap_layer(body, rt), remat.to_carry(h, rt),
+                       p["dec_blocks"], unroll=rt.unroll_layers)
+    h = L.rmsnorm(remat.from_carry(h, rt), p["final_norm"], rt, cfg.norm_eps)
+    logits = L.unembed(p["embed"], h, cfg, rt, rules)
+    return L.xent_loss(logits, batch["labels"], cfg), {}
+
+
+# ------------------------------------------------------------- serving
+def cache_shapes(cfg, batch: int, max_seq: int, rt: TunableConfig,
+                 enc_len: int = None):
+    if enc_len is None:
+        enc_len = max_seq // cfg.enc_seq_ratio
+    self_kv, self_lg = L.attn_cache_shapes(cfg, batch, max_seq, rt)
+    comp = jnp.dtype(rt.compute_dtype)
+    xshape = (cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.hd)
+    xlg = ("layers", "batch", None, "kv_heads", None)
+    shp = {"self": self_kv,
+           "cross_k": jax.ShapeDtypeStruct(xshape, comp),
+           "cross_v": jax.ShapeDtypeStruct(xshape, comp),
+           "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    lg = {"self": self_lg, "cross_k": xlg, "cross_v": xlg, "pos": ()}
+    return shp, lg
+
+
+def init_cache(cfg, batch: int, max_seq: int, rt: TunableConfig,
+               enc_len: int = None):
+    shp, _ = cache_shapes(cfg, batch, max_seq, rt, enc_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shp)
+
+
+def prefill_fn(p, batch, cfg, rt: TunableConfig, rules, max_seq: int):
+    enc_out = encode(p, batch["frames"], cfg, rt, rules)
+    h = L.embed(p["embed"], batch["tokens"], rt)
+    if rules is not None:
+        h = rules.constrain(h, "batch", None, None)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, bp):
+        hn = L.rmsnorm(x, bp["ln1"], rt, cfg.norm_eps)
+        k = jnp.einsum("bsd,dhk->bshk", hn, L.cast(bp["attn"]["wk"], rt))
+        v = jnp.einsum("bsd,dhk->bshk", hn, L.cast(bp["attn"]["wv"], rt))
+        k = L.rope(k, positions, cfg.rope_theta)
+        xk = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        L.cast(bp["xattn"]["wk"], rt))
+        xv = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        L.cast(bp["xattn"]["wv"], rt))
+        x = _dec_block(bp, x, enc_out, positions, cfg, rt, rules)
+        kq, ks = L.quantize_kv(k, rt.kv_cache_dtype)
+        vq, vs = L.quantize_kv(v, rt.kv_cache_dtype)
+        extras = (kq, vq) if ks is None else (kq, vq, ks, vs)
+        return x, (extras, xk, xv)
+
+    h, (extras, xk, xv) = scan_layers(body, h, p["dec_blocks"],
+                                      unroll=rt.unroll_layers)
+    h = L.rmsnorm(h, p["final_norm"], rt, cfg.norm_eps)
+    logits = L.unembed(p["embed"], h[:, -1:], cfg, rt, rules)
+    pad = max_seq - S
+    def pad_seq(t):
+        return jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    self_kv = {"k": pad_seq(extras[0]), "v": pad_seq(extras[1])}
+    if len(extras) == 4:
+        self_kv["k_scale"] = pad_seq(extras[2])
+        self_kv["v_scale"] = pad_seq(extras[3])
+    cache = {"self": self_kv, "cross_k": xk, "cross_v": xv,
+             "pos": jnp.array(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_fn(p, cache, tokens, cfg, rt: TunableConfig, rules):
+    h = L.embed(p["embed"], tokens, rt)
+    pos = cache["pos"]
+
+    def body(x, args):
+        bp, self_cache, xk, xv = args
+        hn = L.rmsnorm(x, bp["ln1"], rt, cfg.norm_eps)
+        a, self_cache = L.decode_attention_block(
+            bp["attn"], hn, self_cache, pos, cfg=cfg, rt=rt, rules=rules)
+        x = x + a
+        # cross-attention against the fixed encoder cache
+        hn = L.rmsnorm(x, bp["lnx"], rt, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", hn, L.cast(bp["xattn"]["wq"], rt))
+        kf = L._repeat_kv(xk.astype(L.dt(rt)),
+                          cfg.n_heads // cfg.n_kv_heads)
+        vf = L._repeat_kv(xv.astype(L.dt(rt)),
+                          cfg.n_heads // cfg.n_kv_heads)
+        o = L.full_attention(q, kf, vf, causal=False, rt=rt)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, L.cast(bp["xattn"]["wo"], rt))
+        hn = L.rmsnorm(x, bp["ln2"], rt, cfg.norm_eps)
+        x = x + L.mlp_block(bp["mlp"], hn, cfg=cfg, rt=rt, rules=rules)
+        return x, self_cache
+
+    h, new_self = scan_layers(
+        body, h, (p["dec_blocks"], cache["self"], cache["cross_k"],
+                  cache["cross_v"]), unroll=rt.unroll_layers)
+    h = L.rmsnorm(h, p["final_norm"], rt, cfg.norm_eps)
+    logits = L.unembed(p["embed"], h, cfg, rt, rules)
+    return logits, {"self": new_self, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"], "pos": pos + 1}

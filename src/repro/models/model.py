@@ -1,0 +1,136 @@
+"""Model dispatch: one uniform API over all families.
+
+``build_model(cfg)`` returns a :class:`Model` whose functions close over
+the architecture config; ``input_specs`` builds the ShapeDtypeStruct
+stand-ins for every workload cell (dry-run protocol, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.params import TunableConfig
+from repro.models import encdec, layers as L, transformer, xlstm, zamba
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": transformer,
+    "hybrid": zamba,
+    "ssm": xlstm,
+    "encdec": encdec,
+}
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    mod: Any
+
+    # ---- parameters
+    def spec(self):
+        return self.mod.spec(self.cfg)
+
+    def init(self, key, dtype=None):
+        return L.init_params(self.spec(), key,
+                             dtype or jnp.dtype(self.cfg.param_dtype))
+
+    def param_shapes(self, dtype=None):
+        return L.param_shapes(self.spec(),
+                              dtype or jnp.dtype(self.cfg.param_dtype))
+
+    def logical(self):
+        return L.logical_tree(self.spec())
+
+    # ---- steps
+    def loss_fn(self, params, batch, rt: TunableConfig, rules=None):
+        return self.mod.loss_fn(params, batch, self.cfg, rt, rules)
+
+    def prefill_fn(self, params, batch, rt: TunableConfig, rules=None,
+                   max_seq: Optional[int] = None):
+        ms = max_seq or batch["tokens"].shape[1]
+        return self.mod.prefill_fn(params, batch, self.cfg, rt, rules, ms)
+
+    def decode_fn(self, params, cache, tokens, rt: TunableConfig,
+                  rules=None):
+        return self.mod.decode_fn(params, cache, tokens, self.cfg, rt, rules)
+
+    # ---- caches
+    def cache_shapes(self, batch: int, max_seq: int, rt: TunableConfig):
+        return self.mod.cache_shapes(self.cfg, batch, max_seq, rt)
+
+    def init_cache(self, batch: int, max_seq: int, rt: TunableConfig):
+        return self.mod.init_cache(self.cfg, batch, max_seq, rt)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg, _FAMILY_MODULES[cfg.family])
+
+
+# ------------------------------------------------------------- inputs
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                rt: TunableConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one workload cell (no allocation).
+
+    train  -> {tokens, labels [, frames/frontend_embeds]}
+    prefill-> {tokens [, frames/frontend_embeds]}
+    decode -> {tokens (B,1)}   (cache comes from Model.cache_shapes)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    comp = jnp.dtype(rt.compute_dtype)
+    tok = lambda s: jax.ShapeDtypeStruct((B, s), i32)
+
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "vlm":
+        F = cfg.frontend_tokens
+        out["frontend_embeds"] = jax.ShapeDtypeStruct((B, F, cfg.d_model),
+                                                      comp)
+        out["tokens"] = tok(S - F)
+        if shape.kind == "train":
+            out["labels"] = tok(S - F)
+    elif cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, S // cfg.enc_seq_ratio, cfg.d_model), comp)
+        out["tokens"] = tok(S)
+        if shape.kind == "train":
+            out["labels"] = tok(S)
+    else:
+        out["tokens"] = tok(S)
+        if shape.kind == "train":
+            out["labels"] = tok(S)
+    return out
+
+
+def synth_inputs(cfg: ArchConfig, shape: ShapeConfig, rt: TunableConfig,
+                 key) -> Dict[str, jnp.ndarray]:
+    """Materialized random inputs matching ``input_specs`` (smoke tests)."""
+    specs = input_specs(cfg, shape, rt)
+    out = {}
+    for name, s in specs.items():
+        key, k = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab, s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, s.dtype)
+    return out
+
+
+def batch_logical(cfg: ArchConfig, shape: ShapeConfig,
+                  rt: TunableConfig) -> Dict[str, Tuple]:
+    """Logical axis names for every input (for in_shardings)."""
+    specs = input_specs(cfg, shape, rt)
+    out = {}
+    for name, s in specs.items():
+        if name in ("frontend_embeds", "frames"):
+            out[name] = ("batch", None, None)
+        else:
+            out[name] = ("batch", None)
+    return out

@@ -1,0 +1,167 @@
+"""Explicit-collective gradient synchronization (full-manual shard_map).
+
+This path makes the paper's shuffle knobs *real* in the HLO:
+  * ``grad_comm_dtype``  (spark.shuffle.compress)  — the wire dtype of the
+    gradient all-reduce / reduce-scatter.
+  * ``fuse_grad_collectives`` (spark.shuffle.consolidateFiles) — bucket all
+    same-axis reductions into one flat-buffer collective.
+
+Availability mirrors Spark's manager-dependent parameters: the explicit
+path supports ``dp`` (replicated params, psum grads) and ``fsdp``
+(hand-rolled ZeRO-3: all-gather params on entry, psum_scatter grads),
+for families without an inner expert-parallel shard_map (i.e. not moe).
+``tp``/``fsdp_tp`` use the auto-SPMD path where XLA schedules collectives
+(grad-comm knobs are documented no-ops there, DESIGN.md §2.2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.params import TunableConfig
+from repro.runtime.sharding import ShardingRules
+
+
+def explicit_applicable(family: str, rt: TunableConfig) -> bool:
+    return rt.shard_strategy in ("dp", "fsdp") and family != "moe"
+
+
+def _fsdp_dim(spec: P) -> Optional[Tuple[int, Tuple[str, ...]]]:
+    """(dim index, mesh axes) of the fsdp-sharded dim of a param spec."""
+    for i, ax in enumerate(spec):
+        axes = (ax,) if isinstance(ax, str) else tuple(ax or ())
+        if axes:
+            return i, axes
+    return None
+
+
+def gather_params(params, specs):
+    """all-gather fsdp-sharded params to full (inside manual shard_map)."""
+    def g(p, spec):
+        hit = _fsdp_dim(spec)
+        if hit is None:
+            return p
+        i, axes = hit
+        for ax in axes:
+            p = jax.lax.all_gather(p, ax, axis=i, tiled=True)
+        return p
+    return jax.tree.map(g, params, specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def quantize_ef(g, state):
+    """int8 error-feedback compression for gradient all-reduce.
+
+    Adds the residual from the previous step before quantizing and keeps
+    the new residual (EF-SGD): unbiased in the long run even at 8 bits.
+    Returns (int8 payload, f32 scale, new residual)."""
+    g = g.astype(jnp.float32) + (state if state is not None else 0.0)
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    residual = g - q.astype(jnp.float32) * scale
+    return q, scale, residual
+
+
+def dequantize_ef(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def int8_allreduce_ef(flat, resid, axis: str, n: int):
+    """2-phase int8 all-reduce with error feedback over one mesh axis.
+
+    Phase 1: quantize (EF), all_to_all int8 chunks, dequantize + sum in
+    f32.  Phase 2: requantize the reduced chunk, all_gather int8.  Wire
+    bytes ~= 2 x N x 1B vs the f32 ring's 2 x N x 4B.  The second-stage
+    quantization error is not fed back (documented; first-stage EF
+    dominates).  flat: (N,) f32; resid: (N,) f32.  Returns (sum, resid).
+    """
+    N = flat.shape[0]
+    pad = (-N) % n
+    fp = jnp.pad(flat, (0, pad))
+    rp = jnp.pad(resid, (0, pad))
+    q, scale, new_resid = quantize_ef(fp, rp)
+    chunks = q.reshape(n, -1)
+    recv = jax.lax.all_to_all(chunks, axis, 0, 0, tiled=True)  # (n, m)
+    scales = jax.lax.all_gather(scale, axis)                   # (n,)
+    partial = jnp.sum(recv.astype(jnp.float32) * scales[:, None], axis=0)
+    amax = jnp.maximum(jnp.max(jnp.abs(partial)), 1e-12)
+    s2 = amax / 127.0
+    q2 = jnp.clip(jnp.round(partial / s2), -127, 127).astype(jnp.int8)
+    all_q = jax.lax.all_gather(q2, axis)                       # (n, m)
+    all_s = jax.lax.all_gather(s2, axis)                       # (n,)
+    out = (all_q.astype(jnp.float32) * all_s[:, None]).reshape(-1)
+    return out[:N], new_resid[:N]
+
+
+def reduce_grads(grads, specs, rt: TunableConfig, data_axes: Tuple[str, ...],
+                 scale: float):
+    """Reduce local grads across data axes with the comm-dtype knob.
+
+    fsdp params: psum_scatter back to the shard; others: psum.
+    ``fuse_grad_collectives``: one flat bucket for all plain psums.
+    """
+    comm = jnp.dtype(rt.grad_comm_dtype)
+    flat, tdef = jax.tree.flatten(grads)
+    spec_flat = tdef.flatten_up_to(specs)
+    sdims = [_fsdp_dim(s) for s in spec_flat]
+
+    out: List[Any] = [None] * len(flat)
+    # fsdp leaves: reduce-scatter back to the shard, psum over the rest
+    for i, (g, sd) in enumerate(zip(flat, sdims)):
+        if sd is None:
+            continue
+        dim, axes = sd
+        g = g.astype(comm)
+        for ax in reversed(axes):
+            g = jax.lax.psum_scatter(g, ax, scatter_dimension=dim,
+                                     tiled=True)
+        rest = tuple(a for a in data_axes if a not in axes)
+        if rest:
+            g = jax.lax.psum(g, rest)
+        out[i] = (g.astype(jnp.float32) * scale)
+
+    plain = [(i, g) for i, (g, sd) in enumerate(zip(flat, sdims))
+             if sd is None]
+    if plain:
+        if rt.fuse_grad_collectives:
+            shapes = [g.shape for _, g in plain]
+            sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+            flatbuf = jnp.concatenate(
+                [g.astype(comm).reshape(-1) for _, g in plain])
+            flatbuf = jax.lax.psum(flatbuf, data_axes)
+            off = 0
+            for (i, _), s, n in zip(plain, shapes, sizes):
+                out[i] = (flatbuf[off:off + n].reshape(s)
+                          .astype(jnp.float32) * scale)
+                off += n
+        else:
+            for i, g in plain:
+                g = jax.lax.psum(g.astype(comm), data_axes)
+                out[i] = g.astype(jnp.float32) * scale
+    return jax.tree.unflatten(tdef, out)
+
+
+def reduce_grads_int8_ef(grads, rt: TunableConfig,
+                         data_axes: Tuple[str, ...],
+                         axis_sizes: Dict[str, int], ef_state, scale: float):
+    """Bucketed int8-EF gradient reduction (dp strategy: every leaf is
+    replicated).  ef_state: (1, N_total) per-shard residual.  Returns
+    (grad tree, new ef_state)."""
+    flat, tdef = jax.tree.flatten(grads)
+    shapes = [g.shape for g in flat]
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    buf = jnp.concatenate([g.astype(jnp.float32).reshape(-1)
+                           for g in flat])
+    resid = ef_state.reshape(-1)
+    for ax in data_axes:
+        buf, resid = int8_allreduce_ef(buf, resid, ax, axis_sizes[ax])
+    outs, off = [], 0
+    for s, n in zip(shapes, sizes):
+        outs.append(buf[off:off + n].reshape(s) * scale)
+        off += n
+    return jax.tree.unflatten(tdef, outs), resid.reshape(ef_state.shape)

@@ -1,0 +1,31 @@
+"""Layer-stack iteration: lax.scan (deployable; small HLO) or an
+unrolled python loop.
+
+The unrolled form exists because XLA's ``cost_analysis`` counts a
+``while`` body ONCE regardless of trip count (verified in
+tests/test_costmodel_calibration.py), so roofline terms for scanned
+stacks must be calibrated from small unrolled compiles
+(core/costmodel.calibrated_roofline).  It is also a legitimate runtime
+mode (unrolling exposes cross-layer fusion to XLA at higher compile
+cost).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_layers(body, carry, xs, *, unroll: bool = False, length=None):
+    """drop-in for jax.lax.scan(body, carry, xs) over a layer stack."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length if length is not None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = (jax.tree.map(lambda a: a[i], xs) if xs is not None else None)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if not ys or all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return carry, stacked

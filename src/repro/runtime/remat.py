@@ -1,0 +1,45 @@
+"""Activation-checkpointing policies — the memoryFraction knob (DESIGN §2.1).
+
+``remat_policy``: 'dots' (balanced — Spark's default 0.2/0.6 fractions),
+'none' (store everything = storage-heavy 0.1/0.7), 'full' (recompute
+everything = shuffle-heavy).
+``remat_save_dtype``: dtype the saved residual stream is kept in between
+layers (spark.shuffle.spill.compress analogue) — the scan carry itself is
+held in this dtype when remat is active.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import TunableConfig
+
+_POLICIES = {
+    "dots": jax.checkpoint_policies.dots_saveable,
+    "full": jax.checkpoint_policies.nothing_saveable,
+}
+
+
+def wrap_layer(fn, rt: TunableConfig):
+    """Apply the remat policy to a scan-body layer function."""
+    if rt.remat_policy == "none":
+        return fn
+    return jax.checkpoint(fn, policy=_POLICIES[rt.remat_policy],
+                          prevent_cse=False)
+
+
+def carry_dtype(rt: TunableConfig):
+    """Dtype of the saved residual stream between layers."""
+    if rt.remat_policy == "none":
+        return jnp.dtype(rt.compute_dtype)
+    save = jnp.dtype(rt.remat_save_dtype)
+    comp = jnp.dtype(rt.compute_dtype)
+    return save if save.itemsize < comp.itemsize else comp
+
+
+def to_carry(x, rt: TunableConfig):
+    return x.astype(carry_dtype(rt))
+
+
+def from_carry(x, rt: TunableConfig):
+    return x.astype(jnp.dtype(rt.compute_dtype))

@@ -1,0 +1,181 @@
+"""Sharding rules: logical axis names -> mesh axes, per shard strategy.
+
+The four strategies map to the paper's shuffle managers (DESIGN.md §2.1):
+``dp`` (sort/default: replicate params, all-reduce grads), ``fsdp`` (hash:
+shard params over the data axis, all-gather on use), ``tp`` (tungsten-sort:
+Megatron column/row parallel over the model axis), ``fsdp_tp`` (2D).
+
+Every mapping is divisibility-guarded: a logical dim that does not divide
+the mesh axis product falls back (recorded in ``notes``) instead of
+failing — head counts like 56 or 9 must still compile on a 16-wide model
+axis.  Attention's fallback behaviour is itself a tunable
+(``attn_tp_fallback``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+# logical dim names used by the model zoo when annotating parameters
+PARAM_LOGICAL = ("layers", "vocab", "embed", "heads", "kv_heads", "mlp",
+                 "expert", "ssm_heads", "ssm_inner", "state", None)
+
+
+def _axes_size(mesh: Mesh, axes: AxisName) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    strategy: str                       # dp | fsdp | tp | fsdp_tp
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    attn_tp_fallback: str = "replicate"  # replicate | batch_shard
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if self.strategy not in ("dp", "fsdp", "tp", "fsdp_tp"):
+            raise ValueError(f"unknown strategy {self.strategy}")
+        # fsdp axes that exist in this mesh (single-pod mesh has no 'pod')
+        self.fsdp_axes = tuple(a for a in self.fsdp_axes
+                               if a in self.mesh.shape)
+        self._batch_axes = tuple(a for a in ("pod", "data")
+                                 if a in self.mesh.shape)
+
+    # -------------------------------------------------- helpers
+    def _fit(self, dim: Optional[int], axes: AxisName, what: str) -> AxisName:
+        """Return ``axes`` if ``dim`` divides their product, else None."""
+        if axes is None:
+            return None
+        if dim is not None and dim % _axes_size(self.mesh, axes) != 0:
+            self.notes.append(
+                f"{what}: dim {dim} not divisible by {axes} "
+                f"({_axes_size(self.mesh, axes)}); left unsharded")
+            return None
+        return axes
+
+    @property
+    def tp(self) -> bool:
+        return self.strategy in ("tp", "fsdp_tp")
+
+    @property
+    def fsdp(self) -> bool:
+        return self.strategy in ("fsdp", "fsdp_tp")
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        return self._batch_axes
+
+    def data_axis_size(self) -> int:
+        return _axes_size(self.mesh, self._batch_axes)
+
+    def model_axis_size(self) -> int:
+        return self.mesh.shape.get("model", 1)
+
+    # -------------------------------------------------- parameters
+    def param_spec(self, logical: Sequence[Optional[str]],
+                   shape: Sequence[int]) -> P:
+        """PartitionSpec for a parameter annotated with logical dim names."""
+        assert len(logical) == len(shape), (logical, shape)
+        out: List[AxisName] = [None] * len(shape)
+        heads_sharded = False
+        # the model axis goes to at most ONE dim per param; priority:
+        # experts (EP) > heads (attention TP) > column/row dims
+        priority = ("expert", "heads", "kv_heads", "mlp", "vocab",
+                    "ssm_heads", "ssm_inner")
+        if self.tp:
+            for want in priority:
+                placed = False
+                for i, (name, dim) in enumerate(zip(logical, shape)):
+                    if name == want and out[i] is None:
+                        got = self._fit(dim, "model", f"param.{name}")
+                        if got is not None:
+                            out[i] = got
+                            placed = True
+                            if name in ("heads", "kv_heads"):
+                                heads_sharded = True
+                            break
+                if placed:
+                    break
+        model_placed = any(
+            "model" in ((ax,) if isinstance(ax, str) else (ax or ()))
+            for ax in out)
+        if self.fsdp:
+            for i, (name, dim) in enumerate(zip(logical, shape)):
+                if name == "embed" and out[i] is None:
+                    out[i] = self._fit(dim, self.fsdp_axes, "param.embed")
+        # TP couldn't shard ANY dim of an attention weight: fold the
+        # model axis into the embed dim (fully-sharded, all-gather on use)
+        if (self.tp and not model_placed
+                and any(n in ("heads", "kv_heads") for n in logical)):
+            for i, (name, dim) in enumerate(zip(logical, shape)):
+                if name == "embed":
+                    cur = out[i]
+                    cand = (tuple(cur) if isinstance(cur, tuple)
+                            else (cur,) if cur else ())
+                    cand = cand + ("model",)
+                    out[i] = self._fit(dim, cand, "param.embed+model")
+        return P(*out)
+
+    # -------------------------------------------------- activations
+    def act_spec(self, logical: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> P:
+        """PartitionSpec for an activation (batch/seq/heads/embed dims)."""
+        out: List[AxisName] = [None] * len(shape)
+        for i, (name, dim) in enumerate(zip(logical, shape)):
+            if name == "batch":
+                out[i] = self._fit(dim, self._batch_axes, "act.batch")
+            elif name == "heads" and self.tp:
+                out[i] = self._fit(dim, "model", "act.heads")
+            elif name == "kv_heads" and self.tp:
+                out[i] = self._fit(dim, "model", "act.kv_heads")
+            elif name in ("mlp", "vocab", "expert", "ssm_heads",
+                          "ssm_inner") and self.tp:
+                out[i] = self._fit(dim, "model", f"act.{name}")
+            elif name == "seq_model" and self.tp:   # explicit seq-sharding ask
+                out[i] = self._fit(dim, "model", "act.seq")
+            elif name == "seq_data":
+                out[i] = self._fit(dim, self._batch_axes, "act.seq")
+        return P(*out)
+
+    def constrain(self, x, *logical: Optional[str]):
+        """with_sharding_constraint by logical names (no-op outside mesh)."""
+        spec = self.act_spec(logical, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    # attention fallback: batch-shard the attention op over the model axis
+    def attn_batch_spec(self, batch: int) -> Optional[P]:
+        if self.attn_tp_fallback != "batch_shard" or not self.tp:
+            return None
+        axes = self._batch_axes + ("model",)
+        if batch % _axes_size(self.mesh, axes) == 0:
+            return P(axes)
+        self.notes.append(f"attn batch_shard: batch {batch} does not divide "
+                          f"{axes}; using replicate fallback")
+        return None
+
+    # -------------------------------------------------- named shardings
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def param_sharding_tree(self, logical_tree, shape_tree):
+        """Map parallel pytrees of logical names and ShapeDtypeStructs to
+        NamedShardings."""
+        return jax.tree.map(
+            lambda lg, sd: self.sharding(self.param_spec(lg, sd.shape)),
+            logical_tree, shape_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))

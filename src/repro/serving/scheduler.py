@@ -1,0 +1,157 @@
+"""Batched serving scheduler: request queue -> prefill waves -> decode.
+
+Iteration-level wave batching: requests are admitted from the queue until
+the wave is full (or ``max_wait_s`` passes), prefilled together (padded to
+the wave's max prompt length), then decoded step-by-step; finished lanes
+(EOS or token budget) are masked out and the wave retires when all lanes
+finish or the step budget is hit.  Tracks TTFT / throughput / queue-delay
+metrics per request.
+
+This is the serving-path integration point for the tuner: the scheduler
+takes a TunableConfig, so kv_cache_dtype / donate_buffers trials apply to
+a live serving workload (WallClockEvaluator).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.params import TunableConfig
+from repro.models.model import Model, build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray               # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    t_submit: float = 0.0
+    # outputs
+    generated: List[int] = dataclasses.field(default_factory=list)
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        return (self.t_first_token - self.t_submit
+                if self.t_first_token else None)
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    requests: int = 0
+    decode_tokens: int = 0
+    prefill_tokens: int = 0
+    wall_s: float = 0.0
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests": self.requests,
+            "decode_tok_per_s": self.decode_tokens / max(self.wall_s, 1e-9),
+            "prefill_tokens": self.prefill_tokens,
+            "mean_ttft_s": (sum(self.ttft_s) / len(self.ttft_s)
+                            if self.ttft_s else 0.0),
+        }
+
+
+class BatchScheduler:
+    def __init__(self, cfg: ArchConfig, rt: TunableConfig, params,
+                 wave_size: int = 4, max_seq: int = 128,
+                 max_wait_s: float = 0.0):
+        self.cfg = cfg
+        self.rt = rt
+        self.params = params
+        self.model: Model = build_model(cfg)
+        self.wave_size = wave_size
+        self.max_seq = max_seq
+        self.max_wait_s = max_wait_s
+        self.queue: Deque[Request] = collections.deque()
+        self.metrics = ServeMetrics()
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill_fn(p, b, rt, max_seq=max_seq))
+        self._decode = jax.jit(
+            lambda p, c, t: self.model.decode_fn(p, c, t, rt))
+
+    def submit(self, req: Request):
+        req.t_submit = req.t_submit or time.time()
+        self.queue.append(req)
+
+    # ------------------------------------------------------------ waves
+    def _admit_wave(self) -> List[Request]:
+        deadline = time.time() + self.max_wait_s
+        while (len(self.queue) < self.wave_size
+               and time.time() < deadline):
+            time.sleep(0.001)
+        wave = []
+        while self.queue and len(wave) < self.wave_size:
+            wave.append(self.queue.popleft())
+        return wave
+
+    def _pad_prompts(self, wave: List[Request]):
+        # left-pad to a common length so last prompt token aligns
+        L = max(len(r.tokens) for r in wave)
+        toks = np.zeros((len(wave), L), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, L - len(r.tokens):] = r.tokens
+        return jnp.asarray(toks)
+
+    def run_wave(self) -> List[Request]:
+        wave = self._admit_wave()
+        if not wave:
+            return []
+        t0 = time.time()
+        tokens = self._pad_prompts(wave)
+        batch = {"tokens": tokens}
+        if self.cfg.family == "encdec":
+            S = tokens.shape[1]
+            batch["frames"] = jnp.zeros(
+                (len(wave), max(1, S // self.cfg.enc_seq_ratio),
+                 self.cfg.d_model), jnp.dtype(self.rt.compute_dtype))
+        logits, cache = self._prefill(self.params, batch)
+        self.metrics.prefill_tokens += int(tokens.size)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        now = time.time()
+        for i, r in enumerate(wave):
+            r.t_first_token = now
+            r.generated.append(int(tok[i, 0]))
+        done = np.array([r.eos_id is not None
+                         and r.generated[-1] == r.eos_id for r in wave])
+        budget = max(r.max_new_tokens for r in wave) - 1
+        steps = min(budget, self.max_seq - tokens.shape[1] - 1)
+        for _ in range(max(0, steps)):
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            self.metrics.decode_tokens += int((~done).sum())
+            for i, r in enumerate(wave):
+                if done[i]:
+                    continue
+                t = int(tok[i, 0])
+                r.generated.append(t)
+                if ((r.eos_id is not None and t == r.eos_id)
+                        or len(r.generated) >= r.max_new_tokens):
+                    done[i] = True
+                    r.t_done = time.time()
+        now = time.time()
+        for r in wave:
+            r.t_done = r.t_done or now
+            self.metrics.ttft_s.append(r.ttft_s or 0.0)
+        self.metrics.requests += len(wave)
+        self.metrics.wall_s += now - t0
+        return wave
+
+    def run_until_drained(self) -> List[Request]:
+        out = []
+        while self.queue:
+            out.extend(self.run_wave())
+        return out

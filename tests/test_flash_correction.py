@@ -1,0 +1,60 @@
+"""Analytic flash-attention correction: sanity + knob monotonicity."""
+import pytest
+
+from repro.configs import get_config, get_shape
+from repro.core import costmodel
+from repro.core.params import default_config
+
+
+BASE = default_config(shard_strategy="fsdp_tp", compute_dtype="bfloat16",
+                      attn_impl="pallas")
+
+
+def test_zero_without_pallas():
+    cfg, shp = get_config("glm4-9b"), get_shape("train_4k")
+    rt = BASE.replace(attn_impl="xla")
+    assert costmodel.flash_memory_correction_bytes(cfg, shp, rt, 16, 16) == 0
+    assert costmodel.flash_peak_correction_bytes(cfg, shp, rt, 16, 16) == 0
+
+
+def test_bigger_tiles_reduce_refetch():
+    """file.buffer knob: larger q tiles -> fewer K/V refetches -> larger
+    net traffic saving."""
+    cfg, shp = get_config("glm4-9b"), get_shape("train_4k")
+    small = costmodel.flash_memory_correction_bytes(
+        cfg, shp, BASE.replace(attn_block_q=128), 16, 16)
+    big = costmodel.flash_memory_correction_bytes(
+        cfg, shp, BASE.replace(attn_block_q=512), 16, 16)
+    assert big > small > 0
+
+
+def test_remat_full_stores_fewer_scores():
+    cfg, shp = get_config("glm4-9b"), get_shape("train_4k")
+    none = costmodel.flash_peak_correction_bytes(cfg, shp, BASE, 16, 16)
+    full = costmodel.flash_peak_correction_bytes(
+        cfg, shp, BASE.replace(remat_policy="full"), 16, 16)
+    assert none > full > 0            # none stores all layers' scores
+
+
+def test_attention_shards_replicated_heads():
+    """9 heads on a 16-wide model axis -> replicated over model."""
+    smollm = get_config("smollm-135m")
+    glm = get_config("glm4-9b")
+    assert costmodel.attention_shards(smollm, BASE, 16, 16) == 16
+    assert costmodel.attention_shards(glm, BASE, 16, 16) == 256
+    bs = BASE.replace(attn_tp_fallback="batch_shard")
+    assert costmodel.attention_shards(smollm, bs, 16, 16) == 256
+
+
+def test_ssm_family_has_no_attention_apps():
+    cfg = get_config("xlstm-1.3b")
+    assert costmodel.attention_applications(cfg, get_shape("train_4k")) == []
+    zam = get_config("zamba2-7b")
+    apps = costmodel.attention_applications(zam, get_shape("train_4k"))
+    assert apps == [(81 // 6, 4096, 4096)]
+
+
+def test_decode_has_no_correction():
+    cfg = get_config("glm4-9b")
+    assert costmodel.attention_applications(cfg, get_shape("decode_32k")) \
+        == []

@@ -1,0 +1,99 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py pure-jnp oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.rmsnorm import ops as rms_ops, ref as rms_ref
+from repro.kernels.ssm_scan import ops as ssm_ops, ref as ssm_ref
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,S,hd", [(1, 1, 128, 64), (2, 3, 256, 64),
+                                      (1, 2, 512, 128), (2, 1, 128, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("blocks", [(64, 64), (128, 128), (64, 128)])
+def test_flash_attention_sweep(B, H, S, hd, dtype, blocks):
+    bq, bk = blocks
+    if S % bq or S % bk:
+        pytest.skip("block does not divide")
+    ks = jax.random.split(jax.random.PRNGKey(S + hd), 3)
+    q, k, v = [jax.random.normal(kk, (B, S, H, hd)).astype(dtype)
+               for kk in ks]
+    out = fa_ops.flash_attention(q, k, v, causal=True, block_q=bq,
+                                 block_kv=bk)
+    ref = fa_ref.attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (3, 37, 512), (2, 4, 16, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(sum(shape)))
+    x = jax.random.normal(k1, shape).astype(dtype)
+    s = (jax.random.normal(k2, shape[-1:]) * 0.1 + 1.0).astype(dtype)
+    out = rms_ops.rmsnorm(x, s)
+    ref = rms_ref.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 16, 8, 16), (2, 128, 4, 32, 16, 32), (1, 256, 1, 64, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_sweep(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(S * H), 5)
+    X = jax.random.normal(ks[0], (B, S, H, P)).astype(dtype)
+    Bm = (jax.random.normal(ks[1], (B, S, N)) * 0.5).astype(dtype)
+    Cm = (jax.random.normal(ks[2], (B, S, N)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    la = -dt * jnp.exp(jax.random.normal(ks[4], (H,)) * 0.2)[None, None]
+    Y, h = ssm_ops.ssm_scan(X, Bm, Cm, dt, la, chunk=chunk)
+    Yr, hr = ssm_ref.ssm_scan_ref(X, Bm, Cm, dt, la)
+    t = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(Y, np.float32),
+                               np.asarray(Yr, np.float32), **t)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), **t)
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,hd,length", [
+    (1, 4, 4, 128, 64, 128), (2, 8, 2, 256, 64, 200),
+    (1, 16, 16, 512, 128, 33)])
+@pytest.mark.parametrize("kv_dtype", ["bfloat16", "int8"])
+def test_flash_decode_sweep(B, H, Hkv, S, hd, length, kv_dtype):
+    from repro.kernels.flash_decode import ops as fd, ref as fd_ref
+    from repro.models.layers import quantize_kv
+    ks = jax.random.split(jax.random.PRNGKey(S + H), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    kc = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    vc = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    kq, ksc = quantize_kv(kc, kv_dtype)
+    vq, vsc = quantize_kv(vc, kv_dtype)
+    out = fd.flash_decode(q, kq, vq, length, ksc, vsc, block_kv=64)
+    tr = lambda t: t.transpose(0, 2, 1, 3) if t is not None else None
+    ref = fd_ref.decode_ref(tr(q), tr(kq), tr(vq), tr(ksc), tr(vsc),
+                            jnp.array([length])).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = [jax.random.normal(kk, (2, 128, 2, 64)) for kk in ks]
+    out = fa_ops.flash_attention(q, k, v, causal=False)
+    ref = fa_ref.attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=False).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,110 @@
+"""Property-based tests (hypothesis) on the paper's tuner invariants."""
+import math
+
+import hypothesis as hp
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.params import (DOMAINS, SENSITIVITY_SWEEP, TunableConfig,
+                               default_config, exhaustive_size)
+from repro.core.sensitivity import run_sensitivity
+from repro.core.tree import MAX_TRIALS, default_tree, run_tuning
+from repro.core.trial import TrialResult, TrialRunner, Workload
+
+WL = Workload("smollm-135m", "train_4k")
+
+
+def synth_evaluator(weights: dict, crash_on: dict):
+    """Deterministic synthetic cost surface over the knob space."""
+    def ev(wl, rt):
+        for k, v in crash_on.items():
+            if getattr(rt, k) == v:
+                return TrialResult(cost_s=float("inf"), crashed=True)
+        c = 100.0
+        for (k, v), w in weights.items():
+            if getattr(rt, k) == v:
+                c *= w
+        return TrialResult(cost_s=c)
+    return ev
+
+
+knob_weight = st.sampled_from([0.5, 0.7, 0.9, 0.97, 1.0, 1.05, 1.3, 2.0])
+
+
+@st.composite
+def cost_surfaces(draw):
+    weights = {}
+    for k, dom in DOMAINS.items():
+        for v in dom[1:]:
+            weights[(k, v)] = draw(knob_weight)
+    crash = {}
+    if draw(st.booleans()):
+        crash["remat_policy"] = "full"
+    return weights, crash
+
+
+@hp.settings(max_examples=30, deadline=None)
+@hp.given(surface=cost_surfaces(),
+          threshold=st.sampled_from([0.0, 0.05, 0.10]))
+def test_tree_invariants(surface, threshold):
+    weights, crash = surface
+    runner = TrialRunner(WL, synth_evaluator(weights, crash))
+    baseline = default_config(shard_strategy="fsdp_tp")
+    rep = run_tuning(runner, baseline, threshold=threshold)
+    # (1) the paper's run budget
+    assert rep.n_trials <= MAX_TRIALS
+    # (2) final never worse than baseline under the same evaluator
+    assert rep.final_cost <= rep.baseline_cost + 1e-9
+    # (3) the final config's cost matches an independent evaluation
+    final = TunableConfig(**rep.final_config)
+    res = synth_evaluator(weights, crash)(WL, final)
+    assert not res.crashed
+    assert math.isclose(res.cost_s, rep.final_cost, rel_tol=1e-9)
+    # (4) every accepted stage actually improved past the threshold
+    log = rep.log
+    costs = [e["result"]["cost_s"] for e in log]
+    assert costs[0] == rep.baseline_cost or math.isinf(rep.baseline_cost)
+
+
+@hp.settings(max_examples=20, deadline=None)
+@hp.given(surface=cost_surfaces())
+def test_sensitivity_invariants(surface):
+    weights, crash = surface
+    runner = TrialRunner(WL, synth_evaluator(weights, crash))
+    rep = run_sensitivity(runner, default_config(shard_strategy="fsdp_tp"))
+    for imp in rep.impacts:
+        # mean |%| is non-negative; crashes excluded from the mean
+        assert imp.mean_abs_pct >= 0.0
+        assert imp.crashes == sum(1 for d in imp.deviations_pct if d != d)
+        # knobs with weight 1.0 everywhere have ~0 impact
+        if all(weights.get((imp.knob, v), 1.0) == 1.0 for v in imp.values) \
+                and not imp.crashes and imp.knob not in crash:
+            assert imp.mean_abs_pct == pytest.approx(0.0, abs=1e-9)
+
+
+def test_tree_beats_exhaustive_budget():
+    """The whole point: <=10 trials vs the exhaustive grid."""
+    assert exhaustive_size() >= 512          # paper quotes 2^9
+    for kind in ("train", "prefill", "decode"):
+        stages = default_tree(kind)
+        n_alts = sum(len(s.alternatives) for s in stages)
+        assert n_alts + 1 <= MAX_TRIALS + 1
+
+
+def test_crashed_baseline_recovers():
+    """If the default config crashes, any fitting config is accepted."""
+    def ev(wl, rt):
+        if rt.remat_policy == "dots":          # default crashes
+            return TrialResult(cost_s=float("inf"), crashed=True)
+        return TrialResult(cost_s=10.0)
+    runner = TrialRunner(WL, ev)
+    rep = run_tuning(runner, default_config(), threshold=0.05)
+    assert rep.final_cost == 10.0
+    assert any("memoryFraction" in a for a in rep.accepted)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        default_config(compute_dtype="float64")
+    c = default_config()
+    assert c.describe_delta(c.replace(microbatches=4)) == "microbatches=4"
