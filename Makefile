@@ -1,0 +1,13 @@
+.PHONY: verify verify-fast bench-trials
+
+# tier-1: full suite, fail-fast (ROADMAP.md)
+verify:
+	./scripts/verify.sh
+
+# skip the multi-minute subprocess end-to-end tests
+verify-fast:
+	./scripts/verify.sh -m 'not slow'
+
+# trial-throughput benchmark -> BENCH_trials.json
+bench-trials:
+	PYTHONPATH=src python -m benchmarks.bench_trials

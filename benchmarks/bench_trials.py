@@ -1,0 +1,133 @@
+"""Trial-throughput benchmark: structure-aware compile cache + parallel
+sweep executor vs. the naive (compile-every-trial) evaluator.
+
+A full SENSITIVITY_SWEEP pass — every (knob, value) pair the Sec.-4
+protocol lists, plus the baseline — is evaluated on one cell twice,
+cache-cold both times:
+
+  * naive   — caching disabled: every trial pays its four calibration
+    compiles, exactly the pre-engine evaluator;
+  * engine  — cold CompileCache + SweepExecutor: trials that differ
+    only in analytic knobs (or in knobs that provably never reach this
+    cell's compiled HLO, core/params.compile_key) share compiles.
+
+The engine must produce bit-identical cost_s for every swept point
+(``identical_costs`` below) — the speedup is pure structure, no change
+to any observed cost.  Results land in results/benchmarks/BENCH_trials.json
+and a copy at the repo root (BENCH_trials.json) for CI tracking.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_trials [--cell arch shape]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import pathlib
+import shutil
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# Default cell: ssm-family prefill — a serving cell of the paper's
+# protocol where the largest share of the 12 knobs is analytic-only
+# (no train machinery, no KV cache, no MoE wire), i.e. the best case
+# the cache is designed around.  Any cell works; the equality check is
+# what matters.
+DEFAULT_CELL = ("xlstm-1.3b", "prefill_32k")
+
+
+def sweep_points(baseline):
+    """The full SENSITIVITY_SWEEP pass: baseline + every listed value.
+
+    Values equal to the baseline's (each knob's default) are kept — a
+    naive sweep driver pays full compiles for them; the engine gets
+    them from the cache like any other repeated structure."""
+    from repro.core.params import SENSITIVITY_SWEEP
+    pts = [("baseline", {}, baseline)]
+    for knob, values in SENSITIVITY_SWEEP.items():
+        for v in values:
+            pts.append((f"{knob}={v}", {knob: v},
+                        baseline.replace(**{knob: v})))
+    return pts
+
+
+def run_pass(wl, points, evaluator, parallel: bool):
+    from repro.core.executor import SweepExecutor
+    t0 = time.time()
+    if parallel:
+        with SweepExecutor(evaluator) as ex:
+            results = ex.map(wl, [rt for _, _, rt in points])
+    else:
+        results = [evaluator(wl, rt) for _, _, rt in points]
+    wall = time.time() - t0
+    return results, wall
+
+
+def main(arch: str, shape: str, workers: int = None):
+    from repro.core.params import default_config
+    from repro.core.trial import CompileCache, RooflineEvaluator, Workload
+
+    wl = Workload(arch, shape)
+    baseline = default_config(shard_strategy="fsdp_tp")
+    points = sweep_points(baseline)
+    print(f"cell {wl.key()}: {len(points)} sweep points "
+          f"(full SENSITIVITY_SWEEP pass incl. baseline)")
+
+    # --- naive: no caching anywhere, sequential (the seed evaluator)
+    naive = RooflineEvaluator(use_cache=False)
+    naive_results, naive_wall = run_pass(wl, points, naive, parallel=False)
+    naive_compiles = naive.total_compiles
+
+    # --- engine: cold two-level cache + parallel executor
+    cold_dir = ROOT / "results" / "bench_trials_cache"
+    shutil.rmtree(cold_dir, ignore_errors=True)
+    engine = RooflineEvaluator(
+        compile_cache=CompileCache(directory=cold_dir))
+    if workers:
+        os.environ["REPRO_TRIAL_WORKERS"] = str(workers)
+    engine_results, engine_wall = run_pass(wl, points, engine,
+                                           parallel=True)
+    engine_compiles = engine.total_compiles
+
+    mismatches = [
+        (name, rn.cost_s, re_.cost_s)
+        for (name, _, _), rn, re_ in zip(points, naive_results,
+                                         engine_results)
+        if rn.cost_s != re_.cost_s or rn.crashed != re_.crashed]
+    out = {
+        "cell": wl.key(),
+        "sweep_points": len(points),
+        "naive": {"compiles": naive_compiles,
+                  "wall_s": round(naive_wall, 1),
+                  "compiles_per_trial": round(
+                      naive_compiles / len(points), 2)},
+        "engine": {"compiles": engine_compiles,
+                   "wall_s": round(engine_wall, 1),
+                   "compiles_per_trial": round(
+                       engine_compiles / len(points), 2),
+                   "cache": engine.compile_cache.stats()},
+        "compile_reduction_x": round(naive_compiles
+                                     / max(1, engine_compiles), 2),
+        "wall_speedup_x": round(naive_wall / max(1e-9, engine_wall), 2),
+        "identical_costs": not mismatches,
+        "mismatches": mismatches[:10],
+    }
+    res_dir = ROOT / "results" / "benchmarks"
+    res_dir.mkdir(parents=True, exist_ok=True)
+    (res_dir / "BENCH_trials.json").write_text(json.dumps(out, indent=1))
+    (ROOT / "BENCH_trials.json").write_text(json.dumps(out, indent=1))
+    shutil.rmtree(cold_dir, ignore_errors=True)
+    print(json.dumps(out, indent=1))
+    assert not mismatches, "engine changed observed costs!"
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", nargs=2, default=DEFAULT_CELL,
+                    metavar=("ARCH", "SHAPE"))
+    ap.add_argument("--workers", type=int, default=None)
+    a = ap.parse_args()
+    main(a.cell[0], a.cell[1], a.workers)

@@ -70,19 +70,24 @@ def select_cells() -> List[Tuple[str, str, str]]:
 def run_case_studies(threshold: float = 0.05):
     from benchmarks.common import save
     from repro.core import report
+    from repro.core.executor import SweepExecutor
     from repro.core.tree import run_tuning
     from repro.core.trial import RooflineEvaluator, TrialRunner, Workload
     reps = []
-    for arch, shape, why in select_cells():
-        wl = Workload(arch, shape)
-        runner = TrialRunner(wl, RooflineEvaluator())
-        rep = run_tuning(runner,
-                         default_config(shard_strategy="fsdp_tp",
-                                        attn_impl="pallas"),
-                         threshold=threshold)
-        md = f"Selection criterion: **{why}**\n\n" + report.tuning_markdown(rep)
-        save(f"case_study_{wl.key()}.md", md)
-        reps.append(rep)
+    # one executor for all three cells: stage alternatives overlap and
+    # the compile cache is shared across the studies
+    with SweepExecutor(RooflineEvaluator()) as executor:
+        for arch, shape, why in select_cells():
+            wl = Workload(arch, shape)
+            runner = TrialRunner(wl, executor.evaluator)
+            rep = run_tuning(runner,
+                             default_config(shard_strategy="fsdp_tp",
+                                            attn_impl="pallas"),
+                             threshold=threshold, executor=executor)
+            md = (f"Selection criterion: **{why}**\n\n"
+                  + report.tuning_markdown(rep))
+            save(f"case_study_{wl.key()}.md", md)
+            reps.append(rep)
     return reps
 
 

@@ -40,8 +40,10 @@ def baseline_rt():
 
 
 def sensitivity_for(wl: Workload):
-    runner = TrialRunner(wl, RooflineEvaluator())
-    return run_sensitivity(runner, baseline_rt())
+    from repro.core.executor import SweepExecutor
+    with SweepExecutor(RooflineEvaluator()) as executor:
+        runner = TrialRunner(wl, executor.evaluator)
+        return run_sensitivity(runner, baseline_rt(), executor=executor)
 
 
 def save(name: str, text: str):

@@ -124,13 +124,37 @@ def candidate_moves(kind: str) -> List[Dict]:
 
 
 def hillclimb(arch: str, shape: str, paper_config: Optional[dict] = None,
-              threshold: float = 0.05, patience: int = 3):
+              threshold: float = 0.05, patience: int = 3,
+              executor=None, lookahead: int = 4):
+    """Sequential accept/reject loop with speculative lookahead: while
+    the verdict on move i is being decided, the executor warms the
+    evaluator caches for moves i+1..i+lookahead applied to the *current*
+    incumbent.  An accepted move invalidates the speculation (different
+    base config) — the results are simply never used, so verdicts are
+    identical to the sequential climb."""
     from repro.core import costmodel
+    from repro.core.executor import SweepExecutor
     from repro.core.params import TunableConfig, default_config
     from repro.core.trial import RooflineEvaluator, TrialRunner, Workload
 
     wl = Workload(arch, shape)
-    ev = RooflineEvaluator()
+    ev = executor.evaluator if executor is not None else RooflineEvaluator()
+    own_executor = executor is None
+    if own_executor:
+        executor = SweepExecutor(ev)
+    try:
+        return _climb(wl, ev, executor, paper_config, threshold, patience,
+                      lookahead)
+    finally:
+        if own_executor:
+            # drop queued speculation; a running compile still lands in
+            # the shared cache for the next call
+            executor.shutdown(wait=False, cancel_futures=True)
+
+
+def _climb(wl, ev, executor, paper_config, threshold, patience, lookahead):
+    from repro.core import costmodel
+    from repro.core.params import TunableConfig, default_config
     incumbent = (TunableConfig(**paper_config) if paper_config
                  else default_config(shard_strategy="fsdp_tp"))
     log = []
@@ -149,13 +173,18 @@ def hillclimb(arch: str, shape: str, paper_config: Optional[dict] = None,
     # hit the dominant term first (hypothesis ordering by predicted win)
     moves.sort(key=lambda m: (m.get("targets") != "ablation",
                               m.get("targets") != bottleneck))
-    for mv in moves:
+    for i, mv in enumerate(moves):
         if stale >= patience:
             break
         if all(getattr(incumbent, k) == v for k, v in mv["delta"].items()):
             continue
         cand = incumbent.replace(**mv["delta"])
-        res = ev(wl, cand)
+        # speculate on the next few moves against the current incumbent
+        executor.prefetch(wl, [incumbent.replace(**m["delta"])
+                               for m in moves[i + 1:i + 1 + lookahead]
+                               if not all(getattr(incumbent, k) == v
+                                          for k, v in m["delta"].items())])
+        res = executor.submit(wl, cand).result()
         entry = dict(step=mv["name"], hypothesis=mv["hypothesis"],
                      delta=mv["delta"], cost_s=res.cost_s,
                      roofline=res.roofline)
@@ -203,19 +232,22 @@ def to_markdown(result: dict) -> str:
 
 def main():
     from benchmarks.case_studies import select_cells
+    from repro.core.executor import SweepExecutor
     from repro.core.params import default_config
     from repro.core.tree import run_tuning
     from repro.core.trial import RooflineEvaluator, TrialRunner, Workload
     PERF.mkdir(parents=True, exist_ok=True)
+    # one evaluator + executor: all cells share the compile cache and pool
+    executor = SweepExecutor(RooflineEvaluator())
     for arch, shape, why in select_cells():
         key = f"{arch}__{shape}__pod"
         # phase 1 (paper-faithful): the Fig-4 tree's output is the
         # hillclimb starting point (cache-hit instant after case studies)
         rep = run_tuning(
-            TrialRunner(Workload(arch, shape), RooflineEvaluator()),
+            TrialRunner(Workload(arch, shape), executor.evaluator),
             default_config(shard_strategy="fsdp_tp", attn_impl="pallas"),
-            threshold=0.05)
-        res = hillclimb(arch, shape, rep.final_config)
+            threshold=0.05, executor=executor)
+        res = hillclimb(arch, shape, rep.final_config, executor=executor)
         md = f"Selection criterion: **{why}**\n\n" + to_markdown(res)
         (PERF / f"hillclimb_{key}.md").write_text(md)
         (PERF / f"hillclimb_{key}.json").write_text(
@@ -223,6 +255,7 @@ def main():
         print(f"{key}: frac {res['roofline_fraction']:.3f} "
               f"({res['baseline_cost']*1e3:.1f} -> "
               f"{res['final_cost']*1e3:.1f} ms)")
+    executor.shutdown()
 
 
 if __name__ == "__main__":

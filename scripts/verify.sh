@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification (ROADMAP.md): full test suite, fail-fast.
+# Usage: scripts/verify.sh [extra pytest args], or `make verify`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

@@ -1,0 +1,44 @@
+"""Version compatibility shims for the installed JAX.
+
+``jax.sharding.AxisType`` (explicit-sharding mesh axis kinds) only exists
+in newer JAX releases; on older ones every mesh axis is implicitly
+"auto", which is exactly what this codebase asks for.  All mesh
+construction goes through :func:`axis_types_kw` so the same call sites
+work on both sides of the API change.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+try:                                     # JAX >= 0.5-era API
+    from jax.sharding import AxisType  # type: ignore
+
+    HAS_AXIS_TYPE = True
+except ImportError:                      # older JAX: all axes are auto
+    class AxisType:                      # type: ignore
+        """Stand-in enum: only ``Auto`` is ever referenced here."""
+        Auto = "auto"
+
+    HAS_AXIS_TYPE = False
+
+
+def axis_types_kw(n_axes: int) -> Dict[str, Tuple]:
+    """kwargs dict for Mesh/make_mesh: axis_types only when supported."""
+    if HAS_AXIS_TYPE:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+    return {}
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across the API move: newer JAX exposes it at the
+    top level with ``check_vma``; older releases have
+    ``jax.experimental.shard_map.shard_map`` with the same semantics
+    under ``check_rep``."""
+    import jax
+
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

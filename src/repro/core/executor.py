@@ -1,0 +1,154 @@
+"""Parallel trial execution for sweeps — the trial-throughput engine.
+
+The tuner's outer loops (sensitivity sweeps, tree stage alternatives,
+hillclimb lookahead, case-study batches) evaluate *independent*
+candidate configurations; the expensive part of each evaluation is an
+XLA lower+compile that releases the GIL, so a thread pool overlaps them
+well on CPU-only infrastructure.  :class:`SweepExecutor` adds:
+
+  * **in-flight deduplication** — two submissions of the same
+    (cell, config) share one evaluation (on top of the evaluator's own
+    compile-level dedup in core/trial.CompileCache);
+  * **order-preserving gather** — ``map()`` returns results in
+    submission order, so callers log trials deterministically and
+    :class:`~repro.core.trial.TrialRunner` accounting (the paper's
+    <=10-runs budget) is byte-identical to the sequential path;
+  * **speculative prefetch** — fire-and-forget cache warming for
+    candidates a sequential driver will probably evaluate next
+    (hillclimb lookahead); results land in the evaluator's caches, so
+    a wrong guess costs only idle worker time, never correctness.
+
+Evaluation faults surface as crashed TrialResults (cost = inf), exactly
+like the sequential evaluator's behaviour.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.params import TunableConfig
+from repro.core.trial import TrialResult, Workload
+
+
+def default_workers() -> int:
+    """Worker count: REPRO_TRIAL_WORKERS env var, else min(8, cores-1),
+    floored at 2 — compiles release the GIL, so even small boxes overlap
+    one compile with one analytic recompute."""
+    env = os.environ.get("REPRO_TRIAL_WORKERS")
+    if env:
+        return max(1, int(env))
+    return max(2, min(8, (os.cpu_count() or 2) - 1))
+
+
+def _trial_key(wl: Workload, rt: TunableConfig) -> Tuple:
+    return (wl.key(), tuple(sorted(rt.as_dict().items())))
+
+
+def _safe_eval(evaluator, wl: Workload, rt: TunableConfig) -> TrialResult:
+    """Evaluator contract: never raise — a fault is a crashed trial."""
+    try:
+        return evaluator(wl, rt)
+    except Exception as e:
+        return TrialResult(cost_s=float("inf"), crashed=True,
+                           error=f"{type(e).__name__}: {e}"[:500])
+
+
+class SweepExecutor:
+    """Evaluate independent (workload, config) candidates concurrently."""
+
+    def __init__(self, evaluator: Callable[[Workload, TunableConfig],
+                                           TrialResult],
+                 max_workers: Optional[int] = None):
+        self.evaluator = evaluator
+        self.max_workers = max_workers or default_workers()
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.max_workers,
+            thread_name_prefix="sweep")
+        self._lock = threading.Lock()
+        self._inflight: Dict[Tuple, Future] = {}
+        self.n_evals = 0            # distinct evaluations actually run
+        self.n_submitted = 0        # submissions incl. deduplicated ones
+
+    # ------------------------------------------------------------ core
+    def submit(self, wl: Workload, rt: TunableConfig) -> Future:
+        """Schedule one evaluation; identical in-flight candidates are
+        coalesced onto the same future."""
+        key = _trial_key(wl, rt)
+        with self._lock:
+            self.n_submitted += 1
+            fut = self._inflight.get(key)
+            if fut is not None:
+                return fut
+            fut = self._pool.submit(self._run, key, wl, rt)
+            self._inflight[key] = fut
+            self.n_evals += 1
+            return fut
+
+    def _run(self, key: Tuple, wl: Workload, rt: TunableConfig
+             ) -> TrialResult:
+        try:
+            return _safe_eval(self.evaluator, wl, rt)
+        finally:
+            with self._lock:
+                self._inflight.pop(key, None)
+
+    def map(self, wl: Workload, configs: Sequence[TunableConfig]
+            ) -> List[TrialResult]:
+        """Evaluate candidates concurrently; results in input order."""
+        futs = [self.submit(wl, rt) for rt in configs]
+        return [f.result() for f in futs]
+
+    def prefetch(self, wl: Workload, configs: Iterable[TunableConfig]
+                 ) -> None:
+        """Fire-and-forget warm-up of the evaluator caches (speculative
+        lookahead); never blocks, never raises."""
+        for rt in configs:
+            self.submit(wl, rt)
+
+    # ------------------------------------------------------- lifecycle
+    def shutdown(self, wait: bool = True,
+                 cancel_futures: bool = False) -> None:
+        self._pool.shutdown(wait=wait, cancel_futures=cancel_futures)
+
+    def __enter__(self) -> "SweepExecutor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"submitted": self.n_submitted, "evals": self.n_evals,
+                    "deduped": self.n_submitted - self.n_evals,
+                    "workers": self.max_workers}
+
+
+def run_trials(runner, candidates: Sequence[Tuple[TunableConfig, str,
+                                                  Optional[dict]]],
+               executor: Optional[SweepExecutor] = None
+               ) -> List[TrialResult]:
+    """Evaluate a batch of candidates for a TrialRunner.
+
+    With an executor the evaluations overlap; the runner's log gains one
+    entry per candidate *in input order* either way.  Both paths apply
+    the same fault conversion (an evaluator exception = crashed trial),
+    so run counting, log layout and results are identical regardless of
+    how the batch was scheduled.
+    """
+    if executor is None:
+        return [runner.record(rt, name,
+                              _safe_eval(runner.evaluator,
+                                         runner.workload, rt), delta)
+                for rt, name, delta in candidates]
+    if executor.evaluator is not runner.evaluator:
+        raise ValueError("executor wraps a different evaluator than the "
+                         "runner — results would bypass the runner's "
+                         "evaluator")
+    futs = [executor.submit(runner.workload, rt)
+            for rt, name, delta in candidates]
+    results = [f.result() for f in futs]
+    for (rt, name, delta), res in zip(candidates, results):
+        runner.record(rt, name, res, delta)
+    return results

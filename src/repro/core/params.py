@@ -37,6 +37,36 @@ DOMAINS: Dict[str, Tuple[Any, ...]] = {
 }
 
 
+# ------------------------------------------------------- knob partition
+# Which TunableConfig fields can change the lowered/compiled HLO of a
+# step function, vs. which only ever enter the ANALYTIC roofline terms.
+# The RooflineEvaluator's calibration compiles force attn_impl="xla"
+# (core/trial.py), and the Pallas VMEM tile sizes exist only inside the
+# Pallas kernel — so those three knobs never reach the compiled program
+# and a sweep over them can reuse a single compile.
+COMPILE_KNOBS: Tuple[str, ...] = (
+    "compute_dtype", "shard_strategy", "grad_comm_dtype", "comm_codec",
+    "remat_policy", "microbatches", "fuse_grad_collectives",
+    "kv_cache_dtype", "remat_save_dtype", "donate_buffers",
+    "attn_tp_fallback", "seq_parallel", "unroll_layers",
+)
+ANALYTIC_KNOBS: Tuple[str, ...] = ("attn_block_q", "attn_block_kv",
+                                   "attn_impl")
+
+# Where each conditionally-relevant compile knob actually reaches the
+# step function (evidence for the compile_key() canonicalizations):
+KNOB_REACH: Dict[str, str] = {
+    "grad_comm_dtype":      "train only; explicit path (gradsync) only",
+    "fuse_grad_collectives": "train only; explicit path (gradsync) only",
+    "microbatches":         "train only (stepfn.build_train_step)",
+    "remat_policy":         "train; prefill via remat.to_carry dtype",
+    "remat_save_dtype":     "train; prefill via remat.to_carry dtype",
+    "kv_cache_dtype":       "prefill/decode cache ops; not ssm family",
+    "comm_codec":           "moe family only (moe._encode_wire)",
+    "donate_buffers":       "train/decode donate_argnums; not prefill",
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class TunableConfig:
     """One point in the 12-knob configuration space (Sec. 3 analogue)."""
@@ -77,6 +107,70 @@ class TunableConfig:
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
 
+    def compile_key(self, kind: str = None, family: str = None
+                    ) -> Tuple[Tuple[str, Any], ...]:
+        """Projection onto the knobs that can reach the compiled HLO.
+
+        Two configs with equal compile keys lower+compile to identical
+        programs for a (kind, family) cell, so an evaluator may share
+        one compile between them and recompute only the analytic
+        roofline terms (the trial-throughput engine, core/trial.py).
+
+        ``ANALYTIC_KNOBS`` are always dropped.  When the cell context is
+        given, knobs that provably never reach that cell's step function
+        are canonicalized to their defaults (see KNOB_REACH below for
+        the per-knob evidence).
+        """
+        d = {k: getattr(self, k) for k in COMPILE_KNOBS}
+        dflt = _DEFAULT_CFG
+        if kind is not None and kind != "train":
+            # serve steps build no gradient/optimizer machinery
+            # (runtime/stepfn.py build_prefill_step / build_decode_step)
+            for k in ("grad_comm_dtype", "fuse_grad_collectives",
+                      "microbatches"):
+                d[k] = getattr(dflt, k)
+            if kind == "prefill" and family in ("dense", "vlm", "moe"):
+                # transformer prefill scans through remat.to_carry: the
+                # remat pair only matters via the derived carry dtype
+                d["remat_save_dtype"] = _carry_dtype(
+                    d["remat_policy"], d["remat_save_dtype"],
+                    d["compute_dtype"])
+                d["remat_policy"] = "_carry"
+            elif kind == "prefill" and family == "encdec":
+                # encdec prefill runs the full encoder stack through
+                # remat.wrap_layer + to_carry — keep the pair as-is
+                pass
+            else:
+                # decode bodies (and ssm/hybrid prefills) never touch
+                # the remat machinery
+                d["remat_policy"] = dflt.remat_policy
+                d["remat_save_dtype"] = dflt.remat_save_dtype
+            if kind == "prefill":
+                # build_prefill_step jits with no donate_argnums
+                d["donate_buffers"] = dflt.donate_buffers
+        if kind == "train":
+            # the train step builds no KV cache
+            d["kv_cache_dtype"] = dflt.kv_cache_dtype
+        if family is not None:
+            if family != "moe":
+                # the wire codec exists only in the MoE all-to-all
+                d["comm_codec"] = dflt.comm_codec
+            if family == "ssm":
+                # xlstm keeps f32 recurrent state, no attention KV cache
+                d["kv_cache_dtype"] = dflt.kv_cache_dtype
+            # grad-comm knobs are real only on the explicit path
+            # (runtime/gradsync.explicit_applicable)
+            if not (d["shard_strategy"] in ("dp", "fsdp")
+                    and family != "moe"):
+                d["grad_comm_dtype"] = dflt.grad_comm_dtype
+                d["fuse_grad_collectives"] = dflt.fuse_grad_collectives
+            elif (d["shard_strategy"] != "dp"
+                  and d["grad_comm_dtype"] == "int8_ef"):
+                d["grad_comm_dtype"] = "bfloat16"   # stepfn fallback
+        if d["remat_policy"] == "none":
+            d["remat_save_dtype"] = dflt.remat_save_dtype  # nothing saved
+        return tuple((k, d[k]) for k in COMPILE_KNOBS)
+
     def validate(self) -> None:
         for k, dom in DOMAINS.items():
             v = getattr(self, k)
@@ -87,6 +181,21 @@ class TunableConfig:
         ds = [f"{k}={v!r}" for k, v in other.as_dict().items()
               if self.as_dict().get(k) != v]
         return ", ".join(ds) if ds else "(no change)"
+
+
+_DEFAULT_CFG = TunableConfig()
+
+_DTYPE_SIZE = {"float32": 4, "bfloat16": 2, "float16": 2}
+
+
+def _carry_dtype(remat_policy: str, save_dtype: str, compute_dtype: str
+                 ) -> str:
+    """Mirror of runtime/remat.carry_dtype on knob strings."""
+    if remat_policy == "none":
+        return compute_dtype
+    if _DTYPE_SIZE.get(save_dtype, 4) < _DTYPE_SIZE.get(compute_dtype, 4):
+        return save_dtype
+    return compute_dtype
 
 
 # Spark parameter <-> knob documentation (DESIGN.md §2.1, Table 2 rows)

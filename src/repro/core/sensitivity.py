@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional
 
+from repro.core.executor import SweepExecutor, run_trials
 from repro.core.params import (PARAM_DOCS, SENSITIVITY_SWEEP, TunableConfig)
 from repro.core.trial import TrialRunner, Workload
 
@@ -44,25 +45,35 @@ class SensitivityReport:
 
 
 def run_sensitivity(runner: TrialRunner, baseline: TunableConfig,
-                    knobs: Optional[Dict[str, tuple]] = None
+                    knobs: Optional[Dict[str, tuple]] = None,
+                    executor: Optional[SweepExecutor] = None
                     ) -> SensitivityReport:
+    """OFAT sweep.  With an ``executor`` the (mutually independent)
+    candidate evaluations overlap; the report, trial log and run count
+    are identical to the sequential path."""
     knobs = knobs or SENSITIVITY_SWEEP
     base_res = runner.run(baseline, "baseline", {})
     base_cost = base_res.cost_s
-    impacts: List[KnobImpact] = []
+    candidates, spans = [], []
     for knob, values in knobs.items():
         default = getattr(baseline, knob)
-        devs, tested, crashes = [], [], 0
-        for v in values:
-            if v == default:
-                continue
-            cand = baseline.replace(**{knob: v})
-            res = runner.run(cand, f"ofat:{knob}", {knob: v})
-            tested.append(v)
+        tested = [v for v in values if v != default]
+        spans.append((knob, tested))
+        candidates.extend(
+            (baseline.replace(**{knob: v}), f"ofat:{knob}", {knob: v})
+            for v in tested)
+    results = run_trials(runner, candidates, executor)
+    impacts: List[KnobImpact] = []
+    entries = runner.log[len(runner.log) - len(candidates):]
+    it = iter(zip(results, entries))
+    for knob, tested in spans:
+        devs, crashes = [], 0
+        for _ in tested:
+            res, entry = next(it)
             if res.crashed:
                 crashes += 1
                 devs.append(float("nan"))
-                runner.log[-1].note = "crashed"
+                entry.note = "crashed"
             else:
                 devs.append(100.0 * (res.cost_s - base_cost) / base_cost)
         impacts.append(KnobImpact(knob, PARAM_DOCS.get(knob, ""), tested,

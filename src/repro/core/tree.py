@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence
 
+from repro.core.executor import SweepExecutor, run_trials
 from repro.core.params import TunableConfig
 from repro.core.trial import TrialRunner, TrialResult, Workload
 
@@ -88,8 +89,14 @@ class TuningReport:
 
 def run_tuning(runner: TrialRunner, baseline: TunableConfig,
                threshold: float = 0.05,
-               stages: Optional[List[Stage]] = None) -> TuningReport:
-    """Walk the tree: evaluate alternatives, keep what clears the threshold."""
+               stages: Optional[List[Stage]] = None,
+               executor: Optional[SweepExecutor] = None) -> TuningReport:
+    """Walk the tree: evaluate alternatives, keep what clears the threshold.
+
+    A stage's alternatives are independent of each other (all derived
+    from the same incumbent), so with an ``executor`` they evaluate
+    concurrently; the trial log, run budget and accept/reject decisions
+    are identical to the sequential walk."""
     kind = runner.workload.shp.kind
     stages = stages if stages is not None else default_tree(kind)
     incumbent = baseline
@@ -103,16 +110,17 @@ def run_tuning(runner: TrialRunner, baseline: TunableConfig,
     for stage in stages:
         if runner.n_trials >= MAX_TRIALS:
             break
-        cand_results = []
-        for alt in stage.alternatives:
-            if runner.n_trials >= MAX_TRIALS:
-                break
-            # skip alternatives that are no-ops on the incumbent
-            if all(getattr(incumbent, k) == v for k, v in alt.items()):
-                continue
-            cand = incumbent.replace(**alt)
-            res = runner.run(cand, stage.name, alt)
-            cand_results.append((alt, cand, res))
+        # skip alternatives that are no-ops on the incumbent; the run
+        # budget admits only as many candidates as trials remain
+        runnable = [alt for alt in stage.alternatives
+                    if not all(getattr(incumbent, k) == v
+                               for k, v in alt.items())]
+        runnable = runnable[:MAX_TRIALS - runner.n_trials]
+        cands = [(incumbent.replace(**alt), stage.name, alt)
+                 for alt in runnable]
+        results = run_trials(runner, cands, executor)
+        cand_results = [(alt, cand, res) for (cand, _, alt), res
+                        in zip(cands, results)]
         if not cand_results:
             continue
         viable = [(a, c, r) for a, c, r in cand_results if not r.crashed]

@@ -14,19 +14,20 @@ from typing import Optional, Tuple
 import numpy as np
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import axis_types_kw
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_types_kw(len(axes)))
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     """Arbitrary mesh (elastic remesh, tests)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_types_kw(len(axes)))
 
 
 def make_host_mesh(model: Optional[int] = None) -> Mesh:
@@ -42,5 +43,4 @@ def make_host_mesh(model: Optional[int] = None) -> Mesh:
                 break
     data = n // model
     devs = np.array(jax.devices()[:data * model]).reshape(data, model)
-    return Mesh(devs, ("data", "model"),
-                axis_types=(AxisType.Auto, AxisType.Auto))
+    return Mesh(devs, ("data", "model"), **axis_types_kw(2))

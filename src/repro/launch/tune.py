@@ -21,14 +21,17 @@ RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "tuning"
 
 def tune_cell(arch: str, shape: str, multi_pod: bool = False,
               threshold: float = 0.05, baseline_overrides=None):
+    from repro.core.executor import SweepExecutor
     wl = Workload(arch, shape, multi_pod)
-    runner = TrialRunner(wl, RooflineEvaluator())
     # attn_impl=pallas is infrastructure (the execution engine's kernel),
     # not one of the 12 tunables — see DESIGN.md §2.2
     baseline = default_config(shard_strategy="fsdp_tp",
                               attn_impl="pallas",
                               **(baseline_overrides or {}))
-    rep = run_tuning(runner, baseline, threshold=threshold)
+    with SweepExecutor(RooflineEvaluator()) as executor:
+        runner = TrialRunner(wl, executor.evaluator)
+        rep = run_tuning(runner, baseline, threshold=threshold,
+                         executor=executor)
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     (RESULTS_DIR / f"{wl.key()}.json").write_text(
         json.dumps(rep.__dict__, indent=1, default=str))

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.params import TunableConfig
 from repro.models import layers as L
 
@@ -181,7 +182,7 @@ def moe_mlp(p, x, cfg, rt: TunableConfig, rules):
             return y.reshape(B_local, S_local, d), aux
 
         xspec = P(batch_axes or None, "model", None)
-        f = jax.shard_map(
+        f = compat.shard_map(
             body, mesh=mesh,
             in_specs=(xspec, P(None, None),
                       P("model", fsdp_in_mesh or None, None),
@@ -218,7 +219,7 @@ def moe_mlp(p, x, cfg, rt: TunableConfig, rules):
         return y.reshape(B_local, S, d), aux
 
     xspec = P(batch_axes or None, None, None)
-    f = jax.shard_map(
+    f = compat.shard_map(
         body_g, mesh=mesh,
         in_specs=(xspec, P(None, None),
                   P("model", fsdp_in_mesh or None, None),

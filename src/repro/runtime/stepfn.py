@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.params import TunableConfig
 from repro.models import layers as L
@@ -162,10 +163,10 @@ def build_train_step(cfg: ArchConfig, shape: ShapeConfig, rt: TunableConfig,
                                                      - 1)))
                       for k in b_shapes}
         ef_spec = P(data_axes, None)
-        sm = jax.shard_map(local_grads, mesh=mesh,
-                           in_specs=(p_specs, in_b_specs, ef_spec),
-                           out_specs=(P(), p_specs, ef_spec),
-                           check_vma=False)
+        sm = compat.shard_map(local_grads, mesh=mesh,
+                              in_specs=(p_specs, in_b_specs, ef_spec),
+                              out_specs=(P(), p_specs, ef_spec),
+                              check_vma=False)
 
         if ef:
             # augment the optimizer state with the per-shard EF residual

@@ -1,0 +1,193 @@
+"""Trial-throughput engine: knob partition, two-level compile cache,
+cached-vs-naive cost identity.
+
+The load-bearing invariant: the cache may only change HOW MANY compiles
+a sweep pays for, never any observed cost — configs sharing a
+compile_key() must compile to identical programs."""
+import dataclasses
+import threading
+
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import ShapeConfig
+from repro.core.params import (ANALYTIC_KNOBS, COMPILE_KNOBS, DOMAINS,
+                               TunableConfig, default_config)
+from repro.core.trial import CompileCache, RooflineEvaluator, Workload
+
+BASE = default_config(shard_strategy="fsdp_tp")
+
+
+# ------------------------------------------------------------ partition
+def test_partition_covers_every_field():
+    fields = {f.name for f in dataclasses.fields(TunableConfig)}
+    assert set(COMPILE_KNOBS) | set(ANALYTIC_KNOBS) == fields
+    assert not set(COMPILE_KNOBS) & set(ANALYTIC_KNOBS)
+
+
+@pytest.mark.parametrize("knob", ANALYTIC_KNOBS)
+def test_analytic_knob_flip_shares_key(knob):
+    """Every analytic-only knob flip keeps the compile key (any cell)."""
+    dom = DOMAINS.get(knob, ("xla", "pallas"))
+    alt = next(v for v in dom if v != getattr(BASE, knob))
+    for kind in ("train", "prefill", "decode"):
+        for family in ("dense", "moe", "ssm"):
+            assert (BASE.replace(**{knob: alt}).compile_key(kind, family)
+                    == BASE.compile_key(kind, family))
+
+
+ALWAYS_COMPILE = ("compute_dtype", "shard_strategy", "attn_tp_fallback",
+                  "seq_parallel", "unroll_layers")
+
+
+@pytest.mark.parametrize("knob", ALWAYS_COMPILE)
+def test_structural_knob_flip_misses(knob):
+    """Knobs that reach every step function always change the key."""
+    dom = DOMAINS.get(knob, (False, True))
+    alt = next(v for v in dom if v != getattr(BASE, knob))
+    for kind in ("train", "prefill", "decode"):
+        for family in ("dense", "moe", "ssm"):
+            assert (BASE.replace(**{knob: alt}).compile_key(kind, family)
+                    != BASE.compile_key(kind, family))
+
+
+def test_conditional_knob_reach():
+    """Spot-check the per-cell canonicalizations against KNOB_REACH."""
+    # train-only knobs vanish from serve keys but not train keys
+    for knob, alt in [("microbatches", 4), ("remat_policy", "full"),
+                      ("grad_comm_dtype", "bfloat16")]:
+        flip = BASE.replace(shard_strategy="fsdp", **{knob: alt})
+        base = BASE.replace(shard_strategy="fsdp")
+        assert flip.compile_key("train", "dense") \
+            != base.compile_key("train", "dense")
+        assert flip.compile_key("decode", "dense") \
+            == base.compile_key("decode", "dense")
+    # KV dtype: serve-only, and never for the ssm family
+    flip = BASE.replace(kv_cache_dtype="int8")
+    assert flip.compile_key("decode", "dense") \
+        != BASE.compile_key("decode", "dense")
+    assert flip.compile_key("train", "dense") \
+        == BASE.compile_key("train", "dense")
+    assert flip.compile_key("decode", "ssm") \
+        == BASE.compile_key("decode", "ssm")
+    # MoE wire codec: moe family only
+    flip = BASE.replace(comm_codec="int8")
+    assert flip.compile_key("train", "moe") \
+        != BASE.compile_key("train", "moe")
+    assert flip.compile_key("train", "dense") \
+        == BASE.compile_key("train", "dense")
+    # grad-comm knobs are no-ops off the explicit path (fsdp_tp)
+    flip = BASE.replace(grad_comm_dtype="bfloat16",
+                        fuse_grad_collectives=True)
+    assert flip.compile_key("train", "dense") \
+        == BASE.compile_key("train", "dense")
+    # prefill carry dtype: bf16 save changes the key under 'dots' ...
+    flip = BASE.replace(remat_save_dtype="bfloat16")
+    assert flip.compile_key("prefill", "dense") \
+        != BASE.compile_key("prefill", "dense")
+    # ... but not under 'none' (nothing is saved, carry = compute dtype)
+    assert flip.replace(remat_policy="none").compile_key("prefill", "dense") \
+        == BASE.replace(remat_policy="none").compile_key("prefill", "dense")
+    # encdec prefill runs the encoder through the remat machinery:
+    # both remat knobs stay in the key verbatim
+    assert flip.compile_key("prefill", "encdec") \
+        != BASE.compile_key("prefill", "encdec")
+    assert BASE.replace(remat_policy="full").compile_key("prefill", "encdec") \
+        != BASE.compile_key("prefill", "encdec")
+    # ...but its decode path never touches remat
+    assert BASE.replace(remat_policy="full").compile_key("decode", "encdec") \
+        == BASE.compile_key("decode", "encdec")
+
+
+# ---------------------------------------------------------- cache layer
+def test_compile_cache_lru_and_disk(tmp_path):
+    cc = CompileCache(directory=tmp_path, mem_entries=2)
+    calls = []
+    val = cc.get_or_build("a", lambda: calls.append(1) or {"x": 1})
+    assert val == {"x": 1} and len(calls) == 1
+    assert cc.get_or_build("a", lambda: calls.append(1) or {"x": 2}) \
+        == {"x": 1}
+    assert len(calls) == 1
+    # fill past mem capacity; disk still serves evicted keys
+    cc.get_or_build("b", lambda: {"x": "b"})
+    cc.get_or_build("c", lambda: {"x": "c"})
+    assert "a" not in cc._mem           # evicted from LRU
+    assert cc.get_or_build("a", lambda: {"x": "FRESH"}) == {"x": 1}
+    # a fresh cache over the same dir = level-2 hit, no rebuild
+    cc2 = CompileCache(directory=tmp_path)
+    assert cc2.get_or_build("c", lambda: {"x": "FRESH"}) == {"x": "c"}
+    assert cc2.stats()["hits"] == 1 and cc2.stats()["misses"] == 0
+
+
+def test_compile_cache_inflight_dedup():
+    cc = CompileCache(use_disk=False)
+    gate = threading.Event()
+    calls = []
+
+    def slow_build():
+        calls.append(1)
+        gate.wait(5)
+        return {"v": len(calls)}
+
+    out = [None] * 4
+    def worker(i):
+        out[i] = cc.get_or_build("k", slow_build)
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in ts:
+        t.start()
+    gate.set()
+    for t in ts:
+        t.join()
+    assert calls == [1]                 # one build for four callers
+    assert all(o == {"v": 1} for o in out)
+
+
+# ------------------------------------------- evaluator cost identity
+class ReducedWorkload(Workload):
+    """Reduced config + tiny shape on the host mesh (fast compiles)."""
+    @property
+    def cfg(self):
+        return get_reduced(self.arch)
+
+    @property
+    def shp(self):
+        return ShapeConfig("mini", 64, 4, self._kind)
+
+    def __init__(self, arch, kind="train"):
+        super().__init__(arch, f"mini_{kind}")
+        self._kind = kind
+
+
+def _host_mesh_factory(*, multi_pod=False):
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh()
+
+
+@pytest.mark.parametrize("kind", ["train", "prefill"])
+def test_cached_vs_uncached_costs_identical(tmp_path, kind):
+    """Regression: the engine never changes an observed cost.  Sweep a
+    mix of analytic and compile-relevant knobs on a reduced cell and
+    compare against the compile-every-time evaluator bit for bit."""
+    wl = ReducedWorkload("smollm-135m", kind)
+    naive = RooflineEvaluator(mesh_factory=_host_mesh_factory,
+                              use_cache=False)
+    engine = RooflineEvaluator(
+        mesh_factory=_host_mesh_factory,
+        compile_cache=CompileCache(directory=tmp_path))
+    base = default_config()
+    sweep = [base,
+             base.replace(attn_block_q=512, attn_block_kv=512),
+             base.replace(comm_codec="int8"),
+             base.replace(kv_cache_dtype="int8"),
+             base.replace(microbatches=2),
+             base.replace(compute_dtype="bfloat16")]
+    for rt in sweep:
+        rn, re_ = naive(wl, rt), engine(wl, rt)
+        assert rn.cost_s == re_.cost_s, rt.describe_delta(base)
+        assert rn.crashed == re_.crashed
+        assert rn.roofline == re_.roofline
+    # the engine shared compiles: strictly fewer than 4 per trial
+    assert engine.total_compiles < naive.total_compiles
+    # analytic-only flips were free
+    assert engine.total_compiles <= 4 * len(
+        {rt.compile_key(wl.shp.kind, wl.cfg.family) for rt in sweep})

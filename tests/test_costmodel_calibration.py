@@ -20,8 +20,8 @@ def _scan_flops(n, unroll):
         return y
     x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
     ws = jax.ShapeDtypeStruct((n, 64, 64), jnp.float32)
-    ca = jax.jit(f).lower(x, ws).compile().cost_analysis()
-    return float(ca["flops"])
+    compiled = jax.jit(f).lower(x, ws).compile()
+    return float(costmodel.cost_analysis_dict(compiled)["flops"])
 
 
 def test_while_body_counted_once():

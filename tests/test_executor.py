@@ -1,0 +1,128 @@
+"""Parallel sweep executor: ordering, dedup, fault isolation, and
+equivalence of parallel vs sequential sweeps (log + budget accounting)."""
+import threading
+import time
+
+import pytest
+
+from repro.core.executor import SweepExecutor, run_trials
+from repro.core.params import default_config
+from repro.core.sensitivity import run_sensitivity
+from repro.core.tree import MAX_TRIALS, run_tuning
+from repro.core.trial import TrialResult, TrialRunner, Workload
+
+WL = Workload("smollm-135m", "train_4k")
+
+
+class CountingEvaluator:
+    """Deterministic cost surface + thread-safe call accounting."""
+
+    def __init__(self, delay=0.0, crash_on=None, raise_on=None):
+        self.calls = []
+        self.lock = threading.Lock()
+        self.delay = delay
+        self.crash_on = crash_on or {}
+        self.raise_on = raise_on or {}
+
+    def __call__(self, wl, rt):
+        with self.lock:
+            self.calls.append(rt)
+        if self.delay:
+            time.sleep(self.delay)
+        for k, v in self.raise_on.items():
+            if getattr(rt, k) == v:
+                raise RuntimeError("boom")
+        for k, v in self.crash_on.items():
+            if getattr(rt, k) == v:
+                return TrialResult(cost_s=float("inf"), crashed=True)
+        cost = 100.0 + 7.0 * rt.microbatches \
+            - (30.0 if rt.compute_dtype == "bfloat16" else 0.0)
+        return TrialResult(cost_s=cost)
+
+
+def test_map_preserves_order_and_values():
+    ev = CountingEvaluator(delay=0.01)
+    base = default_config()
+    cfgs = [base.replace(microbatches=m) for m in (1, 2, 4)] \
+        + [base.replace(compute_dtype="bfloat16")]
+    with SweepExecutor(ev, max_workers=4) as ex:
+        results = ex.map(WL, cfgs)
+    assert [r.cost_s for r in results] == [107.0, 114.0, 128.0, 77.0]
+
+
+def test_inflight_dedup_single_evaluation():
+    ev = CountingEvaluator(delay=0.05)
+    cfg = default_config()
+    with SweepExecutor(ev, max_workers=4) as ex:
+        futs = [ex.submit(WL, cfg) for _ in range(6)]
+        results = [f.result() for f in futs]
+    assert len(ev.calls) == 1
+    assert ex.stats()["deduped"] == 5
+    assert all(r.cost_s == 107.0 for r in results)
+
+
+def test_evaluator_exception_becomes_crashed_result():
+    ev = CountingEvaluator(raise_on={"microbatches": 2})
+    base = default_config()
+    with SweepExecutor(ev, max_workers=2) as ex:
+        good, bad = ex.map(WL, [base, base.replace(microbatches=2)])
+    assert not good.crashed
+    assert bad.crashed and bad.cost_s == float("inf")
+    assert "boom" in bad.error
+
+
+def test_prefetch_warms_without_blocking():
+    ev = CountingEvaluator(delay=0.05)
+    base = default_config()
+    with SweepExecutor(ev, max_workers=2) as ex:
+        t0 = time.time()
+        ex.prefetch(WL, [base.replace(microbatches=m) for m in (1, 2, 4)])
+        assert time.time() - t0 < 0.04      # fire-and-forget
+        # a later submit of a prefetched config dedups onto its future
+        res = ex.submit(WL, base.replace(microbatches=2)).result()
+    assert res.cost_s == 114.0
+    assert len(ev.calls) == 3
+
+
+def test_run_trials_rejects_foreign_executor():
+    runner = TrialRunner(WL, CountingEvaluator())
+    with SweepExecutor(CountingEvaluator()) as ex:
+        with pytest.raises(ValueError):
+            run_trials(runner, [(default_config(), "x", None)], ex)
+
+
+@pytest.mark.parametrize("crash", [{}, {"remat_policy": "full"}])
+def test_sensitivity_parallel_equals_sequential(crash):
+    base = default_config(shard_strategy="fsdp_tp")
+    seq_runner = TrialRunner(WL, CountingEvaluator(crash_on=crash))
+    seq = run_sensitivity(seq_runner, base)
+    par_ev = CountingEvaluator(crash_on=crash)
+    with SweepExecutor(par_ev, max_workers=4) as ex:
+        par_runner = TrialRunner(WL, par_ev)
+        par = run_sensitivity(par_runner, base, executor=ex)
+    assert par.n_trials == seq.n_trials
+    assert par.baseline_cost == seq.baseline_cost
+    for a, b in zip(seq.impacts, par.impacts):
+        assert (a.knob, a.values, a.crashes) == (b.knob, b.values, b.crashes)
+        assert a.deviations_pct == pytest.approx(b.deviations_pct,
+                                                 nan_ok=True)
+    # identical log layout (names + notes), deterministic order
+    assert [(e.name, e.note) for e in seq_runner.log] \
+        == [(e.name, e.note) for e in par_runner.log]
+
+
+@pytest.mark.parametrize("crash", [{}, {"remat_policy": "full"}])
+def test_tree_parallel_equals_sequential(crash):
+    base = default_config(shard_strategy="fsdp_tp")
+    seq_runner = TrialRunner(WL, CountingEvaluator(crash_on=crash))
+    seq = run_tuning(seq_runner, base, threshold=0.05)
+    par_ev = CountingEvaluator(crash_on=crash)
+    with SweepExecutor(par_ev, max_workers=4) as ex:
+        par_runner = TrialRunner(WL, par_ev)
+        par = run_tuning(par_runner, base, threshold=0.05, executor=ex)
+    assert par.n_trials == seq.n_trials <= MAX_TRIALS
+    assert par.final_cost == seq.final_cost
+    assert par.final_config == seq.final_config
+    assert par.accepted == seq.accepted
+    assert [(e["name"], e["accepted"]) for e in seq.log] \
+        == [(e["name"], e["accepted"]) for e in par.log]

@@ -1,5 +1,6 @@
 """Fault-tolerance layer: straggler detection, preemption flow,
 elastic remesh + resharded restore, end-to-end restart equivalence."""
+import os
 import signal
 import subprocess
 import sys
@@ -86,7 +87,12 @@ def test_preempt_restart_equivalence(tmp_path):
              str(steps), "--ckpt-dir", str(ckdir)] + env_args,
             capture_output=True, text=True, timeout=600,
             env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                 "HOME": "/root"}, cwd="/root/repo")
+                 "HOME": "/root",
+                 # keep the child off the TPU driver: with libtpu baked
+                 # into the image but no hardware attached, backend
+                 # autodetection blocks for minutes before falling back
+                 "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
+            cwd="/root/repo")
         assert out.returncode == 0, out.stderr[-2000:]
         losses = [l for l in out.stdout.splitlines() if "loss" in l]
         return losses[-1].split("loss")[1].split()[0]

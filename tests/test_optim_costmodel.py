@@ -102,17 +102,24 @@ def test_cost_analysis_is_per_partition():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
-        mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import axis_types_kw
+        mesh = jax.make_mesh((4,), ("data",), **axis_types_kw(1))
         x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
         f = jax.jit(lambda a: a @ a,
                     in_shardings=NamedSharding(mesh, P("data", None)))
-        fl = f.lower(x).compile().cost_analysis()["flops"]
+        from repro.core.costmodel import cost_analysis_dict
+        fl = cost_analysis_dict(f.lower(x).compile())["flops"]
         # full matmul = 2*64^3; per-partition should be ~1/4
         print(fl / (2 * 64**3))
     """)
+    import os, pathlib
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ,
+               PYTHONPATH=str(root / "src"),
+               JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"))
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=300)
+                         text=True, timeout=300, env=env, cwd=str(root))
     assert out.returncode == 0, out.stderr[-1500:]
     ratio = float(out.stdout.strip().splitlines()[-1])
     assert 0.2 <= ratio <= 0.35, f"per-partition ratio {ratio}"

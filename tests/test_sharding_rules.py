@@ -1,7 +1,8 @@
-"""Property tests: sharding rules always emit valid PartitionSpecs
-(axes exist in the mesh, no axis reused, divisibility respected)."""
-import hypothesis as hp
-import hypothesis.strategies as st
+"""Property-style tests: sharding rules always emit valid PartitionSpecs
+(axes exist in the mesh, no axis reused, divisibility respected).
+
+Formerly hypothesis-based; rewritten as seeded parametrized sampling so
+the suite has no hard dependency on `hypothesis`."""
 import numpy as np
 import pytest
 
@@ -23,16 +24,27 @@ def fake_mesh(shape=(4, 2), axes=("data", "model")):
 
 MESH = fake_mesh()
 
-logical_names = st.sampled_from(list(PARAM_LOGICAL))
-dims = st.sampled_from([1, 2, 3, 4, 8, 9, 56, 64, 96, 100, 128])
+STRATEGIES = ["dp", "fsdp", "tp", "fsdp_tp"]
+DIMS = [1, 2, 3, 4, 8, 9, 56, 64, 96, 100, 128]
 
 
-@hp.settings(max_examples=80, deadline=None)
-@hp.given(strategy=st.sampled_from(["dp", "fsdp", "tp", "fsdp_tp"]),
-          logical=st.lists(logical_names, min_size=1, max_size=4),
-          shape=st.lists(dims, min_size=4, max_size=4))
+def _param_cases(n=80):
+    """Seeded analogue of the old hypothesis strategy."""
+    rng = np.random.RandomState(0)
+    names = list(PARAM_LOGICAL)
+    cases = []
+    for _ in range(n):
+        strategy = STRATEGIES[rng.randint(len(STRATEGIES))]
+        logical = tuple(names[rng.randint(len(names))]
+                        for _ in range(rng.randint(1, 5)))
+        shape = tuple(DIMS[rng.randint(len(DIMS))]
+                      for _ in range(len(logical)))
+        cases.append((strategy, logical, shape))
+    return cases
+
+
+@pytest.mark.parametrize("strategy,logical,shape", _param_cases())
 def test_param_spec_always_valid(strategy, logical, shape):
-    shape = shape[:len(logical)]
     rules = ShardingRules(mesh=MESH, strategy=strategy)
     spec = rules.param_spec(tuple(logical), tuple(shape))
     assert isinstance(spec, P)
@@ -48,9 +60,8 @@ def test_param_spec_always_valid(strategy, logical, shape):
         assert shape[i] % n == 0, f"dim {shape[i]} not divisible by {n}"
 
 
-@hp.settings(max_examples=40, deadline=None)
-@hp.given(strategy=st.sampled_from(["dp", "fsdp", "tp", "fsdp_tp"]),
-          batch=st.sampled_from([1, 2, 4, 8, 9, 64]))
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("batch", [1, 2, 4, 8, 9, 64])
 def test_act_spec_always_valid(strategy, batch):
     rules = ShardingRules(mesh=MESH, strategy=strategy)
     spec = rules.act_spec(("batch", None, "heads"), (batch, 16, 8))

@@ -5,6 +5,7 @@ Covers: dp == tp == fsdp numerical equivalence of a real train step,
 explicit-collective gradsync == auto path, and MoE expert-parallel
 all-to-all path == dense reference.
 """
+import os
 import subprocess
 import sys
 import textwrap
@@ -21,7 +22,12 @@ def run_sub(code: str, timeout=570) -> str:
     out = subprocess.run([sys.executable, "-c", prelude + textwrap.dedent(code)],
                          capture_output=True, text=True, timeout=timeout,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"}, cwd="/root/repo")
+                              "HOME": "/root",
+                              # keep children off TPU autodetection (no
+                              # hardware attached; blocks for minutes)
+                              "JAX_PLATFORMS": os.environ.get(
+                                  "JAX_PLATFORMS", "cpu")},
+                         cwd="/root/repo")
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
 

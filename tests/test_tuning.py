@@ -1,8 +1,12 @@
-"""Property-based tests (hypothesis) on the paper's tuner invariants."""
+"""Property-style tests on the paper's tuner invariants.
+
+Formerly hypothesis-based; rewritten as seeded parametrized cases so the
+suite has no hard dependency on `hypothesis` (satellite of the
+trial-throughput PR).  Each seed deterministically generates one
+synthetic cost surface over the knob space."""
 import math
 
-import hypothesis as hp
-import hypothesis.strategies as st
+import numpy as np
 import pytest
 
 from repro.core.params import (DOMAINS, SENSITIVITY_SWEEP, TunableConfig,
@@ -12,6 +16,8 @@ from repro.core.tree import MAX_TRIALS, default_tree, run_tuning
 from repro.core.trial import TrialResult, TrialRunner, Workload
 
 WL = Workload("smollm-135m", "train_4k")
+
+KNOB_WEIGHTS = [0.5, 0.7, 0.9, 0.97, 1.0, 1.05, 1.3, 2.0]
 
 
 def synth_evaluator(weights: dict, crash_on: dict):
@@ -28,26 +34,24 @@ def synth_evaluator(weights: dict, crash_on: dict):
     return ev
 
 
-knob_weight = st.sampled_from([0.5, 0.7, 0.9, 0.97, 1.0, 1.05, 1.3, 2.0])
-
-
-@st.composite
-def cost_surfaces(draw):
+def cost_surface(seed: int):
+    """Seeded analogue of the old hypothesis strategy: random weight per
+    non-default knob value, optional crash region."""
+    rng = np.random.RandomState(seed)
     weights = {}
     for k, dom in DOMAINS.items():
         for v in dom[1:]:
-            weights[(k, v)] = draw(knob_weight)
+            weights[(k, v)] = KNOB_WEIGHTS[rng.randint(len(KNOB_WEIGHTS))]
     crash = {}
-    if draw(st.booleans()):
+    if rng.rand() < 0.5:
         crash["remat_policy"] = "full"
     return weights, crash
 
 
-@hp.settings(max_examples=30, deadline=None)
-@hp.given(surface=cost_surfaces(),
-          threshold=st.sampled_from([0.0, 0.05, 0.10]))
-def test_tree_invariants(surface, threshold):
-    weights, crash = surface
+@pytest.mark.parametrize("seed", range(30))
+@pytest.mark.parametrize("threshold", [0.0, 0.05, 0.10])
+def test_tree_invariants(seed, threshold):
+    weights, crash = cost_surface(seed)
     runner = TrialRunner(WL, synth_evaluator(weights, crash))
     baseline = default_config(shard_strategy="fsdp_tp")
     rep = run_tuning(runner, baseline, threshold=threshold)
@@ -66,10 +70,9 @@ def test_tree_invariants(surface, threshold):
     assert costs[0] == rep.baseline_cost or math.isinf(rep.baseline_cost)
 
 
-@hp.settings(max_examples=20, deadline=None)
-@hp.given(surface=cost_surfaces())
-def test_sensitivity_invariants(surface):
-    weights, crash = surface
+@pytest.mark.parametrize("seed", range(20))
+def test_sensitivity_invariants(seed):
+    weights, crash = cost_surface(seed)
     runner = TrialRunner(WL, synth_evaluator(weights, crash))
     rep = run_sensitivity(runner, default_config(shard_strategy="fsdp_tp"))
     for imp in rep.impacts:
