@@ -1,4 +1,4 @@
-.PHONY: verify verify-fast bench-trials
+.PHONY: verify verify-fast bench-trials bench-campaign
 
 # tier-1: full suite, fail-fast (ROADMAP.md)
 verify:
@@ -11,3 +11,7 @@ verify-fast:
 # trial-throughput benchmark -> BENCH_trials.json
 bench-trials:
 	PYTHONPATH=src python -m benchmarks.bench_trials
+
+# campaign-throughput benchmark -> BENCH_campaign.json
+bench-campaign:
+	PYTHONPATH=src python -m benchmarks.bench_campaign

@@ -1,0 +1,180 @@
+"""Campaign-throughput benchmark: the concurrent multi-cell campaign
+(core/campaign.py) vs. the sequential per-cell tuning loop on the same
+batch of cells.
+
+Three arms, all cache-cold:
+
+  * ``sequential`` — the paper's per-cell loop: every cell tuned on its
+    own, one trial at a time, every trial paying its four calibration
+    compiles (no engine; what the pre-trial-throughput reproduction and
+    the naive methodology cost per cell);
+  * ``sequential_engine`` — one ``tune_cell``-style process per cell:
+    per-cell executor + per-cell cold compile cache, cells run one
+    after another (no state shared across cells — today's
+    one-cell-per-process reality);
+  * ``campaign`` — one shared executor + one shared compile cache, all
+    cells' tree cursors interleaved, per-cell checkpoints.
+
+Every arm must produce the same tuning decisions per cell
+(``identical_reports`` checks the deterministic projection of each
+report: costs, crash flags, accept/reject, final configs — the compile
+wall-clock accounting fields are environment noise and excluded).  The
+campaign arm is additionally resumed from its checkpoints to prove an
+interrupted campaign re-pays nothing (``resume.evaluated_trials == 0``).
+
+Results land in results/benchmarks/BENCH_campaign.json and a copy at
+the repo root (BENCH_campaign.json) for CI tracking.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_campaign [--cells ...]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import pathlib
+import shutil
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# Default batch: four cells over two archs (so arch-grouping matters),
+# all serving/small-train cells that compile quickly on CPU.
+DEFAULT_CELLS = ("smollm-135m:train_4k,smollm-135m:prefill_32k,"
+                 "xlstm-1.3b:prefill_32k,xlstm-1.3b:decode_32k")
+
+
+def _baseline(spec):
+    from repro.core.params import default_config
+    return default_config(shard_strategy="fsdp_tp", attn_impl="pallas")
+
+
+def run_sequential(cells, threshold, engine: bool, scratch: pathlib.Path):
+    """Per-cell loop.  engine=False: no cache, no executor (the naive
+    methodology).  engine=True: per-cell executor + per-cell cold cache
+    (today's one-process-per-cell path)."""
+    from repro.core.executor import SweepExecutor
+    from repro.core.tree import run_tuning
+    from repro.core.trial import CompileCache, RooflineEvaluator, \
+        TrialRunner
+    reports, compiles = {}, 0
+    t0 = time.time()
+    for spec in cells:
+        if engine:
+            cache = CompileCache(directory=scratch / spec.key())
+            ev = RooflineEvaluator(compile_cache=cache)
+            with SweepExecutor(ev) as ex:
+                runner = TrialRunner(spec.workload(), ev)
+                rep = run_tuning(runner, _baseline(spec),
+                                 threshold=threshold, executor=ex)
+        else:
+            ev = RooflineEvaluator(use_cache=False)
+            runner = TrialRunner(spec.workload(), ev)
+            rep = run_tuning(runner, _baseline(spec), threshold=threshold)
+        compiles += ev.total_compiles
+        reports[spec.key()] = rep
+    return reports, compiles, time.time() - t0
+
+
+def run_campaign(cells, threshold, scratch: pathlib.Path):
+    from repro.core.campaign import Campaign
+    from repro.core.trial import CompileCache, RooflineEvaluator
+    ev = RooflineEvaluator(
+        compile_cache=CompileCache(directory=scratch / "shared"))
+    camp = Campaign(cells, threshold=threshold, evaluator=ev,
+                    baseline_factory=_baseline,
+                    checkpoint_dir=scratch / "checkpoints")
+    t0 = time.time()
+    reports = camp.run()
+    wall = time.time() - t0
+    return reports, ev.total_compiles, wall, camp.last_stats, ev
+
+
+def main(cells_spec: str, threshold: float = 0.05):
+    from repro.core.campaign import parse_cells, tuning_fingerprint
+    from repro.core.trial import RooflineEvaluator
+    from repro.core.campaign import Campaign
+    cells = parse_cells(cells_spec)
+    print(f"batch: {len(cells)} cells "
+          f"({', '.join(c.key() for c in cells)})")
+
+    scratch = ROOT / "results" / "bench_campaign_scratch"
+    shutil.rmtree(scratch, ignore_errors=True)
+
+    naive_reports, naive_compiles, naive_wall = run_sequential(
+        cells, threshold, engine=False, scratch=scratch)
+    print(f"sequential (naive): {naive_compiles} compiles, "
+          f"{naive_wall:.0f}s")
+    seq_reports, seq_compiles, seq_wall = run_sequential(
+        cells, threshold, engine=True, scratch=scratch / "seq")
+    print(f"sequential (engine, per-cell): {seq_compiles} compiles, "
+          f"{seq_wall:.0f}s")
+    camp_reports, camp_compiles, camp_wall, camp_stats, ev = run_campaign(
+        cells, threshold, scratch=scratch / "camp")
+    print(f"campaign: {camp_compiles} compiles, {camp_wall:.0f}s")
+
+    # resume from the checkpoints: must replay everything, evaluate nothing
+    camp2 = Campaign(cells, threshold=threshold,
+                     evaluator=RooflineEvaluator(use_cache=False),
+                     baseline_factory=_baseline,
+                     checkpoint_dir=scratch / "camp" / "checkpoints")
+    resumed = camp2.run()
+    resume_ok = (camp2.last_stats["evaluated_trials"] == 0
+                 and all(tuning_fingerprint(resumed[k])
+                         == tuning_fingerprint(camp_reports[k])
+                         for k in camp_reports))
+
+    mismatches = []
+    for key in (c.key() for c in cells):
+        fps = {arm: tuning_fingerprint(r[key]) for arm, r in
+               [("naive", naive_reports), ("seq", seq_reports),
+                ("campaign", camp_reports)]}
+        if not (fps["naive"] == fps["seq"] == fps["campaign"]):
+            mismatches.append(key)
+
+    out = {
+        "cells": [c.key() for c in cells],
+        "threshold": threshold,
+        "trials_per_batch": sum(r.n_trials
+                                for r in camp_reports.values()),
+        "sequential": {"compiles": naive_compiles,
+                       "wall_s": round(naive_wall, 1),
+                       "cells_per_hour": round(
+                           len(cells) * 3600.0 / max(naive_wall, 1e-9), 1)},
+        "sequential_engine": {"compiles": seq_compiles,
+                              "wall_s": round(seq_wall, 1),
+                              "cells_per_hour": round(
+                                  len(cells) * 3600.0
+                                  / max(seq_wall, 1e-9), 1)},
+        "campaign": {"compiles": camp_compiles,
+                     "wall_s": round(camp_wall, 1),
+                     "cells_per_hour": camp_stats["cells_per_hour"],
+                     "trials": camp_stats["trials"],
+                     "cache": ev.compile_cache.stats()},
+        "compile_reduction_x": round(naive_compiles
+                                     / max(1, camp_compiles), 2),
+        "wall_speedup_x": round(naive_wall / max(1e-9, camp_wall), 2),
+        "interleave_speedup_x": round(seq_wall / max(1e-9, camp_wall), 2),
+        "resume_repaid_nothing": resume_ok,
+        "identical_reports": not mismatches,
+        "mismatches": mismatches,
+    }
+    res_dir = ROOT / "results" / "benchmarks"
+    res_dir.mkdir(parents=True, exist_ok=True)
+    (res_dir / "BENCH_campaign.json").write_text(json.dumps(out, indent=1))
+    (ROOT / "BENCH_campaign.json").write_text(json.dumps(out, indent=1))
+    shutil.rmtree(scratch, ignore_errors=True)
+    print(json.dumps(out, indent=1))
+    assert not mismatches, "campaign changed tuning decisions!"
+    assert resume_ok, "campaign resume re-paid trials!"
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default=DEFAULT_CELLS,
+                    help="comma-separated arch:shape[:pod|multipod]")
+    ap.add_argument("--threshold", type=float, default=0.05)
+    a = ap.parse_args()
+    main(a.cells, a.threshold)

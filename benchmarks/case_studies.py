@@ -68,26 +68,27 @@ def select_cells() -> List[Tuple[str, str, str]]:
 
 
 def run_case_studies(threshold: float = 0.05):
+    """The three selected cells as one concurrent campaign: their tree
+    walks interleave over one shared executor + compile cache, and each
+    cell's report is bit-identical to the historical per-cell loop."""
     from benchmarks.common import save
     from repro.core import report
-    from repro.core.executor import SweepExecutor
-    from repro.core.tree import run_tuning
-    from repro.core.trial import RooflineEvaluator, TrialRunner, Workload
+    from repro.core.campaign import Campaign, CellSpec
+    selected = select_cells()
+    camp = Campaign(
+        [CellSpec(arch, shape) for arch, shape, _ in selected],
+        threshold=threshold,
+        baseline_factory=lambda spec: default_config(
+            shard_strategy="fsdp_tp", attn_impl="pallas"),
+        checkpoint_dir=None)        # benchmarks re-tune every run
+    reports = camp.run()
     reps = []
-    # one executor for all three cells: stage alternatives overlap and
-    # the compile cache is shared across the studies
-    with SweepExecutor(RooflineEvaluator()) as executor:
-        for arch, shape, why in select_cells():
-            wl = Workload(arch, shape)
-            runner = TrialRunner(wl, executor.evaluator)
-            rep = run_tuning(runner,
-                             default_config(shard_strategy="fsdp_tp",
-                                            attn_impl="pallas"),
-                             threshold=threshold, executor=executor)
-            md = (f"Selection criterion: **{why}**\n\n"
-                  + report.tuning_markdown(rep))
-            save(f"case_study_{wl.key()}.md", md)
-            reps.append(rep)
+    for (arch, shape, why), (key, rep) in zip(selected, reports.items()):
+        md = (f"Selection criterion: **{why}**\n\n"
+              + report.tuning_markdown(rep))
+        save(f"case_study_{key}.md", md)
+        reps.append(rep)
+    save("case_study_campaign.md", report.campaign_markdown(reports))
     return reps
 
 

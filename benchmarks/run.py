@@ -54,7 +54,8 @@ def table2(reports):
 
 
 def case_studies():
-    """Sec. 5: the tuning tree applied to the three hillclimb cells."""
+    """Sec. 5: the tuning tree applied to the three hillclimb cells,
+    run as one concurrent campaign (core/campaign.py)."""
     from benchmarks.case_studies import run_case_studies
     return run_case_studies()
 
@@ -82,9 +83,19 @@ def main() -> None:
             avg.setdefault(i.knob, []).append(i.mean_abs_pct)
     top = max(avg, key=lambda k: sum(avg[k]) / len(avg[k]))
     print(f"table2_impact,0,avg_top_knob={top}")
-    for rep in case_studies():
+    studies = case_studies()
+    for rep in studies:
         print(f"case_study_{rep.workload},{rep.final_cost*1e6:.0f},"
               f"speedup=x{rep.speedup:.2f}_in_{rep.n_trials}_trials")
+    finite = [r.speedup for r in studies
+              if r.speedup == r.speedup and r.speedup != float("inf")]
+    gmean = 1.0
+    for s in finite:
+        gmean *= s
+    gmean **= 1.0 / max(1, len(finite))
+    print(f"campaign_case_studies,0,cells={len(studies)}"
+          f"_gmean_speedup=x{gmean:.2f}"
+          f"_trials={sum(r.n_trials for r in studies)}")
     from benchmarks.tree_variants import run_variants
     for row in run_variants()[0]:
         print(f"tree_variant_{row['variant']},"

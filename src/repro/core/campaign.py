@@ -1,0 +1,362 @@
+"""Campaign engine — tune every cell of the assignment in one batch.
+
+The paper's deliverable is a *methodology* applied across a whole
+workload matrix (its Table 2 grid and three case studies), not one tuned
+application.  A :class:`Campaign` generalizes ``launch/tune.py`` from
+one (arch, shape, mesh) cell per process to the full assignment:
+
+  * **cell enumeration** — :func:`enumerate_cells` walks
+    ``configs.list_archs() x SHAPES x meshes`` and keeps the applicable
+    cells (same ``shape_applicable`` rule ``launch/dryrun.py`` uses);
+  * **interleaved cursors** — every cell gets a
+    :class:`~repro.core.tree.TreeCursor`; the scheduler keeps one
+    proposed batch per cell in flight on a single shared
+    :class:`~repro.core.executor.SweepExecutor`, so the pool stays busy
+    across cells while each cell's walk stays sequential (stage N+1
+    depends on stage N).  Cells are kicked off grouped by arch, so
+    same-arch calibration compiles land adjacently and hit the shared
+    :class:`~repro.core.trial.CompileCache` while it is warm;
+  * **checkpoint / resume** — after every absorbed batch the cell's
+    trial log is persisted as JSON under ``results/campaign/``; an
+    interrupted campaign replays the stored results through the cursor
+    (no re-evaluation, bit-identical accept/reject decisions) and only
+    evaluates the remainder;
+  * **reporting** — per-cell :class:`~repro.core.tree.TuningReport`s,
+    identical to what a sequential per-cell ``run_tuning`` produces,
+    plus the cross-cell speedup matrix (``report.campaign_markdown``).
+
+Per-cell results are bit-identical to the sequential loop by
+construction: the cursor is the same state machine ``run_tuning``
+drives, and batches are recorded in proposal order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+import time
+from concurrent.futures import FIRST_COMPLETED, wait
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.configs import SHAPES, get_config, get_shape, list_archs, \
+    shape_applicable
+from repro.core.executor import SweepExecutor
+from repro.core.params import TunableConfig, default_config
+from repro.core.tree import Stage, TreeCursor, TuningReport
+from repro.core.trial import TrialResult, TrialRunner, Workload
+
+CAMPAIGN_DIR = pathlib.Path(__file__).resolve().parents[3] \
+    / "results" / "campaign"
+
+CHECKPOINT_VERSION = 1
+
+
+# ---------------------------------------------------------------- cells
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """One (arch, shape, mesh) cell of the assignment matrix."""
+    arch: str
+    shape: str
+    multi_pod: bool = False
+
+    def workload(self) -> Workload:
+        return Workload(self.arch, self.shape, self.multi_pod)
+
+    def key(self) -> str:
+        return self.workload().key()
+
+
+def enumerate_cells(archs: Optional[Sequence[str]] = None,
+                    shapes: Optional[Sequence[str]] = None,
+                    meshes: Sequence[bool] = (False,)) -> List[CellSpec]:
+    """Every applicable cell of the assignment (dryrun's skip rule)."""
+    out = []
+    for arch in (archs or list_archs()):
+        cfg = get_config(arch)
+        for shape in (shapes or list(SHAPES)):
+            ok, _ = shape_applicable(cfg, get_shape(shape))
+            if not ok:
+                continue
+            for mp in meshes:
+                out.append(CellSpec(arch, shape, mp))
+    return out
+
+
+def parse_cells(text: str,
+                default_multi_pod: bool = False) -> List[CellSpec]:
+    """Parse ``arch:shape[:pod|multipod]`` comma-separated cell specs;
+    specs without an explicit mesh suffix use ``default_multi_pod``."""
+    cells = []
+    for item in text.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        parts = item.split(":")
+        if len(parts) not in (2, 3):
+            raise ValueError(f"bad cell spec {item!r} "
+                             "(want arch:shape[:pod|multipod])")
+        arch, shape = parts[0], parts[1]
+        mp = default_multi_pod
+        if len(parts) == 3:
+            if parts[2] not in ("pod", "multipod"):
+                raise ValueError(f"bad mesh {parts[2]!r} in {item!r}")
+            mp = parts[2] == "multipod"
+        cfg = get_config(arch)            # raises on unknown arch
+        shp = get_shape(shape)            # raises on unknown shape
+        ok, reason = shape_applicable(cfg, shp)
+        if not ok:
+            raise ValueError(f"cell {item!r} not applicable: {reason}")
+        cells.append(CellSpec(arch, shape, mp))
+    if not cells:
+        raise ValueError("no cells in spec")
+    return cells
+
+
+def tuning_fingerprint(rep: TuningReport) -> Dict:
+    """The deterministic projection of a report used for equality checks
+    across runs with different cache states: everything except the
+    wall-clock compile accounting fields of each log entry."""
+    volatile = ("compile_s", "compiles", "cached")
+    return {
+        "workload": rep.workload,
+        "baseline_cost": rep.baseline_cost,
+        "final_cost": rep.final_cost,
+        "final_config": rep.final_config,
+        "n_trials": rep.n_trials,
+        "accepted": list(rep.accepted),
+        "log": [{**e, "result": {k: v for k, v in e["result"].items()
+                                 if k not in volatile}}
+                for e in rep.log],
+    }
+
+
+# ------------------------------------------------------------- campaign
+class _CellRun:
+    """One cell's in-progress walk: runner + cursor + replay ledger."""
+
+    def __init__(self, spec: CellSpec, runner: TrialRunner,
+                 cursor: TreeCursor, signature: str):
+        self.spec = spec
+        self.runner = runner
+        self.cursor = cursor
+        self.signature = signature
+        self.replay: List[Dict] = []     # checkpointed log entries
+        self.replayed = 0                # trials served from checkpoint
+        self.report: Optional[TuningReport] = None
+
+
+class Campaign:
+    """Tune a batch of cells concurrently over one shared executor.
+
+    ``evaluator`` defaults to a fresh
+    :class:`~repro.core.trial.RooflineEvaluator` (shared compile cache
+    across every cell); pass a synthetic evaluator for tests.  With
+    ``checkpoint_dir=None`` nothing is persisted.
+    """
+
+    def __init__(self, cells: Sequence[CellSpec], *,
+                 threshold: float = 0.05,
+                 evaluator: Optional[Callable] = None,
+                 baseline_factory: Optional[
+                     Callable[[CellSpec], TunableConfig]] = None,
+                 stages_factory: Optional[
+                     Callable[[CellSpec], Optional[List[Stage]]]] = None,
+                 checkpoint_dir: Optional[pathlib.Path] = CAMPAIGN_DIR,
+                 executor: Optional[SweepExecutor] = None,
+                 max_workers: Optional[int] = None):
+        if not cells:
+            raise ValueError("campaign needs at least one cell")
+        if len(set(c.key() for c in cells)) != len(cells):
+            raise ValueError("duplicate cells in campaign")
+        self.cells = list(cells)
+        self.threshold = threshold
+        if executor is not None and evaluator is not None \
+                and executor.evaluator is not evaluator:
+            raise ValueError("executor wraps a different evaluator")
+        if executor is not None:
+            evaluator = executor.evaluator
+        elif evaluator is None:
+            from repro.core.trial import RooflineEvaluator
+            evaluator = RooflineEvaluator()
+        self.evaluator = evaluator
+        self.executor = executor
+        self.max_workers = max_workers
+        self.baseline_factory = baseline_factory or (
+            lambda spec: default_config(shard_strategy="fsdp_tp",
+                                        attn_impl="pallas"))
+        self.stages_factory = stages_factory or (lambda spec: None)
+        self.checkpoint_dir = pathlib.Path(checkpoint_dir) \
+            if checkpoint_dir else None
+        self.last_stats: Dict = {}
+
+    # ------------------------------------------------------ checkpoints
+    def _ckpt_path(self, spec: CellSpec) -> pathlib.Path:
+        return self.checkpoint_dir / f"{spec.key()}.json"
+
+    def discard_checkpoints(self) -> None:
+        """Forget persisted state for this campaign's cells (re-tune)."""
+        if self.checkpoint_dir is None:
+            return
+        for spec in self.cells:
+            path = self._ckpt_path(spec)
+            if path.exists():
+                path.unlink()
+
+    def _signature(self, spec: CellSpec, baseline: TunableConfig,
+                   stages: Optional[List[Stage]]) -> str:
+        from repro.core.tree import default_tree
+        stages = stages if stages is not None \
+            else default_tree(spec.workload().shp.kind)
+        blob = json.dumps(
+            [spec.key(), self.threshold, baseline.as_dict(),
+             [[s.name, s.spark_name, list(s.alternatives), list(s.kinds)]
+              for s in stages]],
+            sort_keys=True, default=str)
+        return hashlib.sha1(blob.encode()).hexdigest()
+
+    def _load_checkpoint(self, cr: _CellRun) -> None:
+        if self.checkpoint_dir is None:
+            return
+        path = self._ckpt_path(cr.spec)
+        if not path.exists():
+            return
+        try:
+            d = json.loads(path.read_text())
+        except (OSError, ValueError):
+            return                       # unreadable: start fresh
+        if d.get("version") != CHECKPOINT_VERSION \
+                or d.get("signature") != cr.signature:
+            return                       # stale tree/baseline: start fresh
+        if d.get("done") and d.get("report"):
+            cr.report = TuningReport(**d["report"])
+            cr.replayed = cr.report.n_trials
+            return
+        cr.replay = list(d.get("log") or [])
+
+    def _save_checkpoint(self, cr: _CellRun) -> None:
+        if self.checkpoint_dir is None:
+            return
+        self.checkpoint_dir.mkdir(parents=True, exist_ok=True)
+        state = {
+            "version": CHECKPOINT_VERSION,
+            "cell": cr.spec.key(),
+            "signature": cr.signature,
+            "threshold": self.threshold,
+            "done": cr.report is not None,
+            "log": [dataclasses.asdict(e) for e in cr.runner.log],
+            "report": cr.report.__dict__ if cr.report else None,
+        }
+        path = self._ckpt_path(cr.spec)
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(state, indent=1, default=str))
+        tmp.replace(path)
+
+    # -------------------------------------------------------- advancing
+    def _advance(self, cr: _CellRun):
+        """Drive the cursor forward, replaying checkpointed batches;
+        returns the next batch that needs live evaluation, or None when
+        the cell's walk is complete."""
+        while True:
+            batch = cr.cursor.propose()
+            if not batch:
+                cr.report = cr.cursor.report()
+                self._save_checkpoint(cr)
+                return None
+            start = cr.runner.n_trials
+            stored = cr.replay[start:start + len(batch)]
+            if len(stored) == len(batch) and all(
+                    s.get("config") == c.config.as_dict()
+                    and s.get("name") == c.name
+                    for s, c in zip(stored, batch)):
+                # replay: record the stored results without evaluating
+                results, indices = [], []
+                for s, c in zip(stored, batch):
+                    res = TrialResult(**s["result"])
+                    cr.runner.record(c.config, c.name, res, c.delta)
+                    results.append(res)
+                    indices.append(cr.runner.n_trials - 1)
+                cr.cursor.absorb(results, indices)
+                cr.replayed += len(batch)
+                continue
+            cr.replay = cr.replay[:start]    # drop any stale tail
+            return batch
+
+    def _absorb(self, cr: _CellRun, batch, results) -> None:
+        indices = []
+        for c, res in zip(batch, results):
+            cr.runner.record(c.config, c.name, res, c.delta)
+            indices.append(cr.runner.n_trials - 1)
+        cr.cursor.absorb(results, indices)
+        self._save_checkpoint(cr)
+
+    # -------------------------------------------------------------- run
+    def run(self) -> Dict[str, TuningReport]:
+        """Tune every cell; returns ``{cell_key: TuningReport}`` in the
+        campaign's cell order."""
+        t0 = time.time()
+        # group cells by arch (first-appearance order) so same-arch
+        # trials are adjacent in the executor queue
+        first_seen: Dict[str, int] = {}
+        for i, c in enumerate(self.cells):
+            first_seen.setdefault(c.arch, i)
+        ordered = sorted(self.cells, key=lambda c: first_seen[c.arch])
+        runs: Dict[str, _CellRun] = {}
+        for spec in ordered:
+            baseline = self.baseline_factory(spec)
+            stages = self.stages_factory(spec)
+            runner = TrialRunner(spec.workload(), self.evaluator)
+            cursor = TreeCursor(runner, baseline,
+                                threshold=self.threshold, stages=stages)
+            cr = _CellRun(spec, runner, cursor,
+                          self._signature(spec, baseline, stages))
+            self._load_checkpoint(cr)
+            runs[spec.key()] = cr
+
+        own_executor = self.executor is None
+        executor = self.executor or SweepExecutor(self.evaluator,
+                                                  self.max_workers)
+        pending: Dict[str, Tuple[list, list]] = {}   # key -> (batch, futs)
+        try:
+            def kick(cr: _CellRun) -> None:
+                batch = self._advance(cr)
+                if batch is None:
+                    return
+                futs = [executor.submit(cr.runner.workload, c.config)
+                        for c in batch]
+                pending[cr.spec.key()] = (batch, futs)
+
+            for cr in runs.values():
+                if cr.report is None:
+                    kick(cr)
+            while pending:
+                outstanding = {f for _, fs in pending.values()
+                               for f in fs if not f.done()}
+                if outstanding:
+                    wait(outstanding, return_when=FIRST_COMPLETED)
+                ready = [k for k, (_, fs) in pending.items()
+                         if all(f.done() for f in fs)]
+                for key in ready:
+                    batch, futs = pending.pop(key)
+                    results = [f.result() for f in futs]
+                    self._absorb(runs[key], batch, results)
+                    kick(runs[key])
+        finally:
+            if own_executor:
+                executor.shutdown()
+
+        reports = {spec.key(): runs[spec.key()].report
+                   for spec in self.cells}
+        n_trials = sum(r.n_trials for r in reports.values())
+        replayed = sum(cr.replayed for cr in runs.values())
+        wall = time.time() - t0
+        self.last_stats = {
+            "cells": len(self.cells),
+            "trials": n_trials,
+            "replayed_trials": replayed,
+            "evaluated_trials": n_trials - replayed,
+            "wall_s": round(wall, 1),
+            "cells_per_hour": round(len(self.cells) / max(wall, 1e-9)
+                                    * 3600.0, 1),
+        }
+        return reports

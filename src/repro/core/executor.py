@@ -128,7 +128,7 @@ class SweepExecutor:
 def run_trials(runner, candidates: Sequence[Tuple[TunableConfig, str,
                                                   Optional[dict]]],
                executor: Optional[SweepExecutor] = None
-               ) -> List[TrialResult]:
+               ) -> List[Tuple[int, TrialResult]]:
     """Evaluate a batch of candidates for a TrialRunner.
 
     With an executor the evaluations overlap; the runner's log gains one
@@ -136,12 +136,19 @@ def run_trials(runner, candidates: Sequence[Tuple[TunableConfig, str,
     the same fault conversion (an evaluator exception = crashed trial),
     so run counting, log layout and results are identical regardless of
     how the batch was scheduled.
+
+    Returns ``(log_index, result)`` per candidate: the exact position of
+    the candidate's entry in ``runner.log``, so callers annotate entries
+    directly instead of re-finding them by config equality (two identical
+    configs from different stages would cross-annotate).
     """
     if executor is None:
-        return [runner.record(rt, name,
-                              _safe_eval(runner.evaluator,
-                                         runner.workload, rt), delta)
-                for rt, name, delta in candidates]
+        out = []
+        for rt, name, delta in candidates:
+            res = _safe_eval(runner.evaluator, runner.workload, rt)
+            runner.record(rt, name, res, delta)
+            out.append((len(runner.log) - 1, res))
+        return out
     if executor.evaluator is not runner.evaluator:
         raise ValueError("executor wraps a different evaluator than the "
                          "runner — results would bypass the runner's "
@@ -149,6 +156,8 @@ def run_trials(runner, candidates: Sequence[Tuple[TunableConfig, str,
     futs = [executor.submit(runner.workload, rt)
             for rt, name, delta in candidates]
     results = [f.result() for f in futs]
+    out = []
     for (rt, name, delta), res in zip(candidates, results):
         runner.record(rt, name, res, delta)
-    return results
+        out.append((len(runner.log) - 1, res))
+    return out

@@ -2,10 +2,11 @@
 from __future__ import annotations
 
 import json
+import math
 from typing import Dict, List
 
 from repro.core.sensitivity import SensitivityReport
-from repro.core.tree import TuningReport
+from repro.core.tree import MAX_TRIALS, TuningReport
 
 
 def sensitivity_markdown(reports: Dict[str, SensitivityReport]) -> str:
@@ -61,6 +62,52 @@ def tuning_markdown(rep: TuningReport) -> str:
         out.append(f"| {i} | {e['name']} | {delta} | {_fmt_s(cost)} | "
                    f"{e.get('note','')} | {verdict} |")
     return "\n".join(out)
+
+
+def campaign_markdown(reports: Dict[str, TuningReport]) -> str:
+    """Cross-cell speedup matrix: rows = archs, cols = shape__mesh cells
+    (the paper's case-study summary generalized to the full assignment)."""
+    parsed = []
+    for key, rep in reports.items():
+        arch, shape, mesh = key.split("__")
+        parsed.append((arch, f"{shape}__{mesh}", rep))
+    archs = list(dict.fromkeys(a for a, _, _ in parsed))
+    cols = list(dict.fromkeys(c for _, c, _ in parsed))
+    by_cell = {(a, c): r for a, c, r in parsed}
+    lines = ["### Campaign: tuning-tree speedup per cell",
+             "",
+             "| arch | " + " | ".join(cols) + " |",
+             "|---" * (len(cols) + 1) + "|"]
+    for a in archs:
+        row = [a]
+        for c in cols:
+            rep = by_cell.get((a, c))
+            if rep is None:
+                row.append("—")
+            elif rep.final_cost != rep.final_cost \
+                    or rep.final_cost == float("inf"):
+                row.append("crash")
+            elif rep.baseline_cost == float("inf"):
+                # crashed baseline, viable candidate found: the ratio is
+                # meaningless, the recovery is the result
+                row.append(f"recovered ({rep.n_trials})")
+            else:
+                row.append(f"x{rep.speedup:.2f} ({rep.n_trials})")
+        lines.append("| " + " | ".join(row) + " |")
+    speedups = [r.speedup for r in reports.values()
+                if r.speedup == r.speedup and r.speedup != float("inf")]
+    gmean = (float(math.prod(speedups)) ** (1.0 / len(speedups))) \
+        if speedups else float("nan")
+    lines += ["",
+              f"* cells tuned: {len(reports)}",
+              f"* total trials: {sum(r.n_trials for r in reports.values())}"
+              f" (cap {MAX_TRIALS * len(reports)})",
+              f"* accepted changes: "
+              f"{sum(len(r.accepted) for r in reports.values())}",
+              f"* geometric-mean speedup: x{gmean:.2f}",
+              "",
+              "Each cell: `x<speedup> (<trials used>)`."]
+    return "\n".join(lines)
 
 
 def _fmt_s(x: float) -> str:

@@ -62,10 +62,9 @@ def run_sensitivity(runner: TrialRunner, baseline: TunableConfig,
         candidates.extend(
             (baseline.replace(**{knob: v}), f"ofat:{knob}", {knob: v})
             for v in tested)
-    results = run_trials(runner, candidates, executor)
+    pairs = run_trials(runner, candidates, executor)
     impacts: List[KnobImpact] = []
-    entries = runner.log[len(runner.log) - len(candidates):]
-    it = iter(zip(results, entries))
+    it = iter((res, runner.log[idx]) for idx, res in pairs)
     for knob, tested in spans:
         devs, crashes = [], 0
         for _ in tested:

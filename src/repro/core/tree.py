@@ -87,6 +87,146 @@ class TuningReport:
         return self.baseline_cost / self.final_cost
 
 
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One proposed trial: the config to evaluate plus its log labels."""
+    config: TunableConfig
+    name: str
+    delta: Dict[str, Any]
+
+    def as_trial(self) -> tuple:
+        """The (config, name, delta) triple core/executor.run_trials takes."""
+        return (self.config, self.name, self.delta)
+
+
+class TreeCursor:
+    """Resumable state machine over the Fig.-4 tuning tree.
+
+    The blocking tree walk is split into two halves so a scheduler can
+    interleave many walks over one trial executor (core/campaign.py):
+
+      * :meth:`propose` returns the next batch of trial candidates —
+        first the baseline, then each stage's runnable alternatives —
+        or ``[]`` once the walk is complete;
+      * :meth:`absorb` takes the batch's results plus the log indices
+        the runner recorded them at, applies the paper's accept/reject
+        rule, annotates the log *by index* (no config-equality rescans)
+        and advances to the next stage.
+
+    Calls must alternate (every propose'd batch absorbed before the
+    next propose).  The trial log, ≤10-run budget accounting and
+    accept/reject decisions are identical to the historical blocking
+    loop; ``run_tuning`` below is now a thin driver over this cursor.
+    The cursor holds no results of its own beyond the incumbent/cost
+    scalars, so a walk can be reconstructed (checkpoint resume) by
+    replaying recorded trial results through propose/absorb.
+    """
+
+    def __init__(self, runner: TrialRunner, baseline: TunableConfig,
+                 threshold: float = 0.05,
+                 stages: Optional[List[Stage]] = None):
+        self.runner = runner
+        self.baseline = baseline
+        self.threshold = threshold
+        kind = runner.workload.shp.kind
+        self.stages = stages if stages is not None else default_tree(kind)
+        self.incumbent = baseline
+        self.baseline_cost = float("nan")
+        self.best_cost = float("nan")
+        self.accepted: List[str] = []
+        self._stage_i = -1          # -1: baseline not yet evaluated
+        self._pending: Optional[List[Candidate]] = None
+        self._done = False
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def propose(self) -> List[Candidate]:
+        """Next batch of candidates to evaluate; [] when the walk is done."""
+        if self._pending is not None:
+            raise RuntimeError("previous batch not absorbed yet")
+        if self._done:
+            return []
+        if self._stage_i < 0:
+            self._pending = [Candidate(self.baseline, "baseline", {})]
+            return list(self._pending)
+        while True:
+            if (self._stage_i >= len(self.stages)
+                    or self.runner.n_trials >= MAX_TRIALS):
+                self._done = True
+                return []
+            stage = self.stages[self._stage_i]
+            # skip alternatives that are no-ops on the incumbent; the run
+            # budget admits only as many candidates as trials remain
+            runnable = [alt for alt in stage.alternatives
+                        if not all(getattr(self.incumbent, k) == v
+                                   for k, v in alt.items())]
+            runnable = runnable[:MAX_TRIALS - self.runner.n_trials]
+            if not runnable:
+                self._stage_i += 1
+                continue
+            self._pending = [Candidate(self.incumbent.replace(**alt),
+                                       stage.name, alt)
+                             for alt in runnable]
+            return list(self._pending)
+
+    def absorb(self, results: Sequence[TrialResult],
+               indices: Sequence[int]) -> None:
+        """Apply one batch's outcomes (results aligned with the proposed
+        candidates; ``indices`` = their positions in ``runner.log``)."""
+        if self._pending is None:
+            raise RuntimeError("no batch proposed")
+        if len(results) != len(self._pending) \
+                or len(indices) != len(self._pending):
+            raise ValueError("results/indices do not match proposed batch")
+        cands, self._pending = self._pending, None
+        if self._stage_i < 0:
+            base_res = results[0]
+            entry = self.runner.log[indices[0]]
+            entry.accepted = True
+            entry.note = "baseline (defaults after cluster-level config)"
+            self.best_cost = base_res.cost_s if not base_res.crashed \
+                else float("inf")
+            self.baseline_cost = self.best_cost
+            self._stage_i = 0
+            return
+        stage = self.stages[self._stage_i]
+        batch = list(zip(cands, results, indices))
+        for _, res, idx in batch:
+            # annotate crashes (the paper's 0.1/0.7 sort-by-key outcome)
+            if res.crashed:
+                self.runner.log[idx].note = "crashed (exceeds per-chip HBM)"
+                self.runner.log[idx].accepted = False
+        viable = [(c, r, i) for c, r, i in batch if not r.crashed]
+        if viable:
+            cand, res, idx = min(viable, key=lambda t: t[1].cost_s)
+            improves = (self.best_cost == float("inf")
+                        or res.cost_s < self.best_cost
+                        * (1.0 - self.threshold))
+            self.runner.log[idx].accepted = bool(improves)
+            if improves:
+                self.incumbent = cand.config
+                self.best_cost = res.cost_s
+                self.accepted.append(f"{stage.name}: {cand.delta}")
+            # non-winning alternatives are rejected
+            for _, _, i in batch:
+                if self.runner.log[i].accepted is None:
+                    self.runner.log[i].accepted = False
+        self._stage_i += 1
+
+    def report(self) -> TuningReport:
+        return TuningReport(
+            workload=self.runner.workload.key(),
+            baseline_cost=self.baseline_cost,
+            final_cost=self.best_cost,
+            final_config=self.incumbent.as_dict(),
+            n_trials=self.runner.n_trials,
+            accepted=self.accepted,
+            log=[dataclasses.asdict(e) for e in self.runner.log],
+        )
+
+
 def run_tuning(runner: TrialRunner, baseline: TunableConfig,
                threshold: float = 0.05,
                stages: Optional[List[Stage]] = None,
@@ -96,64 +236,13 @@ def run_tuning(runner: TrialRunner, baseline: TunableConfig,
     A stage's alternatives are independent of each other (all derived
     from the same incumbent), so with an ``executor`` they evaluate
     concurrently; the trial log, run budget and accept/reject decisions
-    are identical to the sequential walk."""
-    kind = runner.workload.shp.kind
-    stages = stages if stages is not None else default_tree(kind)
-    incumbent = baseline
-    base_res = runner.run(baseline, "baseline", {})
-    runner.log[-1].accepted = True
-    runner.log[-1].note = "baseline (defaults after cluster-level config)"
-    best_cost = base_res.cost_s if not base_res.crashed else float("inf")
-    baseline_cost = best_cost
-    accepted: List[str] = []
-
-    for stage in stages:
-        if runner.n_trials >= MAX_TRIALS:
+    are identical to the sequential walk.  This is a thin blocking
+    driver over :class:`TreeCursor`."""
+    cursor = TreeCursor(runner, baseline, threshold=threshold, stages=stages)
+    while True:
+        batch = cursor.propose()
+        if not batch:
             break
-        # skip alternatives that are no-ops on the incumbent; the run
-        # budget admits only as many candidates as trials remain
-        runnable = [alt for alt in stage.alternatives
-                    if not all(getattr(incumbent, k) == v
-                               for k, v in alt.items())]
-        runnable = runnable[:MAX_TRIALS - runner.n_trials]
-        cands = [(incumbent.replace(**alt), stage.name, alt)
-                 for alt in runnable]
-        results = run_trials(runner, cands, executor)
-        cand_results = [(alt, cand, res) for (cand, _, alt), res
-                        in zip(cands, results)]
-        if not cand_results:
-            continue
-        viable = [(a, c, r) for a, c, r in cand_results if not r.crashed]
-        for a, c, r in cand_results:
-            # annotate crashes (the paper's 0.1/0.7 sort-by-key outcome)
-            if r.crashed:
-                idx = [e for e in runner.log if e.config == c.as_dict()]
-                if idx:
-                    idx[-1].note = "crashed (exceeds per-chip HBM)"
-                    idx[-1].accepted = False
-        if not viable:
-            continue
-        alt, cand, res = min(viable, key=lambda t: t[2].cost_s)
-        improves = (best_cost == float("inf")
-                    or res.cost_s < best_cost * (1.0 - threshold))
-        for e in runner.log:
-            if e.accepted is None and e.config == cand.as_dict():
-                e.accepted = bool(improves)
-        if improves:
-            incumbent = cand
-            best_cost = res.cost_s
-            accepted.append(f"{stage.name}: {alt}")
-        # non-winning alternatives are rejected
-        for e in runner.log:
-            if e.accepted is None:
-                e.accepted = False
-
-    return TuningReport(
-        workload=runner.workload.key(),
-        baseline_cost=baseline_cost,
-        final_cost=best_cost,
-        final_config=incumbent.as_dict(),
-        n_trials=runner.n_trials,
-        accepted=accepted,
-        log=[dataclasses.asdict(e) for e in runner.log],
-    )
+        pairs = run_trials(runner, [c.as_trial() for c in batch], executor)
+        cursor.absorb([r for _, r in pairs], [i for i, _ in pairs])
+    return cursor.report()

@@ -246,6 +246,7 @@ class RooflineEvaluator:
 
         entry = self.compile_cache.get_or_build(key, build)
         acct = self._trial_acct()
+        acct["cache_reads"] += 1
         if built:
             acct["compiles"] += 1
             acct["compile_s"] += entry.get("compile_s", 0.0)
@@ -257,7 +258,8 @@ class RooflineEvaluator:
 
     def _trial_acct(self) -> Dict[str, Any]:
         if not hasattr(self._acct, "d"):
-            self._acct.d = {"compiles": 0, "compile_s": 0.0}
+            self._acct.d = {"compiles": 0, "compile_s": 0.0,
+                            "cache_reads": 0}
         return self._acct.d
 
     # ------------------------------------------------------------ trial
@@ -297,6 +299,7 @@ class RooflineEvaluator:
     def __call__(self, wl: Workload, rt: TunableConfig) -> TrialResult:
         acct = self._trial_acct()
         acct["compiles"], acct["compile_s"] = 0, 0.0
+        acct["cache_reads"] = 0
         try:
             rl = self.calibrated_roofline(wl, rt)
             peak = rl.peak_mem_bytes
@@ -309,7 +312,10 @@ class RooflineEvaluator:
                               error=f"{type(e).__name__}: {e}"[:500])
         res.compiles = acct["compiles"]
         res.compile_s = round(acct["compile_s"], 1)
-        res.cached = acct["compiles"] == 0
+        # "served from cache" requires the trial to have actually reached
+        # a cache lookup — a trial that dies before any calibration
+        # compile (e.g. in the mesh factory) was not cached, it crashed
+        res.cached = acct["compiles"] == 0 and acct["cache_reads"] > 0
         return res
 
 

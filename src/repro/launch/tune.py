@@ -1,4 +1,13 @@
-"""Apply the paper's trial-and-error methodology to one workload cell.
+"""Apply the paper's trial-and-error methodology to workload cells.
+
+Single-cell mode (``--arch/--shape``) tunes one (arch, shape, mesh)
+cell, exactly as before.  Campaign mode (``--cells a:s,...`` or
+``--all``) tunes a whole batch of cells in one concurrent campaign
+(core/campaign.py): every cell's tree walk interleaves over one shared
+executor + compile cache, per-cell state checkpoints under
+``results/campaign/`` (an interrupted campaign resumes without
+re-paying completed trials), and the per-cell reports are bit-identical
+to running the single-cell mode per cell.
 
 MUST set the placeholder device count before ANY jax-touching import.
 """
@@ -19,33 +28,86 @@ from repro.core.trial import RooflineEvaluator, TrialRunner, Workload
 RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "tuning"
 
 
+def _baseline(overrides=None):
+    # attn_impl=pallas is infrastructure (the execution engine's kernel),
+    # not one of the 12 tunables — see DESIGN.md §2.2
+    return default_config(shard_strategy="fsdp_tp", attn_impl="pallas",
+                          **(overrides or {}))
+
+
+def _save_cell_report(rep) -> None:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"{rep.workload}.json").write_text(
+        json.dumps(rep.__dict__, indent=1, default=str))
+    (RESULTS_DIR / f"{rep.workload}.md").write_text(
+        report.tuning_markdown(rep))
+
+
 def tune_cell(arch: str, shape: str, multi_pod: bool = False,
               threshold: float = 0.05, baseline_overrides=None):
     from repro.core.executor import SweepExecutor
     wl = Workload(arch, shape, multi_pod)
-    # attn_impl=pallas is infrastructure (the execution engine's kernel),
-    # not one of the 12 tunables — see DESIGN.md §2.2
-    baseline = default_config(shard_strategy="fsdp_tp",
-                              attn_impl="pallas",
-                              **(baseline_overrides or {}))
+    baseline = _baseline(baseline_overrides)
     with SweepExecutor(RooflineEvaluator()) as executor:
         runner = TrialRunner(wl, executor.evaluator)
         rep = run_tuning(runner, baseline, threshold=threshold,
                          executor=executor)
-    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
-    (RESULTS_DIR / f"{wl.key()}.json").write_text(
-        json.dumps(rep.__dict__, indent=1, default=str))
-    (RESULTS_DIR / f"{wl.key()}.md").write_text(report.tuning_markdown(rep))
+    _save_cell_report(rep)
     return rep
+
+
+def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
+                  fresh: bool = False, checkpoint_dir=None):
+    """Tune a batch of cells in one concurrent campaign; returns
+    ``{cell_key: TuningReport}`` plus the campaign's throughput stats."""
+    from repro.core.campaign import CAMPAIGN_DIR, Campaign
+    ckpt = pathlib.Path(checkpoint_dir) if checkpoint_dir else CAMPAIGN_DIR
+    camp = Campaign(
+        cells, threshold=threshold, checkpoint_dir=ckpt,
+        baseline_factory=lambda spec: _baseline(baseline_overrides))
+    if fresh:
+        camp.discard_checkpoints()
+    reports = camp.run()
+    for rep in reports.values():
+        _save_cell_report(rep)
+    ckpt.mkdir(parents=True, exist_ok=True)
+    (ckpt / "campaign.md").write_text(report.campaign_markdown(reports))
+    (ckpt / "campaign_stats.json").write_text(
+        json.dumps(camp.last_stats, indent=1))
+    return reports, camp.last_stats
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--arch", help="single-cell mode: arch id")
+    ap.add_argument("--shape", help="single-cell mode: shape id")
+    ap.add_argument("--cells",
+                    help="campaign mode: comma-separated "
+                         "arch:shape[:pod|multipod] cell specs")
+    ap.add_argument("--all", action="store_true",
+                    help="campaign mode: every applicable cell of the "
+                         "assignment")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--threshold", type=float, default=0.05)
+    ap.add_argument("--fresh", action="store_true",
+                    help="campaign mode: discard checkpoints, re-tune")
     args = ap.parse_args(argv)
+
+    if args.all or args.cells:
+        from repro.core.campaign import enumerate_cells, parse_cells
+        cells = parse_cells(args.cells,
+                            default_multi_pod=args.multi_pod) \
+            if args.cells else enumerate_cells(meshes=(args.multi_pod,))
+        reports, stats = tune_campaign(cells, threshold=args.threshold,
+                                       fresh=args.fresh)
+        print(report.campaign_markdown(reports))
+        print(f"\n{stats['cells']} cells in {stats['wall_s']}s "
+              f"({stats['cells_per_hour']} cells/h; "
+              f"{stats['evaluated_trials']} trials evaluated, "
+              f"{stats['replayed_trials']} replayed from checkpoint)")
+        return 0
+    if not (args.arch and args.shape):
+        ap.error("need --arch and --shape, or --cells/--all")
     rep = tune_cell(args.arch, args.shape, args.multi_pod, args.threshold)
     print(report.tuning_markdown(rep))
     print(f"\nspeedup: x{rep.speedup:.2f} in {rep.n_trials} trials")

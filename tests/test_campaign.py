@@ -1,0 +1,239 @@
+"""Campaign engine: interleaved cursors, checkpoint/resume, reporting.
+
+All tests drive synthetic evaluators — no XLA compiles.  The
+load-bearing invariants:
+
+  * a campaign's per-cell reports are bit-identical to the sequential
+    per-cell ``run_tuning`` loop;
+  * an interrupted campaign resumes from ``results/campaign/``-style
+    checkpoints without re-evaluating any completed (absorbed) trial,
+    and converges to the same reports;
+  * stale or corrupt checkpoints are discarded, never trusted.
+"""
+import json
+import threading
+
+import pytest
+
+from repro.core import report
+from repro.core.campaign import (Campaign, CellSpec, enumerate_cells,
+                                 parse_cells, tuning_fingerprint)
+from repro.core.params import default_config
+from repro.core.tree import run_tuning
+from repro.core.trial import TrialResult, TrialRunner
+
+CELLS = [CellSpec("smollm-135m", "train_4k"),
+         CellSpec("smollm-135m", "prefill_32k"),
+         CellSpec("glm4-9b", "train_4k"),
+         CellSpec("xlstm-1.3b", "decode_32k")]
+
+
+def baseline_factory(spec):
+    return default_config(shard_strategy="fsdp_tp", attn_impl="pallas")
+
+
+def surface(wl, rt):
+    """Deterministic per-cell cost surface with one crash region."""
+    if wl.arch == "glm4-9b" and rt.remat_policy == "full":
+        return TrialResult(cost_s=float("inf"), crashed=True)
+    c = 100.0 + 3.0 * len(wl.arch)
+    if rt.compute_dtype == "bfloat16":
+        c *= 0.7
+    if rt.shard_strategy == "tp":
+        c *= 0.9
+    if rt.shard_strategy == "fsdp":
+        c *= 1.1
+    if rt.remat_policy == "none":
+        c *= 1.2 if wl.arch == "glm4-9b" else 0.85
+    if rt.microbatches == 2:
+        c *= 0.97
+    if rt.kv_cache_dtype == "int8":
+        c *= 0.8
+    if rt.attn_block_q == 256:
+        c *= 0.92
+    return TrialResult(cost_s=round(c, 6))
+
+
+class CountingSurface:
+    def __init__(self, fail_after=None):
+        self.calls = []
+        self.lock = threading.Lock()
+        self.fail_after = fail_after
+
+    def __call__(self, wl, rt):
+        with self.lock:
+            self.calls.append((wl.key(), rt.as_dict()))
+            if self.fail_after is not None \
+                    and len(self.calls) > self.fail_after:
+                raise KeyboardInterrupt("simulated kill")
+        return surface(wl, rt)
+
+
+def sequential_reference():
+    """The per-cell loop the campaign must reproduce bit for bit."""
+    out = {}
+    for spec in CELLS:
+        runner = TrialRunner(spec.workload(), surface)
+        out[spec.key()] = run_tuning(runner, baseline_factory(spec),
+                                     threshold=0.05)
+    return out
+
+
+def test_campaign_matches_sequential_loop(tmp_path):
+    camp = Campaign(CELLS, threshold=0.05, evaluator=surface,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path, max_workers=4)
+    reports = camp.run()
+    ref = sequential_reference()
+    assert list(reports) == [c.key() for c in CELLS]
+    for key, rep in reports.items():
+        # full bit-identity: log, n_trials, accepted, final_config
+        assert rep.__dict__ == ref[key].__dict__
+    assert camp.last_stats["evaluated_trials"] \
+        == sum(r.n_trials for r in ref.values())
+
+
+def test_campaign_without_checkpoints():
+    camp = Campaign(CELLS, threshold=0.05, evaluator=surface,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=None, max_workers=2)
+    reports = camp.run()
+    ref = sequential_reference()
+    for key, rep in reports.items():
+        assert tuning_fingerprint(rep) == tuning_fingerprint(ref[key])
+
+
+def test_campaign_resume_replays_everything(tmp_path):
+    camp = Campaign(CELLS, evaluator=surface,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path)
+    first = camp.run()
+    counting = CountingSurface()
+    camp2 = Campaign(CELLS, evaluator=counting,
+                     baseline_factory=baseline_factory,
+                     checkpoint_dir=tmp_path)
+    second = camp2.run()
+    assert counting.calls == []          # nothing re-paid
+    assert camp2.last_stats["evaluated_trials"] == 0
+    assert camp2.last_stats["replayed_trials"] \
+        == camp.last_stats["trials"]
+    for key in first:
+        assert first[key].__dict__ == second[key].__dict__
+
+
+def test_interrupted_campaign_resumes_without_repaying(tmp_path):
+    """Kill mid-campaign, resume: no absorbed trial is re-evaluated and
+    the final reports are identical to the uninterrupted run."""
+    killer = CountingSurface(fail_after=9)
+    camp = Campaign(CELLS, evaluator=killer,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path, max_workers=2)
+    with pytest.raises(KeyboardInterrupt):
+        camp.run()
+    # what the checkpoints say is already absorbed
+    absorbed = []
+    for spec in CELLS:
+        path = tmp_path / f"{spec.key()}.json"
+        if path.exists():
+            d = json.loads(path.read_text())
+            absorbed += [(d["cell"], e["config"]) for e in d["log"]]
+    assert absorbed                       # the kill landed mid-campaign
+    resumer = CountingSurface()
+    camp2 = Campaign(CELLS, evaluator=resumer,
+                     baseline_factory=baseline_factory,
+                     checkpoint_dir=tmp_path, max_workers=2)
+    reports = camp2.run()
+    # no completed trial was re-paid
+    re_evaluated = {(k, json.dumps(c, sort_keys=True))
+                    for k, c in resumer.calls}
+    absorbed_set = {(k, json.dumps(c, sort_keys=True))
+                    for k, c in absorbed}
+    assert not re_evaluated & absorbed_set
+    assert camp2.last_stats["replayed_trials"] == len(absorbed)
+    ref = sequential_reference()
+    for key, rep in reports.items():
+        assert rep.__dict__ == ref[key].__dict__
+
+
+def test_stale_checkpoint_discarded(tmp_path):
+    """A checkpoint written under a different threshold (or tree) must
+    not be replayed — the accept/reject decisions would be wrong."""
+    Campaign(CELLS[:1], threshold=0.05, evaluator=surface,
+             baseline_factory=baseline_factory,
+             checkpoint_dir=tmp_path).run()
+    counting = CountingSurface()
+    camp = Campaign(CELLS[:1], threshold=0.10, evaluator=counting,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path)
+    rep = camp.run()[CELLS[0].key()]
+    assert camp.last_stats["replayed_trials"] == 0
+    assert len(counting.calls) == rep.n_trials
+
+
+def test_corrupt_checkpoint_discarded(tmp_path):
+    spec = CELLS[0]
+    (tmp_path / f"{spec.key()}.json").write_text("{not json")
+    camp = Campaign([spec], evaluator=surface,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path)
+    rep = camp.run()[spec.key()]
+    runner = TrialRunner(spec.workload(), surface)
+    ref = run_tuning(runner, baseline_factory(spec), threshold=0.05)
+    assert rep.__dict__ == ref.__dict__
+
+
+def test_discard_checkpoints(tmp_path):
+    camp = Campaign(CELLS[:2], evaluator=surface,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path)
+    camp.run()
+    assert any(tmp_path.glob("*.json"))
+    camp.discard_checkpoints()
+    assert not list(tmp_path.glob("smollm*.json"))
+
+
+def test_duplicate_cells_rejected():
+    with pytest.raises(ValueError):
+        Campaign([CELLS[0], CELLS[0]], evaluator=surface)
+
+
+# -------------------------------------------------------- cell plumbing
+def test_enumerate_cells_applicability():
+    cells = enumerate_cells()
+    keys = {(c.arch, c.shape) for c in cells}
+    # long_500k only for sub-quadratic families (dryrun's skip rule)
+    assert ("xlstm-1.3b", "long_500k") in keys
+    assert ("zamba2-7b", "long_500k") in keys
+    assert ("glm4-9b", "long_500k") not in keys
+    assert ("glm4-9b", "train_4k") in keys
+    assert all(not c.multi_pod for c in cells)
+    both = enumerate_cells(archs=["smollm-135m"], shapes=["train_4k"],
+                           meshes=(False, True))
+    assert [c.multi_pod for c in both] == [False, True]
+
+
+def test_parse_cells():
+    cells = parse_cells("smollm-135m:train_4k, glm4-9b:train_4k:pod,"
+                        "xlstm-1.3b:long_500k:multipod")
+    assert cells[0] == CellSpec("smollm-135m", "train_4k")
+    assert cells[1] == CellSpec("glm4-9b", "train_4k", False)
+    assert cells[2] == CellSpec("xlstm-1.3b", "long_500k", True)
+    with pytest.raises(ValueError):
+        parse_cells("smollm-135m")                      # no shape
+    with pytest.raises(KeyError):
+        parse_cells("no-such-arch:train_4k")
+    with pytest.raises(ValueError):
+        parse_cells("glm4-9b:long_500k")                # not applicable
+    with pytest.raises(ValueError):
+        parse_cells("")
+
+
+def test_campaign_markdown(tmp_path):
+    reports = Campaign(CELLS, evaluator=surface,
+                       baseline_factory=baseline_factory,
+                       checkpoint_dir=tmp_path).run()
+    md = report.campaign_markdown(reports)
+    assert "| arch |" in md
+    assert "smollm-135m" in md and "xlstm-1.3b" in md
+    assert f"cells tuned: {len(CELLS)}" in md
+    assert "geometric-mean speedup" in md

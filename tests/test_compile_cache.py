@@ -163,6 +163,33 @@ def _host_mesh_factory(*, multi_pod=False):
     return make_host_mesh()
 
 
+def test_crash_before_compile_not_reported_cached():
+    """Regression: a trial that dies before reaching any calibration
+    compile (here: in the mesh factory) used to report cached=True
+    because it paid zero compiles — but it was never served from the
+    cache, it crashed."""
+    def boom_mesh_factory(*, multi_pod=False):
+        raise RuntimeError("no devices")
+    ev = RooflineEvaluator(mesh_factory=boom_mesh_factory,
+                           compile_cache=CompileCache(use_disk=False))
+    res = ev(Workload("smollm-135m", "train_4k"), default_config())
+    assert res.crashed and res.compiles == 0
+    assert not res.cached
+    assert "no devices" in res.error
+
+
+def test_cache_served_trial_still_reported_cached(tmp_path):
+    """The complement: a repeat trial genuinely served from the cache
+    keeps cached=True."""
+    wl = ReducedWorkload("smollm-135m", "train")
+    ev = RooflineEvaluator(mesh_factory=_host_mesh_factory,
+                           compile_cache=CompileCache(directory=tmp_path))
+    first = ev(wl, default_config())
+    assert first.compiles > 0 and not first.cached
+    second = ev(wl, default_config())
+    assert second.compiles == 0 and second.cached
+
+
 @pytest.mark.parametrize("kind", ["train", "prefill"])
 def test_cached_vs_uncached_costs_identical(tmp_path, kind):
     """Regression: the engine never changes an observed cost.  Sweep a

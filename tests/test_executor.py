@@ -84,6 +84,26 @@ def test_prefetch_warms_without_blocking():
     assert len(ev.calls) == 3
 
 
+def test_run_trials_returns_log_indices():
+    """Annotation contract: each (index, result) pair points at the
+    exact runner.log entry the candidate was recorded at, on both the
+    sequential and the executor path."""
+    base = default_config()
+    cands = [(base, "a", None), (base.replace(microbatches=2), "b", None)]
+    runner = TrialRunner(WL, CountingEvaluator())
+    runner.run(base, "warmup")               # offset the log
+    pairs = run_trials(runner, cands)
+    assert [i for i, _ in pairs] == [1, 2]
+    ev = CountingEvaluator()
+    par_runner = TrialRunner(WL, ev)
+    with SweepExecutor(ev, max_workers=2) as ex:
+        par_pairs = run_trials(par_runner, cands, ex)
+    assert [i for i, _ in par_pairs] == [0, 1]
+    for (i, res), (_, name, _d) in zip(par_pairs, cands):
+        assert par_runner.log[i].name == name
+        assert par_runner.log[i].result["cost_s"] == res.cost_s
+
+
 def test_run_trials_rejects_foreign_executor():
     runner = TrialRunner(WL, CountingEvaluator())
     with SweepExecutor(CountingEvaluator()) as ex:

@@ -9,10 +9,12 @@ import math
 import numpy as np
 import pytest
 
+from repro.core.executor import run_trials
 from repro.core.params import (DOMAINS, SENSITIVITY_SWEEP, TunableConfig,
                                default_config, exhaustive_size)
 from repro.core.sensitivity import run_sensitivity
-from repro.core.tree import MAX_TRIALS, default_tree, run_tuning
+from repro.core.tree import (MAX_TRIALS, Stage, TreeCursor, default_tree,
+                             run_tuning)
 from repro.core.trial import TrialResult, TrialRunner, Workload
 
 WL = Workload("smollm-135m", "train_4k")
@@ -104,6 +106,104 @@ def test_crashed_baseline_recovers():
     rep = run_tuning(runner, default_config(), threshold=0.05)
     assert rep.final_cost == 10.0
     assert any("memoryFraction" in a for a in rep.accepted)
+
+
+@pytest.mark.parametrize("threshold", [0.05, 0.10])
+def test_crashed_baseline_first_viable_accepted(threshold):
+    """baseline cost_s = inf -> the first viable candidate must be
+    acceptable regardless of the relative-improvement threshold (no
+    finite cost can beat inf by a percentage)."""
+    def ev(wl, rt):
+        if rt.compute_dtype == "float32":       # only the baseline
+            return TrialResult(cost_s=float("inf"), crashed=True)
+        return TrialResult(cost_s=1e6)          # huge but finite
+    runner = TrialRunner(WL, ev)
+    rep = run_tuning(runner, default_config(), threshold=threshold)
+    assert rep.baseline_cost == float("inf")
+    assert rep.log[0]["result"]["crashed"]
+    assert rep.log[0]["accepted"] is True       # baseline row stays marked
+    # stage 1 (serializer -> bf16) is the first viable candidate
+    assert rep.accepted[0].startswith("serializer")
+    assert rep.log[1]["accepted"] is True
+    assert rep.final_cost == 1e6
+
+
+# ------------------------------------------------------------ TreeCursor
+def test_cursor_propose_absorb_protocol():
+    runner = TrialRunner(WL, synth_evaluator({}, {}))
+    cursor = TreeCursor(runner, default_config(shard_strategy="fsdp_tp"))
+    with pytest.raises(RuntimeError):
+        cursor.absorb([], [])                   # nothing proposed yet
+    batch = cursor.propose()
+    assert [c.name for c in batch] == ["baseline"]
+    with pytest.raises(RuntimeError):
+        cursor.propose()                        # batch not absorbed yet
+    pairs = run_trials(runner, [c.as_trial() for c in batch])
+    with pytest.raises(ValueError):
+        cursor.absorb([r for _, r in pairs], [])    # length mismatch
+    cursor.absorb([r for _, r in pairs], [i for i, _ in pairs])
+    assert not cursor.done
+    while True:
+        batch = cursor.propose()
+        if not batch:
+            break
+        pairs = run_trials(runner, [c.as_trial() for c in batch])
+        cursor.absorb([r for _, r in pairs], [i for i, _ in pairs])
+    assert cursor.done and cursor.propose() == []
+    assert cursor.report().n_trials == runner.n_trials <= MAX_TRIALS
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_cursor_replay_reconstructs_walk(seed):
+    """The resume invariant: replaying a walk's recorded results through
+    a fresh cursor reproduces the identical report (core/campaign.py
+    relies on exactly this)."""
+    weights, crash = cost_surface(seed)
+    runner = TrialRunner(WL, synth_evaluator(weights, crash))
+    baseline = default_config(shard_strategy="fsdp_tp")
+    ref = run_tuning(runner, baseline, threshold=0.05)
+    # replay: no evaluator calls, results served from the recorded log
+    replay_runner = TrialRunner(WL, lambda wl, rt: (_ for _ in ()).throw(
+        AssertionError("replay must not evaluate")))
+    cursor = TreeCursor(replay_runner, baseline, threshold=0.05)
+    stored = list(ref.log)
+    while True:
+        batch = cursor.propose()
+        if not batch:
+            break
+        start = replay_runner.n_trials
+        results, indices = [], []
+        for c, entry in zip(batch, stored[start:start + len(batch)]):
+            assert entry["config"] == c.config.as_dict()
+            res = TrialResult(**entry["result"])
+            replay_runner.record(c.config, c.name, res, c.delta)
+            results.append(res)
+            indices.append(replay_runner.n_trials - 1)
+        cursor.absorb(results, indices)
+    assert cursor.report().__dict__ == ref.__dict__
+
+
+def test_duplicate_configs_do_not_cross_annotate():
+    """Two alternatives lowering to the same config (and identical
+    configs across stages) must be annotated independently, by log
+    index — not by config equality."""
+    # attn_block_q=128 is the default: both alts build the same config
+    stages = [Stage("dup", "spark.dup",
+                    [dict(microbatches=2),
+                     dict(microbatches=2, attn_block_q=128)]),
+              Stage("again", "spark.again", [dict(microbatches=2)])]
+    def ev(wl, rt):
+        return TrialResult(cost_s=50.0 if rt.microbatches == 2 else 100.0)
+    runner = TrialRunner(WL, ev)
+    rep = run_tuning(runner, default_config(), threshold=0.05,
+                     stages=stages)
+    dup_entries = [e for e in rep.log if e["name"] == "dup"]
+    assert len(dup_entries) == 2
+    # exactly the winner is accepted, its identical twin is rejected
+    assert [e["accepted"] for e in dup_entries] == [True, False]
+    # stage "again" is a no-op on the new incumbent: never evaluated
+    assert not [e for e in rep.log if e["name"] == "again"]
+    assert rep.n_trials == 3
 
 
 def test_config_validation():
