@@ -22,6 +22,13 @@ wall-clock accounting fields are environment noise and excluded).  The
 campaign arm is additionally resumed from its checkpoints to prove an
 interrupted campaign re-pays nothing (``resume.evaluated_trials == 0``).
 
+A fourth arm exercises the Strategy API: the full Table-2 sensitivity
+matrix for the same batch, scheduled as a ``--strategy sensitivity``
+campaign (cache-cold, shared compile cache), then re-derived per cell
+with the blocking ``run_sensitivity`` on the SAME evaluator — the
+KnobImpact tables must match exactly and the direct pass must pay zero
+extra compiles (proof the campaign populated the shared cache).
+
 Results land in results/benchmarks/BENCH_campaign.json and a copy at
 the repo root (BENCH_campaign.json) for CI tracking.
 
@@ -91,6 +98,50 @@ def run_campaign(cells, threshold, scratch: pathlib.Path):
     return reports, ev.total_compiles, wall, camp.last_stats, ev
 
 
+def run_sensitivity_arm(cells, scratch: pathlib.Path):
+    """Table-2 matrix as a campaign strategy, cache-cold, then the
+    blocking per-cell driver warm on the same evaluator."""
+    import dataclasses
+    import json as _json
+    from repro.core.campaign import Campaign
+    from repro.core.sensitivity import run_sensitivity
+    from repro.core.trial import CompileCache, RooflineEvaluator, \
+        TrialRunner
+    ev = RooflineEvaluator(
+        compile_cache=CompileCache(directory=scratch / "shared"))
+    camp = Campaign(cells, strategy="sensitivity", evaluator=ev,
+                    baseline_factory=_baseline,
+                    checkpoint_dir=scratch / "checkpoints")
+    t0 = time.time()
+    reports = camp.run()
+    wall = time.time() - t0
+    campaign_compiles = ev.total_compiles
+
+    def fp(rep):
+        return _json.dumps(dataclasses.asdict(rep), sort_keys=True,
+                           default=str)
+
+    identical = True
+    for spec in cells:
+        runner = TrialRunner(spec.workload(), ev)
+        ref = run_sensitivity(runner, _baseline(spec))
+        # compile accounting differs warm-vs-cold; the decisions (the
+        # KnobImpact table, baseline cost, run count) may not
+        if ref.table() != reports[spec.key()].table() \
+                or fp(ref) != fp(reports[spec.key()]):
+            identical = False
+    direct_extra = ev.total_compiles - campaign_compiles
+    return {
+        "compiles": campaign_compiles,
+        "wall_s": round(wall, 1),
+        "trials": camp.last_stats["trials"],
+        "cells_per_hour": camp.last_stats["cells_per_hour"],
+        "cache": ev.compile_cache.stats(),
+        "identical_to_run_sensitivity": identical,
+        "direct_rerun_extra_compiles": direct_extra,
+    }
+
+
 def main(cells_spec: str, threshold: float = 0.05):
     from repro.core.campaign import parse_cells, tuning_fingerprint
     from repro.core.trial import RooflineEvaluator
@@ -113,6 +164,10 @@ def main(cells_spec: str, threshold: float = 0.05):
     camp_reports, camp_compiles, camp_wall, camp_stats, ev = run_campaign(
         cells, threshold, scratch=scratch / "camp")
     print(f"campaign: {camp_compiles} compiles, {camp_wall:.0f}s")
+    sens = run_sensitivity_arm(cells, scratch=scratch / "sens")
+    print(f"sensitivity campaign: {sens['compiles']} compiles, "
+          f"{sens['wall_s']:.0f}s, "
+          f"identical={sens['identical_to_run_sensitivity']}")
 
     # resume from the checkpoints: must replay everything, evaluate nothing
     camp2 = Campaign(cells, threshold=threshold,
@@ -152,6 +207,7 @@ def main(cells_spec: str, threshold: float = 0.05):
                      "cells_per_hour": camp_stats["cells_per_hour"],
                      "trials": camp_stats["trials"],
                      "cache": ev.compile_cache.stats()},
+        "sensitivity_campaign": sens,
         "compile_reduction_x": round(naive_compiles
                                      / max(1, camp_compiles), 2),
         "wall_speedup_x": round(naive_wall / max(1e-9, camp_wall), 2),
@@ -168,6 +224,8 @@ def main(cells_spec: str, threshold: float = 0.05):
     print(json.dumps(out, indent=1))
     assert not mismatches, "campaign changed tuning decisions!"
     assert resume_ok, "campaign resume re-paid trials!"
+    assert sens["identical_to_run_sensitivity"], \
+        "sensitivity-via-campaign changed the KnobImpact table!"
     return out
 
 

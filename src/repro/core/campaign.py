@@ -1,33 +1,38 @@
-"""Campaign engine — tune every cell of the assignment in one batch.
+"""Campaign engine — run any search strategy over many cells at once.
 
 The paper's deliverable is a *methodology* applied across a whole
 workload matrix (its Table 2 grid and three case studies), not one tuned
 application.  A :class:`Campaign` generalizes ``launch/tune.py`` from
-one (arch, shape, mesh) cell per process to the full assignment:
+one (arch, shape, mesh) cell per process to the full assignment, and —
+since the Strategy API — from one hardcoded procedure to any registered
+:class:`~repro.core.strategy.SearchCursor` strategy (``tree``,
+``short``, ``sensitivity``, ``random``, …):
 
   * **cell enumeration** — :func:`enumerate_cells` walks
     ``configs.list_archs() x SHAPES x meshes`` and keeps the applicable
     cells (same ``shape_applicable`` rule ``launch/dryrun.py`` uses);
-  * **interleaved cursors** — every cell gets a
-    :class:`~repro.core.tree.TreeCursor`; the scheduler keeps one
-    proposed batch per cell in flight on a single shared
+  * **interleaved cursors** — every cell gets a cursor from the
+    strategy registry; the scheduler keeps one proposed batch per cell
+    in flight on a single shared
     :class:`~repro.core.executor.SweepExecutor`, so the pool stays busy
-    across cells while each cell's walk stays sequential (stage N+1
-    depends on stage N).  Cells are kicked off grouped by arch, so
-    same-arch calibration compiles land adjacently and hit the shared
+    across cells while each cell's walk stays sequential.  Cells are
+    kicked off grouped by arch, so same-arch calibration compiles land
+    adjacently and hit the shared
     :class:`~repro.core.trial.CompileCache` while it is warm;
   * **checkpoint / resume** — after every absorbed batch the cell's
     trial log is persisted as JSON under ``results/campaign/``; an
     interrupted campaign replays the stored results through the cursor
-    (no re-evaluation, bit-identical accept/reject decisions) and only
-    evaluates the remainder;
-  * **reporting** — per-cell :class:`~repro.core.tree.TuningReport`s,
-    identical to what a sequential per-cell ``run_tuning`` produces,
-    plus the cross-cell speedup matrix (``report.campaign_markdown``).
+    (no re-evaluation, bit-identical decisions) and only evaluates the
+    remainder.  Checkpoints carry the strategy name + version; a
+    stale-strategy checkpoint is discarded with a warning, and
+    PR-2-era (version-1) tree checkpoints are migrated in place;
+  * **reporting** — per-cell reports identical to what the blocking
+    per-cell driver (``run_tuning`` / ``run_sensitivity``) produces,
+    plus the cross-cell matrix (``report.strategy_markdown``).
 
 Per-cell results are bit-identical to the sequential loop by
-construction: the cursor is the same state machine ``run_tuning``
-drives, and batches are recorded in proposal order.
+construction: the cursor is the same state machine the blocking driver
+uses, and batches are recorded in proposal order.
 """
 from __future__ import annotations
 
@@ -36,20 +41,22 @@ import hashlib
 import json
 import pathlib
 import time
+import warnings
 from concurrent.futures import FIRST_COMPLETED, wait
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs import SHAPES, get_config, get_shape, list_archs, \
     shape_applicable
 from repro.core.executor import SweepExecutor
 from repro.core.params import TunableConfig, default_config
-from repro.core.tree import Stage, TreeCursor, TuningReport
+from repro.core.strategy import SearchCursor, StrategySpec, get_strategy
+from repro.core.tree import Stage, TuningReport
 from repro.core.trial import TrialResult, TrialRunner, Workload
 
 CAMPAIGN_DIR = pathlib.Path(__file__).resolve().parents[3] \
     / "results" / "campaign"
 
-CHECKPOINT_VERSION = 1
+CHECKPOINT_VERSION = 2
 
 
 # ---------------------------------------------------------------- cells
@@ -136,26 +143,32 @@ class _CellRun:
     """One cell's in-progress walk: runner + cursor + replay ledger."""
 
     def __init__(self, spec: CellSpec, runner: TrialRunner,
-                 cursor: TreeCursor, signature: str):
+                 cursor: SearchCursor, signature: str):
         self.spec = spec
         self.runner = runner
         self.cursor = cursor
         self.signature = signature
         self.replay: List[Dict] = []     # checkpointed log entries
         self.replayed = 0                # trials served from checkpoint
-        self.report: Optional[TuningReport] = None
+        self.report: Optional[Any] = None
 
 
 class Campaign:
-    """Tune a batch of cells concurrently over one shared executor.
+    """Run one strategy over a batch of cells concurrently on a shared
+    executor.
 
-    ``evaluator`` defaults to a fresh
+    ``strategy`` names a registered search strategy (core/strategy.py);
+    ``strategy_options`` are passed to its cursor factory (e.g.
+    ``{"knobs": ...}`` for sensitivity, ``{"budget": ..., "seed": ...}``
+    for random).  ``evaluator`` defaults to a fresh
     :class:`~repro.core.trial.RooflineEvaluator` (shared compile cache
     across every cell); pass a synthetic evaluator for tests.  With
     ``checkpoint_dir=None`` nothing is persisted.
     """
 
     def __init__(self, cells: Sequence[CellSpec], *,
+                 strategy: str = "tree",
+                 strategy_options: Optional[Dict[str, Any]] = None,
                  threshold: float = 0.05,
                  evaluator: Optional[Callable] = None,
                  baseline_factory: Optional[
@@ -170,6 +183,8 @@ class Campaign:
         if len(set(c.key() for c in cells)) != len(cells):
             raise ValueError("duplicate cells in campaign")
         self.cells = list(cells)
+        self.strategy: StrategySpec = get_strategy(strategy)
+        self.strategy_options = dict(strategy_options or {})
         self.threshold = threshold
         if executor is not None and evaluator is not None \
                 and executor.evaluator is not evaluator:
@@ -190,6 +205,16 @@ class Campaign:
             if checkpoint_dir else None
         self.last_stats: Dict = {}
 
+    # --------------------------------------------------------- per cell
+    def _make_cursor(self, spec: CellSpec, runner: TrialRunner,
+                     baseline: TunableConfig) -> SearchCursor:
+        options = dict(self.strategy_options)
+        stages = self.stages_factory(spec)
+        if stages is not None:
+            options["stages"] = stages
+        return self.strategy.factory(runner, baseline, self.threshold,
+                                     options)
+
     # ------------------------------------------------------ checkpoints
     def _ckpt_path(self, spec: CellSpec) -> pathlib.Path:
         return self.checkpoint_dir / f"{spec.key()}.json"
@@ -204,14 +229,13 @@ class Campaign:
                 path.unlink()
 
     def _signature(self, spec: CellSpec, baseline: TunableConfig,
-                   stages: Optional[List[Stage]]) -> str:
-        from repro.core.tree import default_tree
-        stages = stages if stages is not None \
-            else default_tree(spec.workload().shp.kind)
+                   cursor: SearchCursor) -> str:
+        """Everything the cell's decisions depend on.  For the tree
+        strategy the blob layout is byte-identical to the PR-2-era
+        checkpoint signature, so v1 checkpoints stay resumable."""
         blob = json.dumps(
             [spec.key(), self.threshold, baseline.as_dict(),
-             [[s.name, s.spark_name, list(s.alternatives), list(s.kinds)]
-              for s in stages]],
+             cursor.signature_parts()],
             sort_keys=True, default=str)
         return hashlib.sha1(blob.encode()).hexdigest()
 
@@ -225,11 +249,25 @@ class Campaign:
             d = json.loads(path.read_text())
         except (OSError, ValueError):
             return                       # unreadable: start fresh
-        if d.get("version") != CHECKPOINT_VERSION \
-                or d.get("signature") != cr.signature:
+        # migration shim: PR-2-era (v1) checkpoints predate the strategy
+        # field but were always tree walks with today's signature blob
+        if d.get("version") == 1 and "strategy" not in d:
+            d["version"] = CHECKPOINT_VERSION
+            d["strategy"] = "tree"
+            d["strategy_version"] = 1
+        if (d.get("version") != CHECKPOINT_VERSION
+                or d.get("strategy") != self.strategy.name
+                or d.get("strategy_version") != self.strategy.version):
+            warnings.warn(
+                f"discarding stale checkpoint {path.name}: "
+                f"strategy {d.get('strategy')!r} "
+                f"v{d.get('strategy_version')} (ckpt v{d.get('version')}) "
+                f"!= {self.strategy.name!r} v{self.strategy.version}")
+            return
+        if d.get("signature") != cr.signature:
             return                       # stale tree/baseline: start fresh
         if d.get("done") and d.get("report"):
-            cr.report = TuningReport(**d["report"])
+            cr.report = self.strategy.load_report(d["report"])
             cr.replayed = cr.report.n_trials
             return
         cr.replay = list(d.get("log") or [])
@@ -240,12 +278,15 @@ class Campaign:
         self.checkpoint_dir.mkdir(parents=True, exist_ok=True)
         state = {
             "version": CHECKPOINT_VERSION,
+            "strategy": self.strategy.name,
+            "strategy_version": self.strategy.version,
             "cell": cr.spec.key(),
             "signature": cr.signature,
             "threshold": self.threshold,
             "done": cr.report is not None,
             "log": [dataclasses.asdict(e) for e in cr.runner.log],
-            "report": cr.report.__dict__ if cr.report else None,
+            "report": dataclasses.asdict(cr.report)
+            if cr.report is not None else None,
         }
         path = self._ckpt_path(cr.spec)
         tmp = path.with_suffix(".tmp")
@@ -291,9 +332,9 @@ class Campaign:
         self._save_checkpoint(cr)
 
     # -------------------------------------------------------------- run
-    def run(self) -> Dict[str, TuningReport]:
-        """Tune every cell; returns ``{cell_key: TuningReport}`` in the
-        campaign's cell order."""
+    def run(self) -> Dict[str, Any]:
+        """Run the strategy on every cell; returns ``{cell_key: report}``
+        in the campaign's cell order."""
         t0 = time.time()
         # group cells by arch (first-appearance order) so same-arch
         # trials are adjacent in the executor queue
@@ -304,12 +345,10 @@ class Campaign:
         runs: Dict[str, _CellRun] = {}
         for spec in ordered:
             baseline = self.baseline_factory(spec)
-            stages = self.stages_factory(spec)
             runner = TrialRunner(spec.workload(), self.evaluator)
-            cursor = TreeCursor(runner, baseline,
-                                threshold=self.threshold, stages=stages)
+            cursor = self._make_cursor(spec, runner, baseline)
             cr = _CellRun(spec, runner, cursor,
-                          self._signature(spec, baseline, stages))
+                          self._signature(spec, baseline, cursor))
             self._load_checkpoint(cr)
             runs[spec.key()] = cr
 
@@ -351,6 +390,7 @@ class Campaign:
         replayed = sum(cr.replayed for cr in runs.values())
         wall = time.time() - t0
         self.last_stats = {
+            "strategy": self.strategy.name,
             "cells": len(self.cells),
             "trials": n_trials,
             "replayed_trials": replayed,

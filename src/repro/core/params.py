@@ -1,41 +1,31 @@
 """The tunable-parameter space — the TPU/JAX analogue of the paper's Sec. 3.
 
 Each field of :class:`TunableConfig` maps 1:1 to one of the 12 Spark
-parameters the paper tunes (``PARAM_DOCS`` records the mapping; the two
-memoryFraction parameters are one *joint* knob, exactly as the paper tunes
-them: "shuffle/storage.memoryFraction = 0.4/0.4").
+parameters the paper tunes (the two memoryFraction parameters are one
+*joint* knob, exactly as the paper tunes them: "shuffle/storage
+.memoryFraction = 0.4/0.4").
 
-The tuner (core/tree.py) treats the step function as a black box and only
-ever edits these fields; the runtime (runtime/stepfn.py) consumes them.
+Every per-knob fact — domain, default, Spark analogue, sensitivity
+sweep values, compile-vs-analytic reach class and its evidence — is
+declared exactly once in :data:`repro.core.space.SPACE`; the historical
+module-level names below (``DOMAINS``, ``SENSITIVITY_SWEEP``,
+``PARAM_DOCS``, ``COMPILE_KNOBS``/``ANALYTIC_KNOBS``, ``KNOB_REACH``)
+are thin re-exports derived from that registry so existing imports keep
+working (tests/test_space.py pins them against the registry).
+
+The tuner strategies (core/strategy.py) treat the step function as a
+black box and only ever edit these fields; the runtime
+(runtime/stepfn.py) consumes them.
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, Tuple
 
-# value domains (first entry = Spark-like default)
-DOMAINS: Dict[str, Tuple[Any, ...]] = {
-    "compute_dtype":        ("float32", "bfloat16"),
-    "shard_strategy":       ("dp", "fsdp", "tp", "fsdp_tp"),
-    "grad_comm_dtype":      ("float32", "bfloat16", "int8_ef"),
-    "comm_codec":           ("bfloat16", "float16", "int8", "float32"),
-    # default 'dots' = Spark's balanced default fractions (0.2/0.6);
-    # 'none' = storage-heavy (store everything, 0.1/0.7);
-    # 'full' = shuffle-heavy (recompute everything)
-    "remat_policy":         ("dots", "none", "full"),
-    "microbatches":         (1, 2, 4),
-    "attn_block_q":         (128, 256, 512),
-    "attn_block_kv":        (128, 256, 512),
-    "fuse_grad_collectives": (False, True),
-    "kv_cache_dtype":       ("bfloat16", "int8", "float32"),
-    "remat_save_dtype":     ("float32", "bfloat16"),
-    "donate_buffers":       (True, False),
-    # beyond-paper knob (see DESIGN.md): how attention is distributed when
-    # head counts don't divide the model axis
-    "attn_tp_fallback":     ("replicate", "batch_shard"),
-}
+from repro.core.space import SPACE
 
+# value domains per tunable knob (first entry = Spark-like default)
+DOMAINS: Dict[str, Tuple[Any, ...]] = SPACE.domains()
 
 # ------------------------------------------------------- knob partition
 # Which TunableConfig fields can change the lowered/compiled HLO of a
@@ -43,28 +33,26 @@ DOMAINS: Dict[str, Tuple[Any, ...]] = {
 # The RooflineEvaluator's calibration compiles force attn_impl="xla"
 # (core/trial.py), and the Pallas VMEM tile sizes exist only inside the
 # Pallas kernel — so those three knobs never reach the compiled program
-# and a sweep over them can reuse a single compile.
-COMPILE_KNOBS: Tuple[str, ...] = (
-    "compute_dtype", "shard_strategy", "grad_comm_dtype", "comm_codec",
-    "remat_policy", "microbatches", "fuse_grad_collectives",
-    "kv_cache_dtype", "remat_save_dtype", "donate_buffers",
-    "attn_tp_fallback", "seq_parallel", "unroll_layers",
-)
-ANALYTIC_KNOBS: Tuple[str, ...] = ("attn_block_q", "attn_block_kv",
-                                   "attn_impl")
+# and a sweep over them can reuse a single compile.  The tuple order is
+# load-bearing (it fixes the compile_key layout, hence the disk
+# compile-cache keys) and comes from the registry's registration order.
+COMPILE_KNOBS: Tuple[str, ...] = SPACE.compile_knobs()
+ANALYTIC_KNOBS: Tuple[str, ...] = SPACE.analytic_knobs()
 
-# Where each conditionally-relevant compile knob actually reaches the
-# step function (evidence for the compile_key() canonicalizations):
-KNOB_REACH: Dict[str, str] = {
-    "grad_comm_dtype":      "train only; explicit path (gradsync) only",
-    "fuse_grad_collectives": "train only; explicit path (gradsync) only",
-    "microbatches":         "train only (stepfn.build_train_step)",
-    "remat_policy":         "train; prefill via remat.to_carry dtype",
-    "remat_save_dtype":     "train; prefill via remat.to_carry dtype",
-    "kv_cache_dtype":       "prefill/decode cache ops; not ssm family",
-    "comm_codec":           "moe family only (moe._encode_wire)",
-    "donate_buffers":       "train/decode donate_argnums; not prefill",
-}
+# Where each knob actually reaches the step function.  Broader than the
+# pre-registry re-export: every knob now carries an evidence line (the
+# registry enforces it), not just the eight compile knobs that
+# compile_key() conditionally canonicalizes — those eight are still the
+# evidence for the canonicalizations below.
+KNOB_REACH: Dict[str, str] = SPACE.reach_evidence()
+
+# Spark parameter <-> knob documentation (DESIGN.md §2.1, Table 2 rows)
+PARAM_DOCS: Dict[str, str] = SPACE.docs()
+
+# Knobs swept by the Sec.-4 sensitivity analysis, with the values tested
+# (default first, mirroring the paper's value-selection rules: binary ->
+# non-default; categorical -> all; numeric -> neighbours of default).
+SENSITIVITY_SWEEP: Dict[str, Tuple[Any, ...]] = SPACE.sweep()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,8 +106,8 @@ class TunableConfig:
 
         ``ANALYTIC_KNOBS`` are always dropped.  When the cell context is
         given, knobs that provably never reach that cell's step function
-        are canonicalized to their defaults (see KNOB_REACH below for
-        the per-knob evidence).
+        are canonicalized to their defaults (see KNOB_REACH for the
+        per-knob evidence).
         """
         d = {k: getattr(self, k) for k in COMPILE_KNOBS}
         dflt = _DEFAULT_CFG
@@ -172,10 +160,7 @@ class TunableConfig:
         return tuple((k, d[k]) for k in COMPILE_KNOBS)
 
     def validate(self) -> None:
-        for k, dom in DOMAINS.items():
-            v = getattr(self, k)
-            if v not in dom:
-                raise ValueError(f"{k}={v!r} not in domain {dom}")
+        SPACE.validate(self)
 
     def describe_delta(self, other: "TunableConfig") -> str:
         ds = [f"{k}={v!r}" for k, v in other.as_dict().items()
@@ -198,41 +183,6 @@ def _carry_dtype(remat_policy: str, save_dtype: str, compute_dtype: str
     return compute_dtype
 
 
-# Spark parameter <-> knob documentation (DESIGN.md §2.1, Table 2 rows)
-PARAM_DOCS: Dict[str, str] = {
-    "compute_dtype":        "spark.serializer (Java -> Kryo)",
-    "shard_strategy":       "spark.shuffle.manager (sort/hash/tungsten-sort)",
-    "grad_comm_dtype":      "spark.shuffle.compress",
-    "comm_codec":           "spark.io.compression.codec (snappy/lzf/lz4)",
-    "remat_policy":         "spark.shuffle.memoryFraction + spark.storage.memoryFraction",
-    "microbatches":         "spark.reducer.maxSizeInFlight",
-    "attn_block_q":         "spark.shuffle.file.buffer (q tile)",
-    "attn_block_kv":        "spark.shuffle.file.buffer (kv tile)",
-    "fuse_grad_collectives": "spark.shuffle.consolidateFiles",
-    "kv_cache_dtype":       "spark.rdd.compress",
-    "remat_save_dtype":     "spark.shuffle.spill.compress",
-    "donate_buffers":       "spark.shuffle.io.preferDirectBufs",
-    "attn_tp_fallback":     "(beyond-paper) attention TP fallback",
-}
-
-# Knobs swept by the Sec.-4 sensitivity analysis, with the values tested
-# (default first, mirroring the paper's value-selection rules: binary ->
-# non-default; categorical -> all; numeric -> neighbours of default).
-SENSITIVITY_SWEEP: Dict[str, Tuple[Any, ...]] = {
-    "compute_dtype":        ("float32", "bfloat16"),
-    "shard_strategy":       ("fsdp_tp", "dp", "fsdp", "tp"),
-    "grad_comm_dtype":      ("float32", "bfloat16"),
-    "comm_codec":           ("bfloat16", "float16", "int8"),
-    "remat_policy":         ("dots", "none", "full"),
-    "microbatches":         (1, 2, 4),
-    "attn_block_q":         (128, 256, 512),
-    "fuse_grad_collectives": (False, True),
-    "kv_cache_dtype":       ("bfloat16", "int8"),
-    "remat_save_dtype":     ("float32", "bfloat16"),
-    "donate_buffers":       (True, False),
-}
-
-
 def default_config(**overrides) -> TunableConfig:
     """Paper-faithful default (all-Spark-defaults analogue)."""
     c = TunableConfig(**overrides)
@@ -241,5 +191,7 @@ def default_config(**overrides) -> TunableConfig:
 
 
 def exhaustive_size() -> int:
-    """Size of the exhaustive grid the paper's 10-trial tree avoids."""
-    return len(list(itertools.product(*DOMAINS.values())))
+    """Size of the exhaustive grid the paper's 10-trial tree avoids,
+    computed arithmetically from the registry (the old implementation
+    materialized the full ``itertools.product`` just to ``len`` it)."""
+    return SPACE.exhaustive_size()

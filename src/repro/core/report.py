@@ -30,6 +30,25 @@ def sensitivity_markdown(reports: Dict[str, SensitivityReport]) -> str:
     return "\n".join(lines)
 
 
+def sensitivity_cell_markdown(rep: SensitivityReport) -> str:
+    """One cell's OFAT matrix: rows = knobs, per-value deviations."""
+    out = [f"### Sensitivity: `{rep.workload}`",
+           "",
+           f"* baseline cost: **{_fmt_s(rep.baseline_cost)}**",
+           f"* trials used:   {rep.n_trials}",
+           "",
+           "| knob (Spark analogue) | values | deviation % | "
+           "mean abs % | crashes |",
+           "|---|---|---|---|---|"]
+    for imp in rep.impacts:
+        devs = ", ".join("crash" if d != d else f"{d:+.1f}"
+                         for d in imp.deviations_pct)
+        vals = ", ".join(str(v) for v in imp.values)
+        out.append(f"| {imp.knob} ({imp.spark_name}) | {vals} | {devs} | "
+                   f"{imp.mean_abs_pct:.1f}% | {imp.crashes} |")
+    return "\n".join(out)
+
+
 def sensitivity_csv(rep: SensitivityReport) -> str:
     lines = ["knob,value,deviation_pct,crashed"]
     for imp in rep.impacts:
@@ -108,6 +127,27 @@ def campaign_markdown(reports: Dict[str, TuningReport]) -> str:
               "",
               "Each cell: `x<speedup> (<trials used>)`."]
     return "\n".join(lines)
+
+
+def cell_markdown(rep) -> str:
+    """Render one cell's report, whatever strategy produced it."""
+    if isinstance(rep, SensitivityReport):
+        return sensitivity_cell_markdown(rep)
+    return tuning_markdown(rep)
+
+
+def strategy_markdown(reports: Dict) -> str:
+    """Render a campaign's cross-cell summary, whatever strategy
+    produced it: tuning-style reports get the speedup matrix,
+    sensitivity reports get the Table-2 impact matrix."""
+    if all(isinstance(r, SensitivityReport) for r in reports.values()):
+        return ("### Campaign: sensitivity impact per cell (Table 2)\n\n"
+                + sensitivity_markdown(reports))
+    if all(isinstance(r, TuningReport) for r in reports.values()):
+        return campaign_markdown(reports)
+    raise TypeError("mixed report types in one campaign: "
+                    + ", ".join(sorted({type(r).__name__
+                                        for r in reports.values()})))
 
 
 def _fmt_s(x: float) -> str:

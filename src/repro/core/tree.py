@@ -24,8 +24,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence
 
-from repro.core.executor import SweepExecutor, run_trials
+from repro.core.executor import SweepExecutor
 from repro.core.params import TunableConfig
+from repro.core.space import SPACE
 from repro.core.trial import TrialRunner, TrialResult, Workload
 
 
@@ -37,26 +38,36 @@ class Stage:
     kinds: Sequence[str] = ("train", "prefill", "decode")
 
 
+def _stage(name: str, knob: str, alternatives: Sequence[Dict[str, Any]],
+           kinds: Sequence[str] = ("train", "prefill", "decode")) -> Stage:
+    """Build a stage whose spark_name comes from the knob registry and
+    whose alternative deltas are validated against it — a stage can no
+    longer reference a knob or value the space doesn't declare."""
+    for alt in alternatives:
+        SPACE.validate_delta(alt)
+    return Stage(name, SPACE[knob].spark, alternatives, kinds)
+
+
 def default_tree(kind: str = "train") -> List[Stage]:
     stages = [
-        Stage("serializer", "spark.serializer",
-              [dict(compute_dtype="bfloat16")]),
-        Stage("shuffle.manager", "spark.shuffle.manager",
-              [dict(shard_strategy="tp", comm_codec="float16"),
-               dict(shard_strategy="fsdp", fuse_grad_collectives=True)]),
-        Stage("shuffle.compress", "spark.shuffle.compress",
-              [dict(grad_comm_dtype="bfloat16")], kinds=("train",)),
-        Stage("memoryFraction", "spark.shuffle/storage.memoryFraction",
-              [dict(remat_policy="none"), dict(remat_policy="full")],
-              kinds=("train",)),
-        Stage("spill.compress", "spark.shuffle.spill.compress",
-              [dict(remat_save_dtype="bfloat16")], kinds=("train",)),
-        Stage("maxSizeInFlight", "spark.reducer.maxSizeInFlight",
-              [dict(microbatches=2)], kinds=("train",)),
-        Stage("rdd.compress", "spark.rdd.compress",
-              [dict(kv_cache_dtype="int8")], kinds=("prefill", "decode")),
-        Stage("file.buffer", "spark.shuffle.file.buffer",
-              [dict(attn_block_q=256, attn_block_kv=256)]),
+        _stage("serializer", "compute_dtype",
+               [dict(compute_dtype="bfloat16")]),
+        _stage("shuffle.manager", "shard_strategy",
+               [dict(shard_strategy="tp", comm_codec="float16"),
+                dict(shard_strategy="fsdp", fuse_grad_collectives=True)]),
+        _stage("shuffle.compress", "grad_comm_dtype",
+               [dict(grad_comm_dtype="bfloat16")], kinds=("train",)),
+        _stage("memoryFraction", "remat_policy",
+               [dict(remat_policy="none"), dict(remat_policy="full")],
+               kinds=("train",)),
+        _stage("spill.compress", "remat_save_dtype",
+               [dict(remat_save_dtype="bfloat16")], kinds=("train",)),
+        _stage("maxSizeInFlight", "microbatches",
+               [dict(microbatches=2)], kinds=("train",)),
+        _stage("rdd.compress", "kv_cache_dtype",
+               [dict(kv_cache_dtype="int8")], kinds=("prefill", "decode")),
+        _stage("file.buffer", "attn_block_q",
+               [dict(attn_block_q=256, attn_block_kv=256)]),
     ]
     return [s for s in stages if kind in s.kinds]
 
@@ -99,6 +110,48 @@ class Candidate:
         return (self.config, self.name, self.delta)
 
 
+def absorb_baseline(runner: TrialRunner, result: TrialResult,
+                    index: int) -> float:
+    """Record the baseline trial's outcome (shared by every
+    TuningReport-shaped strategy): the log entry is marked accepted and
+    the returned incumbent cost is inf for a crashed baseline, so any
+    later viable candidate clears the relative threshold."""
+    entry = runner.log[index]
+    entry.accepted = True
+    entry.note = "baseline (defaults after cluster-level config)"
+    return result.cost_s if not result.crashed else float("inf")
+
+
+def apply_accept_rule(runner: TrialRunner, batch, best_cost: float,
+                      threshold: float):
+    """The paper's accept/reject rule over one batch of alternatives
+    (``batch``: (candidate, result, log index) triples).  Crashes are
+    annotated (the paper's 0.1/0.7 sort-by-key outcome), the cheapest
+    viable candidate wins iff it beats ``best_cost`` by more than
+    ``threshold`` (any finite cost beats a crashed incumbent), and
+    every other entry is rejected.  Returns the accepted
+    (candidate, cost) or None.  Shared by the tree and random
+    strategies so the rule can never silently diverge between them."""
+    for _, res, idx in batch:
+        if res.crashed:
+            runner.log[idx].note = "crashed (exceeds per-chip HBM)"
+            runner.log[idx].accepted = False
+    viable = [(c, r, i) for c, r, i in batch if not r.crashed]
+    accepted = None
+    if viable:
+        cand, res, idx = min(viable, key=lambda t: t[1].cost_s)
+        improves = (best_cost == float("inf")
+                    or res.cost_s < best_cost * (1.0 - threshold))
+        runner.log[idx].accepted = bool(improves)
+        if improves:
+            accepted = (cand, res.cost_s)
+        # non-winning alternatives are rejected
+        for _, _, i in batch:
+            if runner.log[i].accepted is None:
+                runner.log[i].accepted = False
+    return accepted
+
+
 class TreeCursor:
     """Resumable state machine over the Fig.-4 tuning tree.
 
@@ -120,7 +173,14 @@ class TreeCursor:
     The cursor holds no results of its own beyond the incumbent/cost
     scalars, so a walk can be reconstructed (checkpoint resume) by
     replaying recorded trial results through propose/absorb.
+
+    This propose/absorb/done/report shape is the
+    :class:`~repro.core.strategy.SearchCursor` protocol — the campaign
+    engine drives any registered strategy through it (the ``tree`` and
+    ``short`` strategies are this class).
     """
+
+    strategy_version = 1
 
     def __init__(self, runner: TrialRunner, baseline: TunableConfig,
                  threshold: float = 0.05,
@@ -182,37 +242,20 @@ class TreeCursor:
             raise ValueError("results/indices do not match proposed batch")
         cands, self._pending = self._pending, None
         if self._stage_i < 0:
-            base_res = results[0]
-            entry = self.runner.log[indices[0]]
-            entry.accepted = True
-            entry.note = "baseline (defaults after cluster-level config)"
-            self.best_cost = base_res.cost_s if not base_res.crashed \
-                else float("inf")
+            self.best_cost = absorb_baseline(self.runner, results[0],
+                                             indices[0])
             self.baseline_cost = self.best_cost
             self._stage_i = 0
             return
         stage = self.stages[self._stage_i]
-        batch = list(zip(cands, results, indices))
-        for _, res, idx in batch:
-            # annotate crashes (the paper's 0.1/0.7 sort-by-key outcome)
-            if res.crashed:
-                self.runner.log[idx].note = "crashed (exceeds per-chip HBM)"
-                self.runner.log[idx].accepted = False
-        viable = [(c, r, i) for c, r, i in batch if not r.crashed]
-        if viable:
-            cand, res, idx = min(viable, key=lambda t: t[1].cost_s)
-            improves = (self.best_cost == float("inf")
-                        or res.cost_s < self.best_cost
-                        * (1.0 - self.threshold))
-            self.runner.log[idx].accepted = bool(improves)
-            if improves:
-                self.incumbent = cand.config
-                self.best_cost = res.cost_s
-                self.accepted.append(f"{stage.name}: {cand.delta}")
-            # non-winning alternatives are rejected
-            for _, _, i in batch:
-                if self.runner.log[i].accepted is None:
-                    self.runner.log[i].accepted = False
+        won = apply_accept_rule(self.runner,
+                                list(zip(cands, results, indices)),
+                                self.best_cost, self.threshold)
+        if won is not None:
+            cand, cost = won
+            self.incumbent = cand.config
+            self.best_cost = cost
+            self.accepted.append(f"{stage.name}: {cand.delta}")
         self._stage_i += 1
 
     def report(self) -> TuningReport:
@@ -226,6 +269,14 @@ class TreeCursor:
             log=[dataclasses.asdict(e) for e in self.runner.log],
         )
 
+    def signature_parts(self) -> list:
+        """JSON-serializable description of everything that shapes this
+        walk's decisions — part of the campaign checkpoint signature.
+        The layout is byte-compatible with the PR-2-era (v1) checkpoint
+        signature blob, so pre-Strategy-API tree checkpoints resume."""
+        return [[s.name, s.spark_name, list(s.alternatives), list(s.kinds)]
+                for s in self.stages]
+
 
 def run_tuning(runner: TrialRunner, baseline: TunableConfig,
                threshold: float = 0.05,
@@ -238,11 +289,6 @@ def run_tuning(runner: TrialRunner, baseline: TunableConfig,
     concurrently; the trial log, run budget and accept/reject decisions
     are identical to the sequential walk.  This is a thin blocking
     driver over :class:`TreeCursor`."""
-    cursor = TreeCursor(runner, baseline, threshold=threshold, stages=stages)
-    while True:
-        batch = cursor.propose()
-        if not batch:
-            break
-        pairs = run_trials(runner, [c.as_trial() for c in batch], executor)
-        cursor.absorb([r for _, r in pairs], [i for i, _ in pairs])
-    return cursor.report()
+    from repro.core.strategy import drive       # import cycle: call-time
+    return drive(TreeCursor(runner, baseline, threshold=threshold,
+                            stages=stages), executor)

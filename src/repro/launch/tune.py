@@ -1,13 +1,22 @@
 """Apply the paper's trial-and-error methodology to workload cells.
 
-Single-cell mode (``--arch/--shape``) tunes one (arch, shape, mesh)
-cell, exactly as before.  Campaign mode (``--cells a:s,...`` or
-``--all``) tunes a whole batch of cells in one concurrent campaign
-(core/campaign.py): every cell's tree walk interleaves over one shared
-executor + compile cache, per-cell state checkpoints under
-``results/campaign/`` (an interrupted campaign resumes without
-re-paying completed trials), and the per-cell reports are bit-identical
-to running the single-cell mode per cell.
+Single-cell mode (``--arch/--shape``) runs one (arch, shape, mesh)
+cell.  Campaign mode (``--cells a:s,...`` or ``--all``) runs a whole
+batch of cells in one concurrent campaign (core/campaign.py): every
+cell's cursor interleaves over one shared executor + compile cache,
+per-cell state checkpoints under ``results/campaign/`` (an interrupted
+campaign resumes without re-paying completed trials), and the per-cell
+reports are bit-identical to running the single-cell mode per cell.
+
+``--strategy`` picks the search procedure (core/strategy.py) and
+composes with both modes:
+
+  * ``tree`` (default) — the paper's Fig.-4 ≤10-trial tuning tree;
+  * ``short`` — the two-runs-shorter tree variant;
+  * ``sensitivity`` — the Sec.-4 OFAT matrix (Table 2);
+    ``--sweep-knobs`` restricts it to a knob subset;
+  * ``random`` — budget-matched random-search baseline
+    (``--budget``, ``--seed``).
 
 MUST set the placeholder device count before ANY jax-touching import.
 """
@@ -16,13 +25,13 @@ os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=512")
 
 import argparse
+import dataclasses
 import json
 import pathlib
 import sys
 
 from repro.core import report
-from repro.core.params import default_config
-from repro.core.tree import run_tuning
+from repro.core.params import SENSITIVITY_SWEEP, default_config
 from repro.core.trial import RooflineEvaluator, TrialRunner, Workload
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "tuning"
@@ -35,46 +44,92 @@ def _baseline(overrides=None):
                           **(overrides or {}))
 
 
-def _save_cell_report(rep) -> None:
-    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
-    (RESULTS_DIR / f"{rep.workload}.json").write_text(
-        json.dumps(rep.__dict__, indent=1, default=str))
-    (RESULTS_DIR / f"{rep.workload}.md").write_text(
-        report.tuning_markdown(rep))
+def _strategy_options(strategy, sweep_knobs=None, budget=None, seed=None):
+    """CLI flags -> the strategy's cursor-factory options."""
+    if strategy in ("sensitivity",) and sweep_knobs:
+        names = [k.strip() for k in sweep_knobs.split(",") if k.strip()]
+        unknown = [k for k in names if k not in SENSITIVITY_SWEEP]
+        if unknown:
+            raise ValueError(
+                f"--sweep-knobs: {', '.join(unknown)} not in the "
+                f"sensitivity sweep ({', '.join(SENSITIVITY_SWEEP)})")
+        return {"knobs": {k: SENSITIVITY_SWEEP[k] for k in names}}
+    if strategy == "random":
+        opts = {}
+        if budget is not None:
+            opts["budget"] = budget
+        if seed is not None:
+            opts["seed"] = seed
+        return opts
+    return {}
+
+
+def _save_cell_report(rep, strategy: str = "tree") -> None:
+    # non-tree strategies write under results/tuning/<strategy>/ so two
+    # strategies on the same cell never clobber each other's report
+    # (mirrors the per-strategy checkpoint split in tune_campaign)
+    out_dir = RESULTS_DIR if strategy == "tree" else RESULTS_DIR / strategy
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{rep.workload}.json").write_text(
+        json.dumps(dataclasses.asdict(rep), indent=1, default=str))
+    (out_dir / f"{rep.workload}.md").write_text(
+        report.cell_markdown(rep))
 
 
 def tune_cell(arch: str, shape: str, multi_pod: bool = False,
-              threshold: float = 0.05, baseline_overrides=None):
+              threshold: float = 0.05, baseline_overrides=None,
+              strategy: str = "tree", strategy_options=None):
     from repro.core.executor import SweepExecutor
+    from repro.core.strategy import drive, make_cursor
     wl = Workload(arch, shape, multi_pod)
     baseline = _baseline(baseline_overrides)
     with SweepExecutor(RooflineEvaluator()) as executor:
         runner = TrialRunner(wl, executor.evaluator)
-        rep = run_tuning(runner, baseline, threshold=threshold,
-                         executor=executor)
-    _save_cell_report(rep)
+        cursor = make_cursor(strategy, runner, baseline,
+                             threshold=threshold,
+                             options=strategy_options)
+        rep = drive(cursor, executor=executor)
+    _save_cell_report(rep, strategy)
     return rep
 
 
 def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
-                  fresh: bool = False, checkpoint_dir=None):
-    """Tune a batch of cells in one concurrent campaign; returns
-    ``{cell_key: TuningReport}`` plus the campaign's throughput stats."""
+                  fresh: bool = False, checkpoint_dir=None,
+                  strategy: str = "tree", strategy_options=None):
+    """Run a strategy over a batch of cells in one concurrent campaign;
+    returns ``{cell_key: report}`` plus the campaign's throughput
+    stats.  Non-tree strategies checkpoint under a per-strategy
+    subdirectory so campaigns with different strategies on the same
+    cells never clobber each other."""
     from repro.core.campaign import CAMPAIGN_DIR, Campaign
-    ckpt = pathlib.Path(checkpoint_dir) if checkpoint_dir else CAMPAIGN_DIR
+    if checkpoint_dir:
+        ckpt = pathlib.Path(checkpoint_dir)
+    else:
+        ckpt = CAMPAIGN_DIR if strategy == "tree" \
+            else CAMPAIGN_DIR / strategy
     camp = Campaign(
-        cells, threshold=threshold, checkpoint_dir=ckpt,
+        cells, strategy=strategy, strategy_options=strategy_options,
+        threshold=threshold, checkpoint_dir=ckpt,
         baseline_factory=lambda spec: _baseline(baseline_overrides))
     if fresh:
         camp.discard_checkpoints()
     reports = camp.run()
     for rep in reports.values():
-        _save_cell_report(rep)
+        _save_cell_report(rep, strategy)
     ckpt.mkdir(parents=True, exist_ok=True)
-    (ckpt / "campaign.md").write_text(report.campaign_markdown(reports))
+    (ckpt / "campaign.md").write_text(report.strategy_markdown(reports))
     (ckpt / "campaign_stats.json").write_text(
         json.dumps(camp.last_stats, indent=1))
     return reports, camp.last_stats
+
+
+def _print_cell_summary(rep) -> None:
+    if hasattr(rep, "speedup"):
+        print(f"\nspeedup: x{rep.speedup:.2f} in {rep.n_trials} trials")
+    else:
+        top = max(rep.impacts, key=lambda i: i.mean_abs_pct)
+        print(f"\ntop knob: {top.knob} ({top.mean_abs_pct:.1f}% mean "
+              f"|deviation|) in {rep.n_trials} trials")
 
 
 def main(argv=None) -> int:
@@ -87,30 +142,51 @@ def main(argv=None) -> int:
     ap.add_argument("--all", action="store_true",
                     help="campaign mode: every applicable cell of the "
                          "assignment")
+    ap.add_argument("--strategy", default="tree",
+                    choices=["tree", "short", "sensitivity", "random"],
+                    help="search strategy (core/strategy.py registry)")
+    ap.add_argument("--sweep-knobs",
+                    help="sensitivity strategy: comma-separated knob "
+                         "subset (default: the full SENSITIVITY_SWEEP)")
+    ap.add_argument("--budget", type=int,
+                    help="random strategy: trial budget (default 10)")
+    ap.add_argument("--seed", type=int,
+                    help="random strategy: sampling seed (default 0)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--threshold", type=float, default=0.05)
     ap.add_argument("--fresh", action="store_true",
                     help="campaign mode: discard checkpoints, re-tune")
     args = ap.parse_args(argv)
 
+    if args.sweep_knobs and args.strategy != "sensitivity":
+        ap.error("--sweep-knobs only applies to --strategy sensitivity")
+    if (args.budget is not None or args.seed is not None) \
+            and args.strategy != "random":
+        ap.error("--budget/--seed only apply to --strategy random")
+    options = _strategy_options(args.strategy, args.sweep_knobs,
+                                args.budget, args.seed)
     if args.all or args.cells:
         from repro.core.campaign import enumerate_cells, parse_cells
         cells = parse_cells(args.cells,
                             default_multi_pod=args.multi_pod) \
             if args.cells else enumerate_cells(meshes=(args.multi_pod,))
         reports, stats = tune_campaign(cells, threshold=args.threshold,
-                                       fresh=args.fresh)
-        print(report.campaign_markdown(reports))
-        print(f"\n{stats['cells']} cells in {stats['wall_s']}s "
+                                       fresh=args.fresh,
+                                       strategy=args.strategy,
+                                       strategy_options=options)
+        print(report.strategy_markdown(reports))
+        print(f"\n[{stats['strategy']}] {stats['cells']} cells in "
+              f"{stats['wall_s']}s "
               f"({stats['cells_per_hour']} cells/h; "
               f"{stats['evaluated_trials']} trials evaluated, "
               f"{stats['replayed_trials']} replayed from checkpoint)")
         return 0
     if not (args.arch and args.shape):
         ap.error("need --arch and --shape, or --cells/--all")
-    rep = tune_cell(args.arch, args.shape, args.multi_pod, args.threshold)
-    print(report.tuning_markdown(rep))
-    print(f"\nspeedup: x{rep.speedup:.2f} in {rep.n_trials} trials")
+    rep = tune_cell(args.arch, args.shape, args.multi_pod, args.threshold,
+                    strategy=args.strategy, strategy_options=options)
+    print(report.cell_markdown(rep))
+    _print_cell_summary(rep)
     return 0
 
 

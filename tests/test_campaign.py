@@ -4,21 +4,27 @@ All tests drive synthetic evaluators — no XLA compiles.  The
 load-bearing invariants:
 
   * a campaign's per-cell reports are bit-identical to the sequential
-    per-cell ``run_tuning`` loop;
+    per-cell blocking driver (``run_tuning`` / ``run_sensitivity``),
+    whatever strategy is selected;
   * an interrupted campaign resumes from ``results/campaign/``-style
     checkpoints without re-evaluating any completed (absorbed) trial,
     and converges to the same reports;
-  * stale or corrupt checkpoints are discarded, never trusted.
+  * stale or corrupt checkpoints are discarded, never trusted;
+    checkpoints from a different strategy are discarded with a warning,
+    and PR-2-era (version-1) tree checkpoints are migrated in place.
 """
+import dataclasses
 import json
 import threading
 
 import pytest
 
 from repro.core import report
-from repro.core.campaign import (Campaign, CellSpec, enumerate_cells,
-                                 parse_cells, tuning_fingerprint)
+from repro.core.campaign import (CHECKPOINT_VERSION, Campaign, CellSpec,
+                                 enumerate_cells, parse_cells,
+                                 tuning_fingerprint)
 from repro.core.params import default_config
+from repro.core.sensitivity import run_sensitivity
 from repro.core.tree import run_tuning
 from repro.core.trial import TrialResult, TrialRunner
 
@@ -226,6 +232,162 @@ def test_parse_cells():
         parse_cells("glm4-9b:long_500k")                # not applicable
     with pytest.raises(ValueError):
         parse_cells("")
+
+
+# --------------------------------------------------- strategy campaigns
+def sens_fingerprint(rep):
+    return json.dumps(dataclasses.asdict(rep), sort_keys=True,
+                      default=str)
+
+
+def test_sensitivity_campaign_matches_run_sensitivity(tmp_path):
+    """Acceptance: SensitivityCursor through Campaign reproduces
+    run_sensitivity's KnobImpact table exactly, per cell."""
+    camp = Campaign(CELLS, strategy="sensitivity", evaluator=surface,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path, max_workers=4)
+    reports = camp.run()
+    assert list(reports) == [c.key() for c in CELLS]
+    for spec in CELLS:
+        runner = TrialRunner(spec.workload(), surface)
+        ref = run_sensitivity(runner, baseline_factory(spec))
+        assert sens_fingerprint(reports[spec.key()]) \
+            == sens_fingerprint(ref)
+        assert reports[spec.key()].table() == ref.table()
+
+
+def test_sensitivity_campaign_kill_and_resume(tmp_path):
+    """Satellite: kill mid-campaign under the sensitivity strategy,
+    resume — no absorbed trial re-paid, identical final reports."""
+    killer = CountingSurface(fail_after=6)
+    camp = Campaign(CELLS, strategy="sensitivity", evaluator=killer,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path, max_workers=2)
+    with pytest.raises(KeyboardInterrupt):
+        camp.run()
+    absorbed = []
+    for spec in CELLS:
+        path = tmp_path / f"{spec.key()}.json"
+        if path.exists():
+            d = json.loads(path.read_text())
+            assert d["strategy"] == "sensitivity"
+            absorbed += [(d["cell"], e["config"]) for e in d["log"]]
+    assert absorbed                       # the kill landed mid-campaign
+    resumer = CountingSurface()
+    camp2 = Campaign(CELLS, strategy="sensitivity", evaluator=resumer,
+                     baseline_factory=baseline_factory,
+                     checkpoint_dir=tmp_path, max_workers=2)
+    reports = camp2.run()
+    re_evaluated = {(k, json.dumps(c, sort_keys=True))
+                    for k, c in resumer.calls}
+    absorbed_set = {(k, json.dumps(c, sort_keys=True))
+                    for k, c in absorbed}
+    assert not re_evaluated & absorbed_set
+    assert camp2.last_stats["replayed_trials"] == len(absorbed)
+    for spec in CELLS:
+        ref = run_sensitivity(TrialRunner(spec.workload(), surface),
+                              baseline_factory(spec))
+        assert sens_fingerprint(reports[spec.key()]) \
+            == sens_fingerprint(ref)
+
+
+def test_random_campaign_matches_direct_drive(tmp_path):
+    from repro.core.strategy import drive, make_cursor
+    camp = Campaign(CELLS, strategy="random",
+                    strategy_options={"seed": 7, "budget": 5},
+                    evaluator=surface, baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path)
+    reports = camp.run()
+    for spec in CELLS:
+        ref = drive(make_cursor("random",
+                                TrialRunner(spec.workload(), surface),
+                                baseline_factory(spec),
+                                options={"seed": 7, "budget": 5}))
+        assert reports[spec.key()].__dict__ == ref.__dict__
+    # resume replays everything
+    counting = CountingSurface()
+    camp2 = Campaign(CELLS, strategy="random",
+                     strategy_options={"seed": 7, "budget": 5},
+                     evaluator=counting,
+                     baseline_factory=baseline_factory,
+                     checkpoint_dir=tmp_path)
+    camp2.run()
+    assert counting.calls == []
+    # different seed -> different signature -> silent fresh start
+    camp3 = Campaign(CELLS[:1], strategy="random",
+                     strategy_options={"seed": 8, "budget": 5},
+                     evaluator=surface, baseline_factory=baseline_factory,
+                     checkpoint_dir=tmp_path)
+    camp3.run()
+    assert camp3.last_stats["replayed_trials"] == 0
+
+
+def test_stale_strategy_checkpoint_discarded_with_warning(tmp_path):
+    """Satellite: a checkpoint written by a different strategy must be
+    discarded with a warning, never crash resume."""
+    Campaign(CELLS[:1], strategy="sensitivity", evaluator=surface,
+             baseline_factory=baseline_factory,
+             checkpoint_dir=tmp_path).run()
+    counting = CountingSurface()
+    with pytest.warns(UserWarning, match="stale checkpoint"):
+        camp = Campaign(CELLS[:1], strategy="tree", evaluator=counting,
+                        baseline_factory=baseline_factory,
+                        checkpoint_dir=tmp_path)
+        rep = camp.run()[CELLS[0].key()]
+    assert camp.last_stats["replayed_trials"] == 0
+    assert len(counting.calls) == rep.n_trials
+    ref = run_tuning(TrialRunner(CELLS[0].workload(), surface),
+                     baseline_factory(CELLS[0]), threshold=0.05)
+    assert rep.__dict__ == ref.__dict__
+
+
+def test_v1_tree_checkpoint_migration_shim(tmp_path):
+    """PR-2-era checkpoints (version 1, no strategy field) must resume
+    under the tree strategy without re-evaluating anything."""
+    camp = Campaign(CELLS, evaluator=surface,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path)
+    first = camp.run()
+    for spec in CELLS:       # rewrite as PR-2-era layout
+        path = tmp_path / f"{spec.key()}.json"
+        d = json.loads(path.read_text())
+        assert d["version"] == CHECKPOINT_VERSION
+        d["version"] = 1
+        del d["strategy"], d["strategy_version"]
+        path.write_text(json.dumps(d))
+    counting = CountingSurface()
+    camp2 = Campaign(CELLS, evaluator=counting,
+                     baseline_factory=baseline_factory,
+                     checkpoint_dir=tmp_path)
+    second = camp2.run()
+    assert counting.calls == []          # nothing re-paid
+    assert camp2.last_stats["evaluated_trials"] == 0
+    for key in first:
+        assert first[key].__dict__ == second[key].__dict__
+    # ...but a v1 checkpoint under a non-tree strategy is stale
+    for spec in CELLS:
+        path = tmp_path / f"{spec.key()}.json"
+        d = json.loads(path.read_text())
+        d["version"] = 1
+        d.pop("strategy", None), d.pop("strategy_version", None)
+        path.write_text(json.dumps(d))
+    with pytest.warns(UserWarning, match="stale checkpoint"):
+        camp3 = Campaign(CELLS, strategy="random", evaluator=surface,
+                         baseline_factory=baseline_factory,
+                         checkpoint_dir=tmp_path)
+        camp3.run()
+    assert camp3.last_stats["replayed_trials"] == 0
+
+
+def test_sensitivity_campaign_markdown(tmp_path):
+    reports = Campaign(CELLS, strategy="sensitivity", evaluator=surface,
+                       baseline_factory=baseline_factory,
+                       checkpoint_dir=tmp_path).run()
+    md = report.strategy_markdown(reports)
+    assert "sensitivity impact per cell" in md
+    assert "| knob (Spark analogue) |" in md
+    cell_md = report.cell_markdown(next(iter(reports.values())))
+    assert "### Sensitivity:" in cell_md and "mean abs %" in cell_md
 
 
 def test_campaign_markdown(tmp_path):

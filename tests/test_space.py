@@ -1,0 +1,122 @@
+"""ParamSpace registry: single-source-of-truth consistency + drift.
+
+The registry (core/space.SPACE) is the only declaration of the knob
+space; everything else — DOMAINS, SENSITIVITY_SWEEP, PARAM_DOCS, the
+COMPILE/ANALYTIC partition, KNOB_REACH, TunableConfig defaults, the
+tree's stage deltas — is derived.  These tests pin the derivations so
+the historical names can never drift from the registry again."""
+import dataclasses
+import itertools
+
+import pytest
+
+from repro.core import params
+from repro.core.params import (ANALYTIC_KNOBS, COMPILE_KNOBS, DOMAINS,
+                               KNOB_REACH, PARAM_DOCS, SENSITIVITY_SWEEP,
+                               TunableConfig, default_config,
+                               exhaustive_size)
+from repro.core.space import SPACE, Knob, ParamSpace
+from repro.core.tree import default_tree, short_tree
+
+
+# ------------------------------------------------------------ registry
+def test_every_sweep_value_in_domain():
+    for knob in SPACE:
+        for v in knob.sweep:
+            assert v in knob.domain, f"{knob.name}: sweep {v!r}"
+
+
+def test_defaults_validate_and_match_tunableconfig():
+    cfg = default_config()            # validates
+    for knob in SPACE:
+        assert getattr(cfg, knob.name) == knob.default, knob.name
+
+
+def test_every_knob_has_reach_class_and_evidence():
+    for knob in SPACE:
+        assert knob.reach in ("compile", "analytic"), knob.name
+        assert knob.reach_evidence, f"{knob.name}: no reach evidence"
+    # everything the compile_key canonicalizes must carry its own line
+    for name in ("grad_comm_dtype", "fuse_grad_collectives",
+                 "microbatches", "remat_policy", "remat_save_dtype",
+                 "kv_cache_dtype", "comm_codec", "donate_buffers"):
+        assert KNOB_REACH[name]
+
+
+def test_registry_covers_tunableconfig_exactly():
+    fields = tuple(f.name for f in dataclasses.fields(TunableConfig))
+    assert SPACE.names() == fields
+
+
+# --------------------------------------------------------- re-exports
+def test_domains_reexport_in_sync():
+    assert DOMAINS == SPACE.domains()
+    assert list(DOMAINS) == [k.name for k in SPACE if k.tunable]
+    for name, dom in DOMAINS.items():
+        assert dom[0] == getattr(TunableConfig(), name)   # default first
+
+
+def test_sweep_reexport_in_sync():
+    assert SENSITIVITY_SWEEP == SPACE.sweep()
+    for name, values in SENSITIVITY_SWEEP.items():
+        assert set(values) <= set(DOMAINS[name]), name
+
+
+def test_docs_reexport_in_sync():
+    assert PARAM_DOCS == SPACE.docs()
+    assert set(PARAM_DOCS) == set(DOMAINS)
+
+
+def test_partition_reexport_in_sync():
+    assert COMPILE_KNOBS == SPACE.compile_knobs()
+    assert ANALYTIC_KNOBS == SPACE.analytic_knobs()
+    assert KNOB_REACH == SPACE.reach_evidence()
+    # the partition covers the registry with no overlap, in
+    # registration order (the order fixes compile_key / disk-cache keys)
+    assert set(COMPILE_KNOBS) | set(ANALYTIC_KNOBS) == set(SPACE.names())
+    assert not set(COMPILE_KNOBS) & set(ANALYTIC_KNOBS)
+    assert [n for n in SPACE.names() if n in COMPILE_KNOBS] \
+        == list(COMPILE_KNOBS)
+
+
+def test_exhaustive_size_is_arithmetic():
+    # same number the old materialize-the-grid implementation produced,
+    # without building the cross-product
+    lazy_count = sum(1 for _ in itertools.product(*DOMAINS.values()))
+    assert exhaustive_size() == lazy_count
+    assert exhaustive_size() == SPACE.exhaustive_size() >= 512
+
+
+# --------------------------------------------------------- validation
+def test_validate_delta():
+    SPACE.validate_delta({"compute_dtype": "bfloat16", "microbatches": 2})
+    with pytest.raises(KeyError):
+        SPACE.validate_delta({"no_such_knob": 1})
+    with pytest.raises(ValueError):
+        SPACE.validate_delta({"microbatches": 3})
+    with pytest.raises(ValueError):
+        params.default_config(compute_dtype="float64")
+
+
+def test_knob_declaration_errors():
+    with pytest.raises(ValueError):
+        Knob("k", (1, 2), "nope")                       # bad reach
+    with pytest.raises(ValueError):
+        Knob("k", (), "compile")                        # empty domain
+    with pytest.raises(ValueError):
+        Knob("k", (1, 2), "compile", sweep=(3,))        # sweep ∉ domain
+    with pytest.raises(ValueError):
+        ParamSpace([Knob("k", (1,), "compile"),
+                    Knob("k", (2,), "compile")])        # duplicate
+
+
+# -------------------------------------------------- derived tree deltas
+@pytest.mark.parametrize("tree_fn", [default_tree, short_tree])
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_tree_stage_deltas_lie_in_space(tree_fn, kind):
+    for stage in tree_fn(kind):
+        for alt in stage.alternatives:
+            SPACE.validate_delta(alt)                   # raises on drift
+        # the stage's spark label comes from the registry
+        assert any(SPACE[k].spark == stage.spark_name
+                   for alt in stage.alternatives for k in alt)

@@ -1,0 +1,232 @@
+"""Strategy API: the SearchCursor protocol, registry, and the four
+registered strategies.
+
+Load-bearing invariants:
+
+  * ``run_tuning`` / ``run_sensitivity`` are thin wrappers — their
+    outputs are bit-identical to driving the cursor directly;
+  * every strategy obeys the propose/absorb alternation and is
+    reconstructible by replay (the campaign's resume contract);
+  * the random baseline is deterministic per (seed, cell) and respects
+    its trial budget.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.executor import SweepExecutor, run_trials
+from repro.core.params import DOMAINS, default_config
+from repro.core.sensitivity import SensitivityCursor, run_sensitivity
+from repro.core.strategy import (RandomCursor, SearchCursor, drive,
+                                 get_strategy, list_strategies,
+                                 make_cursor)
+from repro.core.tree import (MAX_TRIALS, TreeCursor, TuningReport,
+                             run_tuning, short_tree)
+from repro.core.trial import TrialResult, TrialRunner, Workload
+
+WL = Workload("smollm-135m", "train_4k")
+BASE = default_config(shard_strategy="fsdp_tp")
+
+
+def surface(wl, rt):
+    """Deterministic synthetic cost surface with one crash region."""
+    if rt.remat_policy == "full":
+        return TrialResult(cost_s=float("inf"), crashed=True)
+    c = 100.0
+    if rt.compute_dtype == "bfloat16":
+        c *= 0.7
+    if rt.shard_strategy == "tp":
+        c *= 0.9
+    if rt.remat_policy == "none":
+        c *= 0.85
+    if rt.microbatches == 2:
+        c *= 0.97
+    if rt.kv_cache_dtype == "int8":
+        c *= 0.8
+    if rt.attn_block_q == 256:
+        c *= 0.92
+    return TrialResult(cost_s=round(c, 6))
+
+
+def fingerprint(rep):
+    return json.dumps(dataclasses.asdict(rep), sort_keys=True,
+                      default=str)
+
+
+# ------------------------------------------------------------- registry
+def test_registry_contents():
+    assert set(list_strategies()) == {"tree", "short", "sensitivity",
+                                      "random"}
+    for name in list_strategies():
+        spec = get_strategy(name)
+        assert spec.version >= 1 and callable(spec.factory)
+    assert get_strategy("short-tree") is get_strategy("short")  # alias
+    with pytest.raises(KeyError):
+        get_strategy("hillclimb")
+
+
+def test_every_strategy_satisfies_protocol():
+    for name in list_strategies():
+        cursor = make_cursor(name, TrialRunner(WL, surface), BASE)
+        assert isinstance(cursor, SearchCursor), name
+        assert cursor.signature_parts() is not None
+        json.dumps(cursor.signature_parts(), default=str)  # serializable
+
+
+def test_short_strategy_uses_short_tree():
+    cursor = make_cursor("short", TrialRunner(WL, surface), BASE)
+    assert [s.name for s in cursor.stages] \
+        == [s.name for s in short_tree("train")]
+    assert all(s.name != "file.buffer" for s in cursor.stages)
+
+
+# ------------------------------------------- thin wrappers (no churn)
+def test_run_tuning_is_thin_wrapper_over_tree_cursor():
+    """Satellite: run_tuning output must be bit-identical to a direct
+    SearchCursor drive — callers in examples/ and benchmarks/ see no
+    change."""
+    ref = run_tuning(TrialRunner(WL, surface), BASE, threshold=0.05)
+    direct = drive(TreeCursor(TrialRunner(WL, surface), BASE,
+                              threshold=0.05))
+    assert ref.__dict__ == direct.__dict__
+    via_registry = drive(make_cursor("tree", TrialRunner(WL, surface),
+                                     BASE, threshold=0.05))
+    assert ref.__dict__ == via_registry.__dict__
+
+
+def test_run_sensitivity_is_thin_wrapper_over_cursor():
+    ref = run_sensitivity(TrialRunner(WL, surface), BASE)
+    direct = drive(SensitivityCursor(TrialRunner(WL, surface), BASE))
+    assert fingerprint(ref) == fingerprint(direct)
+    via_registry = drive(make_cursor("sensitivity",
+                                     TrialRunner(WL, surface), BASE))
+    assert fingerprint(ref) == fingerprint(via_registry)
+
+
+def test_drive_with_executor_identical():
+    ref = drive(make_cursor("sensitivity", TrialRunner(WL, surface),
+                            BASE))
+    with SweepExecutor(surface, max_workers=4) as ex:
+        runner = TrialRunner(WL, surface)
+        par = drive(make_cursor("sensitivity", runner, BASE),
+                    executor=ex)
+    assert fingerprint(ref) == fingerprint(par)
+
+
+# -------------------------------------------------- sensitivity cursor
+def test_sensitivity_cursor_protocol_discipline():
+    cursor = SensitivityCursor(TrialRunner(WL, surface), BASE)
+    with pytest.raises(RuntimeError):
+        cursor.absorb([], [])                    # nothing proposed
+    batch = cursor.propose()
+    assert [c.name for c in batch] == ["baseline"]
+    with pytest.raises(RuntimeError):
+        cursor.propose()                         # batch not absorbed
+    pairs = run_trials(cursor.runner, [c.as_trial() for c in batch])
+    with pytest.raises(ValueError):
+        cursor.absorb([r for _, r in pairs], [])  # length mismatch
+    cursor.absorb([r for _, r in pairs], [i for i, _ in pairs])
+    assert not cursor.done
+    batch = cursor.propose()
+    assert batch and all(c.name.startswith("ofat:") for c in batch)
+    pairs = run_trials(cursor.runner, [c.as_trial() for c in batch])
+    cursor.absorb([r for _, r in pairs], [i for i, _ in pairs])
+    assert cursor.done and cursor.propose() == []
+    rep = cursor.report()
+    assert rep.n_trials == cursor.runner.n_trials == len(batch) + 1
+
+
+def test_sensitivity_cursor_replay_reconstructs():
+    """The campaign resume contract: replaying recorded results through
+    a fresh cursor reproduces the identical report."""
+    ref_runner = TrialRunner(WL, surface)
+    ref = run_sensitivity(ref_runner, BASE)
+    stored = [dataclasses.asdict(e) for e in ref_runner.log]
+    replay_runner = TrialRunner(WL, lambda wl, rt: (_ for _ in ()).throw(
+        AssertionError("replay must not evaluate")))
+    cursor = SensitivityCursor(replay_runner, BASE)
+    while True:
+        batch = cursor.propose()
+        if not batch:
+            break
+        start = replay_runner.n_trials
+        results, indices = [], []
+        for c, entry in zip(batch, stored[start:start + len(batch)]):
+            assert entry["config"] == c.config.as_dict()
+            res = TrialResult(**entry["result"])
+            replay_runner.record(c.config, c.name, res, c.delta)
+            results.append(res)
+            indices.append(replay_runner.n_trials - 1)
+        cursor.absorb(results, indices)
+    assert fingerprint(cursor.report()) == fingerprint(ref)
+
+
+def test_sensitivity_cursor_knob_subset():
+    knobs = {"compute_dtype": ("float32", "bfloat16"),
+             "microbatches": (1, 2, 4)}
+    rep = drive(make_cursor("sensitivity", TrialRunner(WL, surface),
+                            BASE, options={"knobs": knobs}))
+    assert [i.knob for i in rep.impacts] == list(knobs)
+    assert rep.n_trials == 1 + 1 + 2     # baseline + bf16 + mb 2/4
+
+
+# ------------------------------------------------------ random baseline
+def test_random_cursor_budget_and_determinism():
+    rep = drive(make_cursor("random", TrialRunner(WL, surface), BASE))
+    again = drive(make_cursor("random", TrialRunner(WL, surface), BASE))
+    assert rep.__dict__ == again.__dict__          # seeded per cell
+    assert rep.n_trials == MAX_TRIALS              # budget-matched
+    assert rep.final_cost <= rep.baseline_cost + 1e-9
+    other_cell = drive(make_cursor(
+        "random", TrialRunner(Workload("glm4-9b", "train_4k"), surface),
+        BASE))
+    assert [e["config"] for e in other_cell.log[1:]] \
+        != [e["config"] for e in rep.log[1:]]      # per-cell sampling
+
+
+def test_random_cursor_seed_and_budget_options():
+    a = drive(make_cursor("random", TrialRunner(WL, surface), BASE,
+                          options={"seed": 1}))
+    b = drive(make_cursor("random", TrialRunner(WL, surface), BASE,
+                          options={"seed": 2}))
+    assert [e["config"] for e in a.log] != [e["config"] for e in b.log]
+    small = drive(make_cursor("random", TrialRunner(WL, surface), BASE,
+                              options={"budget": 3}))
+    assert small.n_trials == 3
+    with pytest.raises(ValueError):
+        make_cursor("random", TrialRunner(WL, surface), BASE,
+                    options={"budget": 0})
+
+
+def test_random_cursor_samples_within_domains():
+    cursor = RandomCursor(TrialRunner(WL, surface), BASE, seed=3)
+    for cand in cursor._sample(20):
+        cand.config.validate()
+        for k, v in cand.delta.items():
+            assert v in DOMAINS[k]
+
+
+def test_random_cursor_crash_handling():
+    def always_crash(wl, rt):
+        return TrialResult(cost_s=float("inf"), crashed=True)
+    rep = drive(make_cursor("random", TrialRunner(WL, always_crash),
+                            BASE))
+    assert rep.baseline_cost == float("inf")
+    assert rep.accepted == []
+    assert all(e["result"]["crashed"] for e in rep.log)
+    # crashed baseline + one viable candidate -> recovery is accepted
+    def only_random_viable(wl, rt):
+        if rt == BASE:
+            return TrialResult(cost_s=float("inf"), crashed=True)
+        return TrialResult(cost_s=5.0)
+    rep = drive(make_cursor("random",
+                            TrialRunner(WL, only_random_viable), BASE))
+    assert rep.final_cost == 5.0 and len(rep.accepted) == 1
+
+
+def test_random_report_is_tuning_report():
+    rep = drive(make_cursor("random", TrialRunner(WL, surface), BASE))
+    assert isinstance(rep, TuningReport)
+    assert np.isfinite(rep.speedup)
