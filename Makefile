@@ -1,4 +1,4 @@
-.PHONY: verify verify-fast bench-trials bench-campaign
+.PHONY: verify verify-fast bench-trials bench-campaign bench-fabric
 
 # tier-1: full suite, fail-fast (ROADMAP.md)
 verify:
@@ -15,3 +15,8 @@ bench-trials:
 # campaign-throughput benchmark -> BENCH_campaign.json
 bench-campaign:
 	PYTHONPATH=src python -m benchmarks.bench_campaign
+
+# fabric benchmark (worker scaling / kill-recovery / warm-start)
+# -> BENCH_fabric.json
+bench-fabric:
+	PYTHONPATH=src python -m benchmarks.bench_fabric

@@ -1,0 +1,336 @@
+"""Fabric benchmark: lease-based multi-process cell throughput,
+crash recovery, and warm-start trials-to-convergence.
+
+Three arms over the PR-2 4-cell batch, all on the deterministic
+synthetic surface (benchmarks/fabric_surface.py) with a fixed per-trial
+latency — on this CPU-only box real XLA compiles are core-bound, so the
+synthetic latency isolates what this benchmark is about: the *fabric
+layer* (lease claiming, checkpointing, recovery, scheduling), whose
+scaling carries over to compile-bound workers on real multi-core /
+multi-host hardware.  The cost surface is independent of the latency,
+so every arm's tuning decisions are comparable bit-for-bit.
+
+  * **scaling** — 1 → 2 → 4 worker processes over one shared directory
+    (subprocess workers via ``launch/tune.py --worker``).  Workers
+    initialize behind a ready/go file barrier, so measured wall covers
+    fabric work, not interpreter/JAX cold start (reported separately
+    as ``startup_s``).  Per-cell decisions must be bit-identical to the
+    single-process campaign in every arm;
+  * **kill-recovery** — worker A is SIGKILL'd mid-campaign (lease left
+    held, heartbeat frozen); worker B steals the expired lease,
+    resumes from the checkpoints and completes the batch.  An
+    evaluation ledger (every trial each process actually ran) is
+    diffed against the checkpoint state captured at kill time: zero
+    *absorbed* trials may be re-paid (in-flight unabsorbed trials are
+    legitimately re-run — batch-boundary replay);
+  * **warm-start** — a cold campaign populates the trial history; a
+    second campaign over a fresh checkpoint dir warm-starts from it.
+    Per cell: the number of evaluated trials until the cold run's best
+    config first appears.  Warm must be strictly lower on >= 2 of the
+    4 cells.
+
+Results land in results/benchmarks/BENCH_fabric.json and a copy at the
+repo root (BENCH_fabric.json) for CI tracking.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_fabric
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+import pathlib
+import shutil
+import signal
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+DEFAULT_CELLS = ("smollm-135m:train_4k,smollm-135m:prefill_32k,"
+                 "xlstm-1.3b:prefill_32k,xlstm-1.3b:decode_32k")
+TRIAL_LATENCY_S = 0.5
+KILL_LATENCY_S = 0.35
+KILL_TTL_S = 2.0
+EVALUATOR_SPEC = "benchmarks.fabric_surface:make_evaluator"
+
+
+def _baseline(spec=None):
+    from repro.core.params import default_config
+    return default_config(shard_strategy="fsdp_tp", attn_impl="pallas")
+
+
+def _env(sleep_s=0.0, ledger=None):
+    from benchmarks.fabric_surface import LEDGER_ENV, SLEEP_ENV
+    env = os.environ.copy()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(ROOT / "src"), str(ROOT)]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    env[SLEEP_ENV] = str(sleep_s)
+    if ledger:
+        env[LEDGER_ENV] = str(ledger)
+    else:
+        env.pop(LEDGER_ENV, None)
+    return env
+
+
+def _wait_files(paths, timeout_s=120.0):
+    deadline = time.time() + timeout_s
+    while time.time() < deadline:
+        if all(p.exists() for p in paths):
+            return
+        time.sleep(0.05)
+    missing = [str(p) for p in paths if not p.exists()]
+    raise TimeoutError(f"barrier files never appeared: {missing}")
+
+
+def _absorbed_state(directory, cells):
+    """(cell, config-json) pairs already absorbed per the checkpoints,
+    plus which cells are done."""
+    absorbed, done = set(), set()
+    for spec in cells:
+        path = directory / f"{spec.key()}.json"
+        try:
+            d = json.loads(path.read_text())
+        except (OSError, ValueError):
+            continue
+        for e in d.get("log") or []:
+            absorbed.add((d["cell"],
+                          json.dumps(e["config"], sort_keys=True)))
+        if d.get("done"):
+            done.add(spec.key())
+    return absorbed, done
+
+
+def _reference_reports(cells):
+    """Single-process campaign on the same surface — the decision
+    oracle every fabric arm must reproduce bit-for-bit."""
+    from benchmarks.fabric_surface import surface_cost
+    from repro.core.campaign import Campaign
+    return Campaign(cells, evaluator=surface_cost,
+                    baseline_factory=_baseline,
+                    checkpoint_dir=None).run()
+
+
+def _fabric_reports(directory, cells):
+    from repro.core.strategy import get_strategy
+    spec = get_strategy("tree")
+    out = {}
+    for c in cells:
+        d = json.loads((directory / f"{c.key()}.json").read_text())
+        assert d.get("done"), f"{c.key()} incomplete"
+        out[c.key()] = spec.load_report(d["report"])
+    return out
+
+
+def _identical(reports, ref):
+    from repro.core.campaign import tuning_fingerprint
+    return all(tuning_fingerprint(reports[k]) == tuning_fingerprint(ref[k])
+               for k in ref)
+
+
+# ------------------------------------------------------------- scaling
+def run_scaling_arm(cells, n_workers, scratch):
+    from repro.core.fabric import LeaseBoard, spawn_worker
+    d = scratch / f"scale-{n_workers}w"
+    barrier = d / "barrier"
+    t_spawn = time.time()
+    procs, readies = [], []
+    go = barrier / "go"
+    for i in range(n_workers):
+        ready = barrier / f"ready-{i}"
+        readies.append(ready)
+        procs.append(spawn_worker(
+            cells, d, strategy="tree", evaluator_spec=EVALUATOR_SPEC,
+            ttl_s=30.0, worker_id=f"w{i}", ready_file=ready, go_file=go,
+            log_path=d / "logs" / f"worker-{i}.log",
+            env=_env(sleep_s=TRIAL_LATENCY_S)))
+    _wait_files(readies)
+    startup_s = time.time() - t_spawn
+    t0 = time.time()
+    go.parent.mkdir(parents=True, exist_ok=True)
+    go.touch()
+    rcs = [p.wait(timeout=300) for p in procs]
+    wall = time.time() - t0
+    assert not any(rcs), f"worker rcs {rcs}"
+    assert LeaseBoard(d).held() == [], "lease left held"
+    reports = _fabric_reports(d, cells)
+    return {
+        "workers": n_workers,
+        "wall_s": round(wall, 2),
+        "startup_s": round(startup_s, 2),
+        "cells_per_hour": round(len(cells) * 3600.0 / max(wall, 1e-9), 1),
+    }, reports
+
+
+# ------------------------------------------------------- kill recovery
+def run_kill_recovery_arm(cells, scratch):
+    from repro.core.fabric import LeaseBoard, spawn_worker
+    d = scratch / "kill"
+    ledger_a, ledger_b = d / "ledger-a.jsonl", d / "ledger-b.jsonl"
+    a = spawn_worker(cells, d, strategy="tree",
+                     evaluator_spec=EVALUATOR_SPEC, ttl_s=KILL_TTL_S,
+                     worker_id="worker-a",
+                     log_path=d / "logs" / "worker-a.log",
+                     env=_env(sleep_s=KILL_LATENCY_S, ledger=ledger_a))
+    # wait until real progress is absorbed, then SIGKILL mid-campaign
+    deadline = time.time() + 120
+    while time.time() < deadline:
+        absorbed, done = _absorbed_state(d, cells)
+        if len(done) == len(cells):
+            raise RuntimeError("worker A finished before the kill — "
+                               "raise KILL_LATENCY_S")
+        if len(absorbed) >= 4:
+            break
+        time.sleep(0.05)
+    a.send_signal(signal.SIGKILL)
+    a.wait(timeout=30)
+    absorbed_at_kill, done_at_kill = _absorbed_state(d, cells)
+    held = LeaseBoard(d).held()
+    assert held, "SIGKILL'd worker should leave its lease on the board"
+    t_kill = time.time()
+    b = spawn_worker(cells, d, strategy="tree",
+                     evaluator_spec=EVALUATOR_SPEC, ttl_s=KILL_TTL_S,
+                     worker_id="worker-b",
+                     log_path=d / "logs" / "worker-b.log",
+                     env=_env(sleep_s=KILL_LATENCY_S, ledger=ledger_b))
+    rc = b.wait(timeout=300)
+    assert rc == 0, f"recovery worker rc {rc}"
+    recovery_wall = time.time() - t_kill
+    assert LeaseBoard(d).held() == [], "lease left held after recovery"
+
+    evaluated_b = set()
+    for line in ledger_b.read_text().splitlines():
+        rec = json.loads(line)
+        evaluated_b.add((rec["cell"],
+                         json.dumps(rec["config"], sort_keys=True)))
+    repaid = evaluated_b & absorbed_at_kill
+    reports = _fabric_reports(d, cells)
+    return {
+        "killed_with_absorbed_trials": len(absorbed_at_kill),
+        "cells_done_at_kill": len(done_at_kill),
+        "lease_held_after_kill": [st.worker for st in held],
+        "lease_ttl_s": KILL_TTL_S,
+        "recovery_wall_s": round(recovery_wall, 2),
+        "trials_evaluated_by_recoverer": len(evaluated_b),
+        "repaid_absorbed_trials": len(repaid),
+        "completed": True,
+    }, reports
+
+
+# ----------------------------------------------------------- warm-start
+def trials_to_best(rep, target_config):
+    for i, e in enumerate(rep.log):
+        if e["config"] == target_config:
+            return i + 1
+    return None                          # never reached
+
+
+def run_warmstart_arm(cells, scratch):
+    from benchmarks.fabric_surface import surface_cost
+    from repro.core.campaign import Campaign
+    from repro.core.history import TrialHistory
+    d = scratch / "warm"
+    cold = Campaign(cells, evaluator=surface_cost,
+                    baseline_factory=_baseline,
+                    checkpoint_dir=d / "cold").run()
+    hist = TrialHistory(d / "cold" / "history.jsonl")
+    warm_camp = Campaign(cells, evaluator=surface_cost,
+                         baseline_factory=_baseline,
+                         checkpoint_dir=d / "warm",
+                         history=hist, warm_start=True)
+    warm = warm_camp.run()
+    per_cell = {}
+    improved = []
+    for c in cells:
+        target = cold[c.key()].final_config
+        t_cold = trials_to_best(cold[c.key()], target)
+        t_warm = trials_to_best(warm[c.key()], target)
+        per_cell[c.key()] = {
+            "cold_trials_to_best": t_cold,
+            "warm_trials_to_best": t_warm,
+            "cold_trials": cold[c.key()].n_trials,
+            "warm_trials": warm[c.key()].n_trials,
+        }
+        if t_warm is not None and t_warm < t_cold:
+            improved.append(c.key())
+    return {
+        "warmstarted_cells": warm_camp.last_stats["warmstarted_cells"],
+        "per_cell": per_cell,
+        "improved_cells": improved,
+        "n_improved": len(improved),
+    }
+
+
+# ------------------------------------------------------------------ main
+def main(cells_spec: str):
+    from repro.core.campaign import parse_cells
+    cells = parse_cells(cells_spec)
+    print(f"batch: {len(cells)} cells "
+          f"({', '.join(c.key() for c in cells)})")
+    scratch = ROOT / "results" / "bench_fabric_scratch"
+    shutil.rmtree(scratch, ignore_errors=True)
+
+    ref = _reference_reports(cells)
+    scaling, identical = {}, True
+    for n in (1, 2, 4):
+        stats, reports = run_scaling_arm(cells, n, scratch)
+        identical &= _identical(reports, ref)
+        scaling[str(n)] = stats
+        print(f"scaling {n}w: {stats['wall_s']}s "
+              f"({stats['cells_per_hour']} cells/h, "
+              f"startup {stats['startup_s']}s)")
+    speedup_2w = round(scaling["1"]["wall_s"]
+                       / max(scaling["2"]["wall_s"], 1e-9), 2)
+    speedup_4w = round(scaling["1"]["wall_s"]
+                       / max(scaling["4"]["wall_s"], 1e-9), 2)
+    print(f"speedup: 2w x{speedup_2w}, 4w x{speedup_4w}, "
+          f"decisions identical={identical}")
+
+    kill, kill_reports = run_kill_recovery_arm(cells, scratch)
+    identical_kill = _identical(kill_reports, ref)
+    print(f"kill-recovery: {kill['killed_with_absorbed_trials']} trials "
+          f"absorbed at kill, {kill['repaid_absorbed_trials']} re-paid, "
+          f"identical={identical_kill}")
+
+    warm = run_warmstart_arm(cells, scratch)
+    print(f"warm-start: fewer trials-to-best on {warm['n_improved']}"
+          f"/{len(cells)} cells ({', '.join(warm['improved_cells'])})")
+
+    out = {
+        "cells": [c.key() for c in cells],
+        "trial_latency_s": TRIAL_LATENCY_S,
+        "evaluator": EVALUATOR_SPEC,
+        "scaling": scaling,
+        "speedup_2w": speedup_2w,
+        "speedup_4w": speedup_4w,
+        "identical_to_single_process": identical,
+        "kill_recovery": {**kill,
+                          "identical_to_single_process": identical_kill},
+        "warmstart": warm,
+    }
+    res_dir = ROOT / "results" / "benchmarks"
+    res_dir.mkdir(parents=True, exist_ok=True)
+    (res_dir / "BENCH_fabric.json").write_text(json.dumps(out, indent=1))
+    (ROOT / "BENCH_fabric.json").write_text(json.dumps(out, indent=1))
+    shutil.rmtree(scratch, ignore_errors=True)
+    print(json.dumps(out, indent=1))
+    assert identical and identical_kill, \
+        "fabric changed tuning decisions!"
+    assert speedup_2w >= 1.6, \
+        f"2-worker cell-throughput speedup {speedup_2w} < 1.6x"
+    assert kill["repaid_absorbed_trials"] == 0, \
+        "lease recovery re-paid absorbed trials!"
+    assert warm["n_improved"] >= 2, \
+        "warm-start failed to cut trials-to-best on >= 2 cells"
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default=DEFAULT_CELLS,
+                    help="comma-separated arch:shape[:pod|multipod]")
+    a = ap.parse_args()
+    main(a.cells)

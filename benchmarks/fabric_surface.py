@@ -1,0 +1,81 @@
+"""Deterministic synthetic cost surface for fabric benchmarks/tests.
+
+Worker processes load it via ``launch/tune.py --evaluator
+benchmarks.fabric_surface:make_evaluator`` (dotted-path spec, repo root
+on PYTHONPATH).  Two environment variables parameterize the spawned
+workers (env is the only channel a subprocess worker inherits):
+
+  * ``FABRIC_SURFACE_SLEEP_S`` — per-trial sleep, emulating evaluation
+    latency (a real trial pays XLA compiles; the sleep releases the
+    GIL exactly like they do).  The *cost surface is independent of
+    the sleep*, so decisions are comparable across arms;
+  * ``FABRIC_SURFACE_LEDGER`` — optional path; every evaluation
+    appends one ``{"cell", "config"}`` JSON line (O_APPEND, whole
+    lines).  The kill-recovery arm diffs this ledger against the
+    checkpoint state captured at kill time to prove that no absorbed
+    trial is ever re-paid.
+
+The surface is built so that cells of the same shape *kind* share one
+best tree outcome (arch only scales the constant): that is the
+structure warm-starting exploits, and exactly what the cell-signature
+similarity (core/history.py) is supposed to detect.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.trial import TrialResult
+
+SLEEP_ENV = "FABRIC_SURFACE_SLEEP_S"
+LEDGER_ENV = "FABRIC_SURFACE_LEDGER"
+
+
+def surface_cost(wl, rt) -> TrialResult:
+    """Deterministic cost of one (workload, config) trial."""
+    kind = wl.shp.kind
+    c = 100.0 * (1.0 + 0.01 * (len(wl.arch) % 7))
+    if rt.compute_dtype == "bfloat16":
+        c *= 0.72
+    if rt.shard_strategy == "tp":
+        c *= 1.15
+    if rt.shard_strategy == "fsdp":
+        c *= 1.10
+    if kind == "train":
+        if rt.remat_policy == "none":
+            c *= 0.84
+        if rt.remat_policy == "full":
+            c *= 1.20
+        if rt.microbatches == 2:
+            c *= 0.93
+        if rt.grad_comm_dtype == "bfloat16":
+            c *= 0.99
+    else:
+        if rt.kv_cache_dtype == "int8":
+            c *= 0.85
+    if rt.attn_block_q == 256:
+        c *= 0.92
+    return TrialResult(cost_s=round(c, 6))
+
+
+def make_evaluator():
+    """Zero-arg factory (the ``--evaluator`` contract)."""
+    sleep_s = float(os.environ.get(SLEEP_ENV, "0") or "0")
+    ledger = os.environ.get(LEDGER_ENV)
+
+    def evaluate(wl, rt) -> TrialResult:
+        if ledger:
+            line = json.dumps({"cell": wl.key(), "config": rt.as_dict()},
+                              sort_keys=True) + "\n"
+            fd = os.open(ledger, os.O_WRONLY | os.O_CREAT | os.O_APPEND,
+                         0o644)
+            try:
+                os.write(fd, line.encode())
+            finally:
+                os.close(fd)
+        if sleep_s > 0:
+            time.sleep(sleep_s)
+        return surface_cost(wl, rt)
+
+    return evaluate

@@ -28,7 +28,16 @@ since the Strategy API — from one hardcoded procedure to any registered
     PR-2-era (version-1) tree checkpoints are migrated in place;
   * **reporting** — per-cell reports identical to what the blocking
     per-cell driver (``run_tuning`` / ``run_sensitivity``) produces,
-    plus the cross-cell matrix (``report.strategy_markdown``).
+    plus the cross-cell matrix (``report.strategy_markdown``);
+  * **history / warm-start** — every evaluated trial is appended to the
+    shared ``history.jsonl`` trial store (core/history.py) by default,
+    and with ``warm_start=True`` each cell's cursor is seeded with the
+    best configs of the nearest already-tuned cells, so campaigns are
+    cumulative: each run makes the next one cheaper.
+
+The campaign fabric (core/fabric.py) runs one single-cell campaign per
+leased cell, sharing this module's checkpoint, history and compile-cache
+formats across worker processes.
 
 Per-cell results are bit-identical to the sequential loop by
 construction: the cursor is the same state machine the blocking driver
@@ -39,7 +48,9 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
 import pathlib
+import tempfile
 import time
 import warnings
 from concurrent.futures import FIRST_COMPLETED, wait
@@ -48,6 +59,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.configs import SHAPES, get_config, get_shape, list_archs, \
     shape_applicable
 from repro.core.executor import SweepExecutor
+from repro.core.history import (HISTORY_FILENAME, TrialHistory,
+                                config_from_dict)
 from repro.core.params import TunableConfig, default_config
 from repro.core.strategy import SearchCursor, StrategySpec, get_strategy
 from repro.core.tree import Stage, TuningReport
@@ -72,6 +85,12 @@ class CellSpec:
 
     def key(self) -> str:
         return self.workload().key()
+
+    def spec(self) -> str:
+        """The ``arch:shape:mesh`` string :func:`parse_cells` accepts
+        (the fabric coordinator rebuilds worker command lines from it)."""
+        return f"{self.arch}:{self.shape}:" \
+            + ("multipod" if self.multi_pod else "pod")
 
 
 def enumerate_cells(archs: Optional[Sequence[str]] = None,
@@ -151,6 +170,7 @@ class _CellRun:
         self.replay: List[Dict] = []     # checkpointed log entries
         self.replayed = 0                # trials served from checkpoint
         self.report: Optional[Any] = None
+        self.warmstart: List[Dict] = []  # seed configs offered the cursor
 
 
 class Campaign:
@@ -164,6 +184,18 @@ class Campaign:
     :class:`~repro.core.trial.RooflineEvaluator` (shared compile cache
     across every cell); pass a synthetic evaluator for tests.  With
     ``checkpoint_dir=None`` nothing is persisted.
+
+    **Trial history / warm-start** — with the default ``history=None``
+    every evaluated trial is appended to ``history.jsonl`` next to the
+    checkpoints (campaigns are cumulative by default; pass
+    ``history=False`` to opt out, or a :class:`~repro.core.history
+    .TrialHistory` to use a specific store).  With ``warm_start=True``
+    each cell's cursor is additionally seeded (via the
+    ``SearchCursor.warm_start`` hook) with the best configs of the
+    ``warm_start_cells`` nearest already-tuned cells in the history.
+    The seeds a cell actually used are persisted in its checkpoint and
+    replayed on resume, so an interrupted warm-started campaign is
+    immune to the history growing underneath it.
     """
 
     def __init__(self, cells: Sequence[CellSpec], *,
@@ -177,7 +209,11 @@ class Campaign:
                      Callable[[CellSpec], Optional[List[Stage]]]] = None,
                  checkpoint_dir: Optional[pathlib.Path] = CAMPAIGN_DIR,
                  executor: Optional[SweepExecutor] = None,
-                 max_workers: Optional[int] = None):
+                 max_workers: Optional[int] = None,
+                 history: Any = None,
+                 warm_start: bool = False,
+                 warm_start_cells: int = 2,
+                 warm_start_per_cell: int = 1):
         if not cells:
             raise ValueError("campaign needs at least one cell")
         if len(set(c.key() for c in cells)) != len(cells):
@@ -203,6 +239,20 @@ class Campaign:
         self.stages_factory = stages_factory or (lambda spec: None)
         self.checkpoint_dir = pathlib.Path(checkpoint_dir) \
             if checkpoint_dir else None
+        if history is None:              # default: cumulative campaigns
+            self.history = TrialHistory(
+                self.checkpoint_dir / HISTORY_FILENAME) \
+                if self.checkpoint_dir else None
+        elif history is False:
+            self.history = None
+        else:
+            self.history = history
+        self.warm_start = bool(warm_start)
+        self.warm_start_cells = warm_start_cells
+        self.warm_start_per_cell = warm_start_per_cell
+        if self.warm_start and self.history is None:
+            raise ValueError("warm_start needs a trial history "
+                             "(checkpoint_dir or history=)")
         self.last_stats: Dict = {}
 
     # --------------------------------------------------------- per cell
@@ -239,16 +289,22 @@ class Campaign:
             sort_keys=True, default=str)
         return hashlib.sha1(blob.encode()).hexdigest()
 
-    def _load_checkpoint(self, cr: _CellRun) -> None:
+    def _read_checkpoint(self, spec: CellSpec) -> Optional[Dict]:
+        """Read + version/strategy-validate a cell's checkpoint (stale
+        strategies are discarded with a warning); signature validation
+        happens later in :meth:`_apply_checkpoint`, once warm-start
+        seeds are resolved."""
         if self.checkpoint_dir is None:
-            return
-        path = self._ckpt_path(cr.spec)
+            return None
+        path = self._ckpt_path(spec)
         if not path.exists():
-            return
+            return None
         try:
             d = json.loads(path.read_text())
         except (OSError, ValueError):
-            return                       # unreadable: start fresh
+            return None                  # unreadable: start fresh
+        if not isinstance(d, dict):
+            return None
         # migration shim: PR-2-era (v1) checkpoints predate the strategy
         # field but were always tree walks with today's signature blob
         if d.get("version") == 1 and "strategy" not in d:
@@ -263,14 +319,66 @@ class Campaign:
                 f"strategy {d.get('strategy')!r} "
                 f"v{d.get('strategy_version')} (ckpt v{d.get('version')}) "
                 f"!= {self.strategy.name!r} v{self.strategy.version}")
-            return
-        if d.get("signature") != cr.signature:
-            return                       # stale tree/baseline: start fresh
+            return None
+        return d
+
+    def _apply_checkpoint(self, cr: _CellRun, d: Optional[Dict]) -> None:
+        if d is None or d.get("signature") != cr.signature:
+            return                       # stale walk/baseline: start fresh
         if d.get("done") and d.get("report"):
             cr.report = self.strategy.load_report(d["report"])
             cr.replayed = cr.report.n_trials
             return
         cr.replay = list(d.get("log") or [])
+
+    def _resolve_warmstart(self, spec: CellSpec, baseline: TunableConfig,
+                           cursor: SearchCursor,
+                           ckpt: Optional[Dict]) -> List[Dict]:
+        """Seed the cursor; returns the seed config dicts used.
+
+        A valid checkpoint's stored seed list wins over a fresh history
+        query (the history may have grown since the interrupted run —
+        replay must see the walk the checkpoint recorded); the stored
+        list is trusted only if re-seeding the cursor with it
+        reproduces the checkpoint's signature."""
+        if not self.warm_start:
+            return []
+        stored = (ckpt or {}).get("warmstart")
+        if stored is not None:           # [] is a stored decision too
+            try:
+                cursor.warm_start([config_from_dict(d) for d in stored])
+            except (ValueError, TypeError):
+                pass                     # seeds from an older knob space
+            else:
+                if self._signature(spec, baseline, cursor) \
+                        == ckpt.get("signature"):
+                    return list(stored)
+        ws = self.history.warmstart_configs(
+            spec.arch, spec.shape, spec.multi_pod,
+            k_cells=self.warm_start_cells,
+            per_cell=self.warm_start_per_cell)
+        cursor.warm_start([config_from_dict(d) for d in ws])
+        return ws
+
+    def cell_done(self, spec: CellSpec) -> bool:
+        """Full-validation completion probe: True iff the cell's
+        checkpoint is done under this campaign's *exact* parameters —
+        strategy, version, threshold/baseline/walk signature and
+        warm-start seeds all included.  Never evaluates a trial; the
+        fabric's pre-claim check (a done checkpoint from different
+        parameters reads as not-done, so the cell is claimed and
+        re-tuned exactly as the single-process campaign would)."""
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")   # probe loops must not spam
+            ckpt = self._read_checkpoint(spec)
+        if not ckpt or not ckpt.get("done") or not ckpt.get("report"):
+            return False
+        baseline = self.baseline_factory(spec)
+        runner = TrialRunner(spec.workload(), self.evaluator)
+        cursor = self._make_cursor(spec, runner, baseline)
+        self._resolve_warmstart(spec, baseline, cursor, ckpt)
+        return ckpt.get("signature") \
+            == self._signature(spec, baseline, cursor)
 
     def _save_checkpoint(self, cr: _CellRun) -> None:
         if self.checkpoint_dir is None:
@@ -288,10 +396,24 @@ class Campaign:
             "report": dataclasses.asdict(cr.report)
             if cr.report is not None else None,
         }
+        if self.warm_start:
+            state["warmstart"] = cr.warmstart
         path = self._ckpt_path(cr.spec)
-        tmp = path.with_suffix(".tmp")
-        tmp.write_text(json.dumps(state, indent=1, default=str))
-        tmp.replace(path)
+        # unique tempfile + atomic replace: concurrent fabric workers
+        # racing on one cell (a stolen-but-alive lease) each publish a
+        # complete checkpoint, never a torn one
+        fd, tmp = tempfile.mkstemp(dir=self.checkpoint_dir,
+                                   prefix=f".{path.name}.", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(json.dumps(state, indent=1, default=str))
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     # -------------------------------------------------------- advancing
     def _advance(self, cr: _CellRun):
@@ -314,7 +436,8 @@ class Campaign:
                 results, indices = [], []
                 for s, c in zip(stored, batch):
                     res = TrialResult(**s["result"])
-                    cr.runner.record(c.config, c.name, res, c.delta)
+                    cr.runner.record(c.config, c.name, res, c.delta,
+                                     replayed=True)
                     results.append(res)
                     indices.append(cr.runner.n_trials - 1)
                 cr.cursor.absorb(results, indices)
@@ -345,11 +468,18 @@ class Campaign:
         runs: Dict[str, _CellRun] = {}
         for spec in ordered:
             baseline = self.baseline_factory(spec)
-            runner = TrialRunner(spec.workload(), self.evaluator)
+            runner = TrialRunner(
+                spec.workload(), self.evaluator,
+                history=self.history.sink(self.strategy.name)
+                if self.history is not None else None)
             cursor = self._make_cursor(spec, runner, baseline)
+            ckpt = self._read_checkpoint(spec)
+            warmstart = self._resolve_warmstart(spec, baseline, cursor,
+                                                ckpt)
             cr = _CellRun(spec, runner, cursor,
                           self._signature(spec, baseline, cursor))
-            self._load_checkpoint(cr)
+            cr.warmstart = warmstart
+            self._apply_checkpoint(cr, ckpt)
             runs[spec.key()] = cr
 
         own_executor = self.executor is None
@@ -399,4 +529,7 @@ class Campaign:
             "cells_per_hour": round(len(self.cells) / max(wall, 1e-9)
                                     * 3600.0, 1),
         }
+        if self.warm_start:
+            self.last_stats["warmstarted_cells"] = sum(
+                1 for cr in runs.values() if cr.warmstart)
         return reports

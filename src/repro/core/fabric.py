@@ -1,0 +1,654 @@
+"""Campaign fabric — lease-based multi-process (multi-host-ready) cell
+distribution.
+
+The campaign engine (core/campaign.py) interleaves many cells inside
+one process; the fabric shards those cells *across* processes — and,
+because coordination happens entirely through files in one shared
+directory, across hosts that mount it.  Nothing about the unit of work
+changes: a cell's per-strategy JSON checkpoint is still the resumable
+state, the disk :class:`~repro.core.trial.CompileCache` is still the
+shared compile memo, and the ``history.jsonl`` trial store
+(core/history.py) still accumulates every trial.  The fabric adds only
+the *claiming* layer:
+
+  * **leases** — a worker claims a cell by atomically creating
+    ``leases/<cell>.lease`` (``O_CREAT | O_EXCL``) in the shared
+    directory.  The lease records worker id, pid, host and a heartbeat
+    timestamp with a TTL;
+  * **heartbeats** — while a worker runs a cell's campaign, a daemon
+    thread refreshes the lease (atomic tempfile + ``os.replace``) every
+    ``ttl / 3`` seconds;
+  * **recovery** — a lease whose heartbeat is older than its TTL is
+    *expired*: any worker may steal it.  Stealing is race-free — the
+    stealer ``os.rename``\\ s the lease file to a unique tombstone name
+    (exactly one concurrent stealer wins the rename), unlinks it, and
+    re-creates the lease via ``O_EXCL``.  Because the dead worker
+    checkpointed after every absorbed batch, the stealer's campaign
+    replays everything already absorbed and re-pays nothing;
+  * **liveness caveat** — a worker paused longer than its TTL (not
+    dead, just slow) can lose its lease and race the stealer on one
+    cell.  Both then run the same deterministic cursor and publish
+    whole checkpoints atomically, so the race costs duplicated trial
+    evaluation, never a torn or wrong checkpoint.  The owner notices on
+    its next heartbeat (:class:`LeaseLost`) and stops claiming credit.
+
+Topologies:
+
+  * ``FabricWorker`` — one process working a shared directory; start
+    any number, on any host, at any time (``launch/tune.py --worker``);
+  * ``run_coordinator`` — convenience: spawn N local workers over the
+    same directory and wait (``launch/tune.py --workers N`` /
+    ``--coordinate``).
+
+**Filesystem requirements** — the protocol leans on three POSIX
+semantics of the shared directory: atomic ``O_CREAT | O_EXCL`` create
+(lease claims and steal locks — needs NFSv4+ if the mount is NFS; v2/v3
+O_EXCL is not atomic), atomic same-directory ``rename`` (checkpoints,
+compile-cache entries, heartbeats), and single-``write`` ``O_APPEND``
+appends (the trial history — local filesystems only; NFS may interleave
+bytes across hosts, which the torn-tolerant history reader survives by
+*dropping* the damaged lines, silently losing those records from
+warm-start retrieval).  Local disks and single-host multi-process use
+get all three; for multi-host NFS campaigns the leases and checkpoints
+are sound on v4+, and an object-store/rsync-backed history is the
+roadmap item.
+
+The coordinator passes workers an ``--evaluator module:factory``
+dotted-path spec, so benchmarks and tests can swap the real
+:class:`~repro.core.trial.RooflineEvaluator` for synthetic surfaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import json
+import os
+import pathlib
+import socket
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+import uuid
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.campaign import (CHECKPOINT_VERSION, Campaign, CellSpec)
+from repro.core.executor import SweepExecutor
+from repro.core.history import HISTORY_FILENAME, TrialHistory
+from repro.core.strategy import get_strategy
+
+LEASE_DIR = "leases"
+DEFAULT_TTL_S = 30.0
+
+
+class LeaseLost(RuntimeError):
+    """The lease was stolen (our heartbeat went stale) or vanished."""
+
+
+# ---------------------------------------------------------------- leases
+@dataclasses.dataclass
+class LeaseState:
+    """The JSON payload of one lease file."""
+    cell: str
+    worker: str
+    pid: int
+    host: str
+    acquired_at: float
+    heartbeat_at: float
+    ttl_s: float
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        return (now or time.time()) - self.heartbeat_at > self.ttl_s
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class Lease:
+    """A held lease: refresh to keep it, release when the cell is done."""
+
+    def __init__(self, board: "LeaseBoard", state: LeaseState):
+        self.board = board
+        self.state = state
+
+    @property
+    def cell(self) -> str:
+        return self.state.cell
+
+    def refresh(self) -> bool:
+        """True if the heartbeat was written; False on lock contention
+        (retry next beat); raises LeaseLost if no longer ours."""
+        return self.board._refresh(self)
+
+    def release(self) -> None:
+        self.board._release(self)
+
+
+class LeaseBoard:
+    """Atomic file leases over the cells of one shared directory."""
+
+    def __init__(self, directory: pathlib.Path,
+                 worker_id: Optional[str] = None,
+                 ttl_s: float = DEFAULT_TTL_S):
+        self.dir = pathlib.Path(directory) / LEASE_DIR
+        self.worker_id = worker_id or \
+            f"{socket.gethostname()}-{os.getpid()}-{uuid.uuid4().hex[:6]}"
+        self.ttl_s = ttl_s
+
+    def _path(self, cell: str) -> pathlib.Path:
+        return self.dir / f"{cell}.lease"
+
+    def read(self, cell: str) -> Optional[LeaseState]:
+        """Parse a lease file; None if absent.  A torn/corrupt file is
+        reported as an already-expired lease (stealable): lease writes
+        are atomic, so torn content means a crashed foreign writer."""
+        try:
+            d = json.loads(self._path(cell).read_text())
+            return LeaseState(**d)
+        except FileNotFoundError:
+            return None
+        except (OSError, ValueError, TypeError):
+            return LeaseState(cell=cell, worker="?", pid=0, host="?",
+                              acquired_at=0.0, heartbeat_at=0.0,
+                              ttl_s=self.ttl_s)
+
+    def _write_new(self, path: pathlib.Path, state: LeaseState) -> bool:
+        """O_CREAT|O_EXCL create — the atomic claim; False if held."""
+        self.dir.mkdir(parents=True, exist_ok=True)
+        try:
+            fd = os.open(path, os.O_WRONLY | os.O_CREAT | os.O_EXCL,
+                         0o644)
+        except FileExistsError:
+            return False
+        try:
+            os.write(fd, json.dumps(state.as_dict()).encode())
+        finally:
+            os.close(fd)
+        return True
+
+    def _lock_path(self, cell: str) -> pathlib.Path:
+        return self.dir / f"{cell}.lease.steal"
+
+    def _try_lock(self, cell: str) -> bool:
+        """The per-cell arbitration lock (``O_CREAT | O_EXCL``) both
+        stealers and the owner's heartbeat serialize on, so neither can
+        clobber a lease the other just (re)wrote.  A lock older than
+        the TTL is a crashed holder's leftover and is cleared."""
+        lock = self._lock_path(cell)
+        try:
+            os.close(os.open(lock, os.O_WRONLY | os.O_CREAT | os.O_EXCL,
+                             0o644))
+            return True
+        except FileExistsError:
+            try:
+                if time.time() - lock.stat().st_mtime \
+                        > max(5.0, self.ttl_s):
+                    os.unlink(lock)      # crashed holder's leftover
+            except OSError:
+                pass
+            return False                 # lost the arbitration: retry
+        except FileNotFoundError:
+            self.dir.mkdir(parents=True, exist_ok=True)
+            return False
+
+    def _unlock(self, cell: str) -> None:
+        try:
+            os.unlink(self._lock_path(cell))
+        except OSError:
+            pass
+
+    def _bury_expired(self, cell: str) -> bool:
+        """Remove the cell's lease iff it is (still) expired — the lock
+        holder re-reads the lease *under the lock* before unlinking, so
+        a fresh lease created between a stealer's first read and its
+        steal can never be clobbered (that race loses live leases)."""
+        path = self._path(cell)
+        if not self._try_lock(cell):
+            return False
+        try:
+            held = self.read(cell)
+            if held is None:
+                return True              # vanished: claimable
+            if not held.expired():
+                return False             # revived under us: keep it
+            try:
+                os.unlink(path)
+            except FileNotFoundError:
+                pass
+            return True
+        finally:
+            self._unlock(cell)
+
+    def try_acquire(self, cell: str) -> Optional[Lease]:
+        """Claim a cell; None if a live worker holds it.  Expired
+        leases (crashed workers) are stolen."""
+        path = self._path(cell)
+        for _ in range(4):               # bounded retries under races
+            now = time.time()
+            state = LeaseState(cell=cell, worker=self.worker_id,
+                               pid=os.getpid(),
+                               host=socket.gethostname(),
+                               acquired_at=now, heartbeat_at=now,
+                               ttl_s=self.ttl_s)
+            if self._write_new(path, state):
+                return Lease(self, state)
+            held = self.read(cell)
+            if held is not None and not held.expired():
+                return None              # a live worker owns the cell
+            self._bury_expired(cell)     # steal: verified, then retry
+        return None
+
+    def _refresh(self, lease: Lease) -> bool:
+        """Bump the heartbeat (atomic replace under the per-cell
+        arbitration lock, so a stealer's freshly-created lease can
+        never be clobbered by a stale owner's write).  Returns False
+        when the lock is contended — skip this beat, the heartbeat
+        retries next interval.  Raises :class:`LeaseLost` if the lease
+        on disk is no longer ours *or already expired* (we cannot know
+        whether a stealer is about to take it — stop claiming it)."""
+        cell = lease.state.cell
+        if not self._try_lock(cell):
+            return False
+        try:
+            held = self.read(cell)
+            if held is None or held.worker != self.worker_id \
+                    or held.expired():
+                raise LeaseLost(
+                    f"lease for {cell}: "
+                    + ("expired before refresh" if held is not None
+                       and held.worker == self.worker_id else
+                       f"now held by "
+                       f"{held.worker if held else 'nobody'}"))
+            lease.state.heartbeat_at = time.time()
+            fd, tmp = tempfile.mkstemp(dir=self.dir, prefix=".hb.",
+                                       suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    f.write(json.dumps(lease.state.as_dict()))
+                os.replace(tmp, self._path(cell))
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+            return True
+        finally:
+            self._unlock(cell)
+
+    def _release(self, lease: Lease) -> None:
+        held = self.read(lease.state.cell)
+        if held is not None and held.worker == self.worker_id:
+            try:
+                os.unlink(self._path(lease.state.cell))
+            except FileNotFoundError:
+                pass
+
+    def held(self) -> List[LeaseState]:
+        """Every lease currently on the board (including expired ones)."""
+        if not self.dir.exists():
+            return []
+        out = []
+        for p in sorted(self.dir.glob("*.lease")):
+            st = self.read(p.name[:-len(".lease")])
+            if st is not None:
+                out.append(st)
+        return out
+
+    def reap_expired(self) -> List[str]:
+        """Bury every expired lease (e.g. leftovers of crashed workers
+        on already-done cells); returns the buried cell keys."""
+        out = []
+        for st in self.held():
+            if st.expired() and self._bury_expired(st.cell):
+                out.append(st.cell)
+        return out
+
+    def clear(self, cells: Sequence[str]) -> None:
+        """Unconditionally remove these cells' leases and any steal
+        locks (``--fresh`` on a quiescent board)."""
+        for cell in cells:
+            for suffix in ("", ".steal"):
+                try:
+                    os.unlink(self._path(cell).with_name(
+                        f"{cell}.lease{suffix}"))
+                except OSError:
+                    pass
+
+
+class Heartbeat:
+    """Context manager: refresh a lease from a daemon thread while the
+    worker runs the cell's campaign.  If the lease is lost (stolen
+    after a too-long pause), ``lost`` flips and refreshing stops — the
+    campaign itself keeps running safely (see module docstring)."""
+
+    def __init__(self, lease: Lease, interval: Optional[float] = None):
+        self.lease = lease
+        self.interval = interval or max(0.05, lease.state.ttl_s / 3.0)
+        self.lost = False
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval):
+            try:
+                self.lease.refresh()
+            except LeaseLost:
+                self.lost = True
+                return
+            except OSError:
+                pass                     # transient fs hiccup: retry
+
+    def __enter__(self) -> "Heartbeat":
+        self._thread = threading.Thread(target=self._loop,
+                                        name="lease-heartbeat",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+
+
+# --------------------------------------------------------------- worker
+def load_evaluator(spec: Optional[str]) -> Callable:
+    """Resolve an ``--evaluator module:factory`` dotted-path spec (the
+    factory is called with no arguments); default: RooflineEvaluator."""
+    if not spec:
+        from repro.core.trial import RooflineEvaluator
+        return RooflineEvaluator()
+    mod, sep, attr = spec.partition(":")
+    if not sep or not attr:
+        raise ValueError(f"evaluator spec {spec!r}: want module:factory")
+    return getattr(importlib.import_module(mod), attr)()
+
+
+def checkpoint_done(directory: pathlib.Path, cell: str,
+                    strategy: str) -> bool:
+    """Cheap completion check: the cell's checkpoint says done under
+    this strategy.  This is the *weak* form (no signature validation) —
+    the worker and coordinator use :meth:`Campaign.cell_done`, which
+    additionally validates the threshold/baseline/walk/warm-start
+    signature, so a done checkpoint from different parameters is
+    re-claimed and re-tuned exactly as the single-process campaign
+    would."""
+    path = pathlib.Path(directory) / f"{cell}.json"
+    try:
+        d = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return False
+    return (isinstance(d, dict)
+            and d.get("version") == CHECKPOINT_VERSION
+            and d.get("strategy") == strategy
+            and bool(d.get("done")))
+
+
+class FabricWorker:
+    """One process of the fabric: claim cells via leases, run each
+    claimed cell's (checkpointed, resumable) single-cell campaign to
+    completion, repeat until every target cell is done.
+
+    Start any number of workers over the same ``directory`` — locally
+    via :func:`run_coordinator`, or independently on other hosts
+    against a shared mount.  ``evaluator`` defaults to a fresh
+    :class:`~repro.core.trial.RooflineEvaluator` whose disk compile
+    cache is shared with every other worker.
+
+    ``ready_file`` / ``go_file`` implement an optional start barrier
+    for benchmarks: the worker touches ``ready_file`` once initialized,
+    then blocks until ``go_file`` exists — so measured wall-clock
+    covers fabric work, not interpreter/JAX cold start.
+    """
+
+    def __init__(self, cells: Sequence[CellSpec],
+                 directory: pathlib.Path, *,
+                 strategy: str = "tree",
+                 strategy_options: Optional[Dict[str, Any]] = None,
+                 threshold: float = 0.05,
+                 evaluator: Optional[Callable] = None,
+                 baseline_factory: Optional[Callable] = None,
+                 worker_id: Optional[str] = None,
+                 ttl_s: float = DEFAULT_TTL_S,
+                 poll_s: float = 0.5,
+                 warm_start: bool = False,
+                 warm_start_cells: int = 2,
+                 warm_start_per_cell: int = 1,
+                 max_workers: Optional[int] = None,
+                 ready_file: Optional[pathlib.Path] = None,
+                 go_file: Optional[pathlib.Path] = None):
+        if not cells:
+            raise ValueError("fabric worker needs at least one cell")
+        self.cells = list(cells)
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.strategy = get_strategy(strategy)
+        self.strategy_options = dict(strategy_options or {})
+        self.threshold = threshold
+        if evaluator is None:
+            from repro.core.trial import RooflineEvaluator
+            evaluator = RooflineEvaluator()
+        self.evaluator = evaluator
+        self.baseline_factory = baseline_factory
+        self.board = LeaseBoard(self.dir, worker_id=worker_id,
+                                ttl_s=ttl_s)
+        self.poll_s = poll_s
+        self.warm_start = warm_start
+        self.warm_start_cells = warm_start_cells
+        self.warm_start_per_cell = warm_start_per_cell
+        self.max_workers = max_workers
+        self.history = TrialHistory(self.dir / HISTORY_FILENAME)
+        self.ready_file = ready_file
+        self.go_file = go_file
+        # the completion probe: a Campaign that never runs, only asks
+        # cell_done() — full signature validation (threshold, baseline,
+        # walk, warm-start seeds), so a done checkpoint from different
+        # parameters is re-claimed and re-tuned
+        self._probe = Campaign(
+            self.cells, strategy=self.strategy.name,
+            strategy_options=self.strategy_options,
+            threshold=self.threshold, evaluator=self.evaluator,
+            baseline_factory=self.baseline_factory,
+            checkpoint_dir=self.dir, history=self.history,
+            warm_start=self.warm_start,
+            warm_start_cells=self.warm_start_cells,
+            warm_start_per_cell=self.warm_start_per_cell)
+
+    # ------------------------------------------------------------ cells
+    def _done(self, spec: CellSpec) -> bool:
+        return self._probe.cell_done(spec)
+
+    def _run_cell(self, spec: CellSpec, lease: Lease) -> Dict:
+        camp = Campaign(
+            [spec], strategy=self.strategy.name,
+            strategy_options=self.strategy_options,
+            threshold=self.threshold, evaluator=self.evaluator,
+            baseline_factory=self.baseline_factory,
+            checkpoint_dir=self.dir, history=self.history,
+            warm_start=self.warm_start,
+            warm_start_cells=self.warm_start_cells,
+            warm_start_per_cell=self.warm_start_per_cell,
+            max_workers=self.max_workers)
+        with Heartbeat(lease) as hb:
+            camp.run()
+        stats = dict(camp.last_stats)
+        stats["lease_lost"] = hb.lost
+        return stats
+
+    # -------------------------------------------------------------- run
+    def run(self) -> Dict[str, Any]:
+        """Work the board until every target cell is done; returns
+        per-worker stats (cells completed here, trials, waits)."""
+        if self.ready_file is not None:
+            self.ready_file.parent.mkdir(parents=True, exist_ok=True)
+            self.ready_file.touch()
+        if self.go_file is not None:
+            while not self.go_file.exists():
+                time.sleep(0.05)
+        t0 = time.time()
+        completed: List[str] = []
+        evaluated = replayed = 0
+        lease_losses = 0
+        waited_s = 0.0
+        while True:
+            remaining = [s for s in self.cells if not self._done(s)]
+            if not remaining:
+                break
+            progress = False
+            for spec in remaining:
+                lease = self.board.try_acquire(spec.key())
+                if lease is None:
+                    continue
+                try:
+                    if self._done(spec):
+                        continue         # raced: finished by another worker
+                    stats = self._run_cell(spec, lease)
+                    completed.append(spec.key())
+                    evaluated += stats.get("evaluated_trials", 0)
+                    replayed += stats.get("replayed_trials", 0)
+                    lease_losses += bool(stats.get("lease_lost"))
+                    progress = True
+                finally:
+                    lease.release()
+            if not progress:
+                # every remaining cell is leased by a live worker — wait
+                # for them (or for their leases to expire) and re-scan
+                time.sleep(self.poll_s)
+                waited_s += self.poll_s
+        return {
+            "worker": self.board.worker_id,
+            "cells_completed": completed,
+            "evaluated_trials": evaluated,
+            "replayed_trials": replayed,
+            "lease_losses": lease_losses,
+            "waited_s": round(waited_s, 2),
+            "wall_s": round(time.time() - t0, 2),
+        }
+
+
+# ---------------------------------------------------------- coordinator
+def worker_argv(cells: Sequence[CellSpec], directory: pathlib.Path, *,
+                strategy: str = "tree",
+                evaluator_spec: Optional[str] = None,
+                ttl_s: float = DEFAULT_TTL_S,
+                threshold: float = 0.05,
+                warm_start: bool = False,
+                worker_id: Optional[str] = None,
+                ready_file: Optional[pathlib.Path] = None,
+                go_file: Optional[pathlib.Path] = None,
+                extra: Sequence[str] = ()) -> List[str]:
+    """The ``launch/tune.py --worker`` command line for one worker."""
+    argv = [sys.executable, "-m", "repro.launch.tune", "--worker",
+            "--dir", str(directory),
+            "--cells", ",".join(c.spec() for c in cells),
+            "--strategy", strategy,
+            "--threshold", str(threshold),
+            "--worker-ttl", str(ttl_s)]
+    if evaluator_spec:
+        argv += ["--evaluator", evaluator_spec]
+    if warm_start:
+        argv += ["--warm-start"]
+    if worker_id:
+        argv += ["--worker-id", worker_id]
+    if ready_file is not None:
+        argv += ["--ready-file", str(ready_file)]
+    if go_file is not None:
+        argv += ["--go-file", str(go_file)]
+    argv += list(extra)
+    return argv
+
+
+def spawn_worker(cells: Sequence[CellSpec], directory: pathlib.Path, *,
+                 log_path: Optional[pathlib.Path] = None,
+                 env: Optional[Dict[str, str]] = None,
+                 **kw) -> subprocess.Popen:
+    """Spawn one detached local worker process (see :func:`worker_argv`
+    for the keyword options)."""
+    argv = worker_argv(cells, directory, **kw)
+    if log_path is not None:
+        log_path.parent.mkdir(parents=True, exist_ok=True)
+        out = open(log_path, "ab")
+    else:
+        out = subprocess.DEVNULL
+    try:
+        return subprocess.Popen(argv, stdout=out, stderr=subprocess.STDOUT,
+                                env=env or os.environ.copy())
+    finally:
+        if out is not subprocess.DEVNULL:
+            out.close()
+
+
+def run_coordinator(cells: Sequence[CellSpec],
+                    directory: pathlib.Path, *,
+                    workers: int = 2,
+                    strategy: str = "tree",
+                    strategy_options: Optional[Dict[str, Any]] = None,
+                    evaluator_spec: Optional[str] = None,
+                    ttl_s: float = DEFAULT_TTL_S,
+                    threshold: float = 0.05,
+                    warm_start: bool = False,
+                    extra_args: Sequence[str] = (),
+                    log_dir: Optional[pathlib.Path] = None,
+                    timeout_s: Optional[float] = None) -> Dict[str, Any]:
+    """Spawn N local workers over one shared directory, wait for them,
+    verify completion and collect the per-cell reports.
+
+    Completion is verified with the same full-signature probe the
+    workers use (:meth:`Campaign.cell_done` with ``strategy_options`` /
+    ``threshold`` / ``warm_start`` and the default baseline the worker
+    CLI tunes with), so a stale-parameter checkpoint counts as
+    incomplete rather than being silently published.  Returns
+    ``{"reports": {cell: report}, "stats": {...}}``; raises
+    ``RuntimeError`` if any cell is incomplete or a lease is left held
+    after the workers exit (expired leftovers are reaped first).
+    """
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+    procs = []
+    for i in range(workers):
+        log = (pathlib.Path(log_dir) / f"worker-{i}.log") \
+            if log_dir else None
+        procs.append(spawn_worker(
+            cells, directory, strategy=strategy,
+            evaluator_spec=evaluator_spec, ttl_s=ttl_s,
+            threshold=threshold, warm_start=warm_start,
+            worker_id=f"w{i}-{uuid.uuid4().hex[:6]}",
+            extra=extra_args, log_path=log))
+    rcs = [p.wait(timeout=timeout_s) for p in procs]
+    wall = time.time() - t0
+
+    board = LeaseBoard(directory, ttl_s=ttl_s)
+    reaped = board.reap_expired()
+    leftover = board.held()
+    spec = get_strategy(strategy)
+    probe = Campaign(list(cells), strategy=strategy,
+                     strategy_options=strategy_options,
+                     threshold=threshold,
+                     evaluator=lambda wl, rt: None,  # probe never runs
+                     checkpoint_dir=directory, warm_start=warm_start)
+    reports: Dict[str, Any] = {}
+    incomplete = []
+    for cell in cells:
+        path = directory / f"{cell.key()}.json"
+        if not probe.cell_done(cell):
+            incomplete.append(cell.key())
+            continue
+        d = json.loads(path.read_text())
+        reports[cell.key()] = spec.load_report(d["report"])
+    stats = {
+        "workers": workers,
+        "strategy": spec.name,
+        "cells": len(cells),
+        "wall_s": round(wall, 2),
+        "cells_per_hour": round(len(cells) / max(wall, 1e-9) * 3600.0, 1),
+        "worker_rcs": rcs,
+        "reaped_leases": reaped,
+        "leases_left": [st.cell for st in leftover],
+        "incomplete_cells": incomplete,
+    }
+    if incomplete or leftover or any(rcs):
+        raise RuntimeError(f"fabric run incomplete: {stats}")
+    return {"reports": reports, "stats": stats}

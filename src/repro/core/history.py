@@ -1,0 +1,289 @@
+"""Trial-history store — every trial ever run, queryable for warm-starts.
+
+The campaign engine made trials cheap and resumable, but every campaign
+still started from zero knowledge: a fresh cell's cursor walked the
+whole tree as if no similar cell had ever been tuned.  The
+:class:`TrialHistory` store makes campaigns *cumulative*:
+
+  * **append-only JSONL** — every evaluated trial (config, cell, cost,
+    compile stats) is appended as one JSON line to a shared
+    ``history.jsonl`` next to the campaign checkpoints.  Appends are a
+    single ``write(2)`` on an ``O_APPEND`` descriptor, so concurrent
+    fabric workers (core/fabric.py) interleave whole lines, never
+    bytes; readers skip torn or foreign lines instead of failing;
+  * **cell signatures** — :func:`cell_signature` describes a cell by
+    the features that determine which knobs matter to it: the shape
+    kind, the arch family, and the *active knob set* derived from the
+    :data:`~repro.core.space.SPACE` registry (a tunable knob is active
+    iff flipping it can change the cell's ``compile_key`` projection,
+    plus the always-analytic knobs).  :func:`cell_similarity` scores
+    two signatures (kind ≫ family ≫ arch/shape, plus Jaccard overlap
+    of the active knob sets), so "nearest cell" means "cell whose
+    trials exercised the same knobs";
+  * **warm-start queries** — :meth:`TrialHistory.warmstart_configs`
+    returns the best observed configs of the nearest already-tuned
+    cells (never the cell's own records — a resumed cell replays its
+    checkpoint instead).  The campaign seeds each cursor with them via
+    the ``SearchCursor.warm_start`` hook, cutting trials-to-convergence
+    on fresh cells (retrieval-style warm-starting, 2503.03826).
+
+Configs read back from history are validated against the registry
+before they are proposed: records from an older knob space (missing
+knobs, retired values) are silently skipped, never crash a campaign.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import pathlib
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.params import TunableConfig
+from repro.core.space import SPACE
+
+HISTORY_VERSION = 1
+HISTORY_FILENAME = "history.jsonl"
+
+
+def _viable(rec: Dict) -> bool:
+    """A record a warm-start may build on: a non-crashed trial with a
+    finite cost and a config dict."""
+    cost = rec.get("cost_s")
+    return (rec.get("cell") is not None and not rec.get("crashed")
+            and isinstance(cost, (int, float)) and cost == cost
+            and cost != float("inf")
+            and isinstance(rec.get("config"), dict))
+
+
+# ------------------------------------------------------ cell signatures
+@functools.lru_cache(maxsize=None)
+def active_knobs(kind: str, family: str) -> Tuple[str, ...]:
+    """The tunable knobs that can matter to a (kind, family) cell.
+
+    A compile-reach knob is active iff some value flip changes the
+    cell's ``compile_key`` projection (i.e. the knob is not
+    canonicalized away for this cell class); analytic-reach tunables
+    are always active (they enter the roofline terms of every cell).
+    """
+    base = TunableConfig()
+    base_key = base.compile_key(kind, family)
+    out = []
+    for knob in SPACE:
+        if not knob.tunable:
+            continue
+        if knob.reach == "analytic":
+            out.append(knob.name)
+            continue
+        if any(base.replace(**{knob.name: v}).compile_key(kind, family)
+               != base_key for v in knob.domain[1:]):
+            out.append(knob.name)
+    return tuple(out)
+
+
+def cell_signature(arch: str, shape: str, multi_pod: bool = False) -> Dict:
+    """The features warm-start similarity is computed over."""
+    from repro.configs import get_config, get_shape
+    kind = get_shape(shape).kind
+    family = get_config(arch).family
+    return {
+        "arch": arch,
+        "shape": shape,
+        "kind": kind,
+        "family": family,
+        "multi_pod": bool(multi_pod),
+        "active_knobs": list(active_knobs(kind, family)),
+    }
+
+
+# weights: the shape kind dominates (it selects which tree stages and
+# sweep knobs even apply), then the arch family, then exact arch/shape
+# matches; the active-knob Jaccard term rewards cells whose trials
+# exercised the same knob subset.
+_W_KIND, _W_FAMILY, _W_ARCH, _W_SHAPE, _W_MESH, _W_KNOBS = \
+    4.0, 2.0, 1.0, 1.0, 0.5, 4.0
+
+
+def cell_similarity(a: Dict, b: Dict) -> float:
+    """Similarity score of two :func:`cell_signature` dicts (≥ 0)."""
+    s = 0.0
+    s += _W_KIND if a["kind"] == b["kind"] else 0.0
+    s += _W_FAMILY if a["family"] == b["family"] else 0.0
+    s += _W_ARCH if a["arch"] == b["arch"] else 0.0
+    s += _W_SHAPE if a["shape"] == b["shape"] else 0.0
+    s += _W_MESH if a["multi_pod"] == b["multi_pod"] else 0.0
+    ka, kb = set(a["active_knobs"]), set(b["active_knobs"])
+    s += _W_KNOBS * len(ka & kb) / max(1, len(ka | kb))
+    return s
+
+
+def config_from_dict(d: Dict[str, Any]) -> TunableConfig:
+    """Rehydrate a config recorded by an (older) knob space: unknown
+    fields are dropped, missing fields take today's defaults, and the
+    result is validated against the registry (raises ``ValueError`` on
+    out-of-domain values)."""
+    fields = {f.name for f in TunableConfig.__dataclass_fields__.values()}
+    cfg = TunableConfig(**{k: v for k, v in d.items() if k in fields})
+    SPACE.validate(cfg)
+    return cfg
+
+
+# --------------------------------------------------------------- store
+class TrialHistory:
+    """Append-only JSONL store of evaluated trials, shared by every
+    process that works a campaign directory.
+
+    One line per trial; appends go through a single ``os.write`` on an
+    ``O_APPEND`` descriptor so concurrent workers never interleave
+    partial lines.  Readers tolerate torn/corrupt lines (a reader can
+    race the tail of a concurrent append) by skipping them.
+    """
+
+    def __init__(self, path: pathlib.Path):
+        self.path = pathlib.Path(path)
+        self._cache: Optional[Tuple[Tuple[int, int], List[Dict]]] = None
+
+    # ------------------------------------------------------- appending
+    def append(self, record: Dict[str, Any]) -> None:
+        line = json.dumps(record, sort_keys=True, default=str) + "\n"
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        fd = os.open(self.path, os.O_RDWR | os.O_CREAT | os.O_APPEND,
+                     0o644)
+        try:
+            # self-heal a torn tail (crashed non-atomic writer): never
+            # concatenate a new record onto an unterminated line.  Two
+            # appenders racing here at worst emit an empty line, which
+            # readers skip.
+            try:
+                os.lseek(fd, -1, os.SEEK_END)
+                torn = os.read(fd, 1) != b"\n"
+            except OSError:
+                torn = False             # empty file
+            if torn:
+                line = "\n" + line
+            os.write(fd, line.encode())
+        finally:
+            os.close(fd)
+
+    def record_trial(self, workload, strategy: str, rt: TunableConfig,
+                     name: str, result, delta: Optional[Dict] = None
+                     ) -> None:
+        """Append one evaluated trial (the TrialRunner emission hook)."""
+        self.append({
+            "v": HISTORY_VERSION,
+            "ts": round(time.time(), 3),
+            "cell": workload.key(),
+            "arch": workload.arch,
+            "shape": workload.shape,
+            "multi_pod": bool(workload.multi_pod),
+            "strategy": strategy,
+            "name": name,
+            "delta": delta or {},
+            "config": rt.as_dict(),
+            "cost_s": result.cost_s,
+            "crashed": bool(result.crashed),
+            "compiles": result.compiles,
+            "compile_s": result.compile_s,
+            "cached": bool(result.cached),
+        })
+
+    def sink(self, strategy: str):
+        """A ``TrialRunner.history`` callable bound to a strategy name."""
+        def emit(workload, rt, name, result, delta):
+            self.record_trial(workload, strategy, rt, name, result, delta)
+        return emit
+
+    # --------------------------------------------------------- reading
+    def records(self) -> List[Dict]:
+        """Parsed records, oldest first; torn/corrupt lines skipped.
+        The parse is cached per (size, mtime) of the file, so a
+        campaign querying warm-starts for N cells (or a fabric worker
+        polling the board) pays one parse, not N."""
+        try:
+            st = self.path.stat()
+        except OSError:
+            return []
+        sig = (st.st_size, st.st_mtime_ns)
+        if self._cache is not None and self._cache[0] == sig:
+            return list(self._cache[1])
+        try:
+            text = self.path.read_text()
+        except OSError:
+            return []
+        out: List[Dict] = []
+        for line in text.splitlines():
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                continue                 # torn tail of a concurrent append
+            if isinstance(rec, dict):
+                out.append(rec)
+        self._cache = (sig, out)
+        return list(out)
+
+    def cells(self) -> List[str]:
+        """Distinct cell keys with at least one recorded trial."""
+        return sorted({r["cell"] for r in self.records() if "cell" in r})
+
+    def n_records(self) -> int:
+        return sum(1 for _ in self.records())
+
+    # ------------------------------------------------------ warm-start
+    def warmstart_configs(self, arch: str, shape: str,
+                          multi_pod: bool = False, *,
+                          k_cells: int = 2, per_cell: int = 1
+                          ) -> List[Dict[str, Any]]:
+        """Best configs of the ``k_cells`` nearest already-tuned cells
+        (the target cell's own records are excluded — resume comes from
+        the checkpoint, not from history).  Returns normalized full
+        config dicts, registry-validated, deduplicated, ordered by
+        descending cell similarity."""
+        from repro.core.trial import Workload
+        target_key = Workload(arch, shape, multi_pod).key()
+        target_sig = cell_signature(arch, shape, multi_pod)
+
+        # group the viable records per foreign cell
+        per_cell_recs: Dict[str, List[Dict]] = {}
+        for rec in self.records():
+            if not _viable(rec) or rec["cell"] == target_key:
+                continue
+            per_cell_recs.setdefault(rec["cell"], []).append(rec)
+
+        scored: List[Tuple[float, str]] = []
+        for cell, recs in per_cell_recs.items():
+            r = recs[0]
+            try:
+                sig = cell_signature(r.get("arch"), r.get("shape"),
+                                     r.get("multi_pod", False))
+            except (KeyError, TypeError):
+                continue                 # cell from a foreign assignment
+            scored.append((cell_similarity(target_sig, sig), cell))
+        # deterministic: similarity desc, then cell key asc
+        scored.sort(key=lambda t: (-t[0], t[1]))
+
+        out: List[Dict[str, Any]] = []
+        seen = set()
+        for _, cell in scored[:max(0, k_cells)]:
+            recs = sorted(per_cell_recs[cell],
+                          key=lambda r: (r["cost_s"],
+                                         r.get("ts", 0.0)))
+            taken = 0
+            for rec in recs:
+                if taken >= per_cell:
+                    break
+                try:
+                    cfg = config_from_dict(rec["config"])
+                except (ValueError, TypeError):
+                    continue             # older knob space: skip record
+                d = cfg.as_dict()
+                fp = json.dumps(d, sort_keys=True, default=str)
+                if fp in seen:
+                    continue
+                seen.add(fp)
+                out.append(d)
+                taken += 1
+        return out

@@ -113,8 +113,12 @@ def campaign_markdown(reports: Dict[str, TuningReport]) -> str:
             else:
                 row.append(f"x{rep.speedup:.2f} ({rep.n_trials})")
         lines.append("| " + " | ".join(row) + " |")
+    # the gmean covers cells with a finite, nonzero ratio: a crashed
+    # final (speedup 0) or crashed baseline (speedup inf/nan) is
+    # reported in its cell, not averaged into the headline number
     speedups = [r.speedup for r in reports.values()
-                if r.speedup == r.speedup and r.speedup != float("inf")]
+                if r.speedup == r.speedup and r.speedup != float("inf")
+                and r.speedup > 0]
     gmean = (float(math.prod(speedups)) ** (1.0 / len(speedups))) \
         if speedups else float("nan")
     lines += ["",

@@ -138,6 +138,11 @@ class SensitivityCursor:
     def signature_parts(self) -> list:
         return [[k, list(v)] for k, v in self.knobs.items()]
 
+    def warm_start(self, configs: Sequence[TunableConfig]) -> None:
+        """No-op: the OFAT matrix is a fixed design — every (knob,
+        value) deviation from the baseline is measured regardless of
+        what other cells learned."""
+
 
 def run_sensitivity(runner: TrialRunner, baseline: TunableConfig,
                     knobs: Optional[Dict[str, tuple]] = None,

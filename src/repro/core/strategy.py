@@ -70,7 +70,14 @@ class SearchCursor(Protocol):
       * ``strategy_version`` (class attribute) gates checkpoint
         compatibility, and ``signature_parts()`` returns a
         JSON-serializable description of everything that shapes the
-        walk's decisions.
+        walk's decisions — including any warm-start seeds;
+      * ``warm_start(configs)`` (called before the first proposal, if
+        at all) offers the cursor full candidate configurations
+        retrieved from the trial history (core/history.py) — the best
+        configs of the nearest already-tuned cells.  A strategy is free
+        to ignore them (the default no-op); one that uses them must
+        fold them into ``signature_parts()`` so checkpoints stay
+        replay-exact.
     """
 
     runner: TrialRunner
@@ -87,6 +94,8 @@ class SearchCursor(Protocol):
     def report(self) -> Any: ...
 
     def signature_parts(self) -> list: ...
+
+    def warm_start(self, configs: Sequence[TunableConfig]) -> None: ...
 
 
 # ------------------------------------------------------ random baseline
@@ -194,6 +203,10 @@ class RandomCursor:
 
     def signature_parts(self) -> list:
         return ["random", self.seed, self.budget]
+
+    def warm_start(self, configs: Sequence[TunableConfig]) -> None:
+        """No-op: random search is the budget-matched *control* arm —
+        seeding it with history would make it adaptive."""
 
 
 # ------------------------------------------------------------- registry

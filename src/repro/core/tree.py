@@ -22,6 +22,7 @@ Stage map (Spark parameter -> TPU knob, DESIGN.md §2.1):
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Any, Dict, List, Optional, Sequence
 
 from repro.core.executor import SweepExecutor
@@ -174,6 +175,19 @@ class TreeCursor:
     scalars, so a walk can be reconstructed (checkpoint resume) by
     replaying recorded trial results through propose/absorb.
 
+    :meth:`warm_start` (the ``SearchCursor`` warm-start hook) seeds the
+    walk with full candidate configurations — the best configs of the
+    nearest already-tuned cells, retrieved from the trial history
+    (core/history.py).  They are evaluated as one batch right after the
+    baseline under the same accept rule as a tree stage; an adopted
+    warm-start config moves the incumbent, so later stages whose
+    alternative is already satisfied are skipped (that is where the
+    trials-to-convergence saving comes from).  Warm-start trials count
+    against the ≤10-run budget, and the seeded configs enter
+    :meth:`signature_parts` so checkpointed walks replay bit-identically
+    (a cold walk's signature is byte-identical to the pre-warm-start
+    layout).
+
     This propose/absorb/done/report shape is the
     :class:`~repro.core.strategy.SearchCursor` protocol — the campaign
     engine drives any registered strategy through it (the ``tree`` and
@@ -197,10 +211,41 @@ class TreeCursor:
         self._stage_i = -1          # -1: baseline not yet evaluated
         self._pending: Optional[List[Candidate]] = None
         self._done = False
+        self._warmstart: List[TunableConfig] = []
+        self._warmstart_absorbed = False
+        self._in_warmstart = False
 
     @property
     def done(self) -> bool:
         return self._done
+
+    def warm_start(self, configs: Sequence[TunableConfig]) -> None:
+        """Seed the walk with candidate configs evaluated right after
+        the baseline (see class docstring).  Must be called before the
+        first proposal; calling again before then replaces the seeds
+        (the campaign retries with a re-queried list when a
+        checkpoint's stored list turns out stale)."""
+        if self._stage_i >= 0 or self._pending is not None:
+            raise RuntimeError("warm_start must precede the first "
+                               "proposal")
+        seen, out = set(), []
+        base = json.dumps(self.baseline.as_dict(), sort_keys=True,
+                          default=str)
+        for cfg in configs:
+            fp = json.dumps(cfg.as_dict(), sort_keys=True, default=str)
+            if fp == base or fp in seen:
+                continue                 # no-op / duplicate seed
+            seen.add(fp)
+            out.append(cfg)
+        self._warmstart = out
+
+    def _warmstart_batch(self) -> List[Candidate]:
+        base = self.baseline.as_dict()
+        cands = [Candidate(cfg, "warmstart",
+                           {k: v for k, v in cfg.as_dict().items()
+                            if base[k] != v})
+                 for cfg in self._warmstart]
+        return cands[:max(0, MAX_TRIALS - self.runner.n_trials)]
 
     def propose(self) -> List[Candidate]:
         """Next batch of candidates to evaluate; [] when the walk is done."""
@@ -211,6 +256,13 @@ class TreeCursor:
         if self._stage_i < 0:
             self._pending = [Candidate(self.baseline, "baseline", {})]
             return list(self._pending)
+        if self._warmstart and not self._warmstart_absorbed:
+            batch = self._warmstart_batch()
+            if batch:
+                self._in_warmstart = True
+                self._pending = batch
+                return list(self._pending)
+            self._warmstart_absorbed = True      # budget already spent
         while True:
             if (self._stage_i >= len(self.stages)
                     or self.runner.n_trials >= MAX_TRIALS):
@@ -247,6 +299,18 @@ class TreeCursor:
             self.baseline_cost = self.best_cost
             self._stage_i = 0
             return
+        if self._in_warmstart:
+            self._in_warmstart = False
+            self._warmstart_absorbed = True
+            won = apply_accept_rule(self.runner,
+                                    list(zip(cands, results, indices)),
+                                    self.best_cost, self.threshold)
+            if won is not None:
+                cand, cost = won
+                self.incumbent = cand.config
+                self.best_cost = cost
+                self.accepted.append(f"warmstart: {cand.delta}")
+            return
         stage = self.stages[self._stage_i]
         won = apply_accept_rule(self.runner,
                                 list(zip(cands, results, indices)),
@@ -273,9 +337,15 @@ class TreeCursor:
         """JSON-serializable description of everything that shapes this
         walk's decisions — part of the campaign checkpoint signature.
         The layout is byte-compatible with the PR-2-era (v1) checkpoint
-        signature blob, so pre-Strategy-API tree checkpoints resume."""
-        return [[s.name, s.spark_name, list(s.alternatives), list(s.kinds)]
-                for s in self.stages]
+        signature blob, so pre-Strategy-API tree checkpoints resume; a
+        warm-started walk appends its seed configs (so cold checkpoints
+        are never replayed into a differently-seeded walk)."""
+        parts = [[s.name, s.spark_name, list(s.alternatives),
+                  list(s.kinds)] for s in self.stages]
+        if self._warmstart:
+            parts.append(["warmstart",
+                          [cfg.as_dict() for cfg in self._warmstart]])
+        return parts
 
 
 def run_tuning(runner: TrialRunner, baseline: TunableConfig,

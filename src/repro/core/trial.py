@@ -31,7 +31,9 @@ import collections
 import dataclasses
 import hashlib
 import json
+import os
 import pathlib
+import tempfile
 import threading
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
@@ -97,6 +99,16 @@ class CompileCache:
     ``get_or_build`` is thread-safe with in-flight deduplication: when N
     executor threads ask for the same key, one runs the builder and the
     rest block on its result.
+
+    The disk level is also multi-*process* safe (the campaign fabric,
+    core/fabric.py, shares one cache directory across workers): every
+    write goes to a uniquely-named tempfile in the cache directory and
+    is published with an atomic ``os.replace``, so two workers building
+    the same key concurrently each publish a complete entry (last
+    writer wins — the values are deterministic per key, so both wrote
+    the same bytes); a reader that still encounters a torn/corrupt
+    entry (e.g. left behind by a pre-fabric writer that crashed
+    mid-write) treats it as a miss and rebuilds, repairing the entry.
     """
 
     def __init__(self, directory: Optional[pathlib.Path] = None,
@@ -129,12 +141,35 @@ class CompileCache:
                 return self._mem[key]
         if self.use_disk:
             p = self._path(key)
-            if p.exists():
+            try:
                 val = json.loads(p.read_text())
-                with self._lock:
-                    self._mem_put(key, val)
-                return val
+            except (OSError, ValueError):
+                # missing, or torn by a crashed writer / a concurrent
+                # non-atomic producer: treat as a miss and rebuild
+                return None
+            if not isinstance(val, dict):
+                return None
+            with self._lock:
+                self._mem_put(key, val)
+            return val
         return None
+
+    def _disk_put(self, key: str, val: Dict) -> None:
+        """Publish one entry atomically (unique tempfile + os.replace),
+        safe against concurrent writers in other processes."""
+        self.dir.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.dir, prefix=f".{key}.",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(json.dumps(val))
+            os.replace(tmp, self._path(key))
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     def get_or_build(self, key: str, builder: Callable[[], Dict]) -> Dict:
         while True:
@@ -158,10 +193,7 @@ class CompileCache:
             # parallel sweep) poison every config sharing the key across
             # future processes
             if self.use_disk and "error" not in val:
-                self.dir.mkdir(parents=True, exist_ok=True)
-                tmp = self._path(key).with_suffix(".tmp")
-                tmp.write_text(json.dumps(val))
-                tmp.replace(self._path(key))
+                self._disk_put(key, val)
             with self._lock:
                 self._mem_put(key, val)
             return val
@@ -364,11 +396,21 @@ class TrialLogEntry:
 
 class TrialRunner:
     """Counts and logs every run (the paper's <=10-runs budget is checked
-    by tests against this counter)."""
+    by tests against this counter).
 
-    def __init__(self, workload: Workload, evaluator: Callable):
+    ``history`` is an optional emission hook ``(workload, rt, name,
+    result, delta) -> None`` (see :meth:`~repro.core.history
+    .TrialHistory.sink`): every *evaluated* trial is forwarded to it,
+    so campaigns accumulate a persistent trial history; trials replayed
+    from a checkpoint (``record(..., replayed=True)``) were already
+    emitted by the run that evaluated them and are not re-emitted.
+    """
+
+    def __init__(self, workload: Workload, evaluator: Callable,
+                 history: Optional[Callable] = None):
         self.workload = workload
         self.evaluator = evaluator
+        self.history = history
         self.log: list[TrialLogEntry] = []
 
     @property
@@ -382,7 +424,8 @@ class TrialRunner:
         return res
 
     def record(self, rt: TunableConfig, name: str, res: TrialResult,
-               delta: Dict[str, Any] = None) -> TrialResult:
+               delta: Dict[str, Any] = None,
+               replayed: bool = False) -> TrialResult:
         """Log an already-evaluated trial (parallel executor path).
 
         Exactly one log entry per evaluated configuration — the run
@@ -391,4 +434,6 @@ class TrialRunner:
             name=name, delta=delta or {}, config=rt.as_dict(),
             result={k: v for k, v in res.as_dict().items()
                     if k != "roofline"}))
+        if self.history is not None and not replayed:
+            self.history(self.workload, rt, name, res, delta or {})
         return res

@@ -18,6 +18,22 @@ composes with both modes:
   * ``random`` — budget-matched random-search baseline
     (``--budget``, ``--seed``).
 
+Fabric modes (core/fabric.py) shard a campaign's cells across worker
+*processes* that coordinate through lease files in one shared
+directory (multi-host-ready — point workers on several hosts at a
+shared mount):
+
+  * ``--workers N`` (or ``--coordinate``) — spawn N local workers over
+    the per-strategy campaign directory and wait; per-cell decisions
+    are identical to the single-process campaign;
+  * ``--worker`` — join an existing shared directory (``--dir``) as
+    one worker; start any number, anywhere, any time.
+
+``--warm-start`` seeds each fresh cell's cursor from the best configs
+of the nearest already-tuned cells in the shared ``history.jsonl``
+trial store (core/history.py); every campaign appends to that store,
+so each run makes the next one cheaper.
+
 MUST set the placeholder device count before ANY jax-touching import.
 """
 import os
@@ -93,34 +109,120 @@ def tune_cell(arch: str, shape: str, multi_pod: bool = False,
     return rep
 
 
+def campaign_dir(strategy: str = "tree", override=None) -> pathlib.Path:
+    """The per-strategy shared campaign directory: checkpoints, lease
+    board and trial history all live here.  Non-tree strategies get a
+    subdirectory so two strategies on the same cells never clobber each
+    other's state."""
+    from repro.core.campaign import CAMPAIGN_DIR
+    if override:
+        return pathlib.Path(override)
+    return CAMPAIGN_DIR if strategy == "tree" else CAMPAIGN_DIR / strategy
+
+
+def fresh_campaign_dir(ckpt: pathlib.Path, cells) -> None:
+    """``--fresh``: discard the cells' checkpoints AND their leases in
+    the (per-strategy) campaign directory, plus stale cross-cell
+    summaries.  The trial history is deliberately kept — re-tuning is
+    exactly when accumulated knowledge pays (``--warm-start``)."""
+    from repro.core.fabric import LeaseBoard
+    for spec in cells:
+        path = ckpt / f"{spec.key()}.json"
+        if path.exists():
+            path.unlink()
+    LeaseBoard(ckpt).clear([spec.key() for spec in cells])
+    for name in ("campaign.md", "campaign_stats.json"):
+        if (ckpt / name).exists():
+            (ckpt / name).unlink()
+
+
+def _write_campaign_summary(ckpt: pathlib.Path, reports, stats) -> None:
+    ckpt.mkdir(parents=True, exist_ok=True)
+    (ckpt / "campaign.md").write_text(report.strategy_markdown(reports))
+    (ckpt / "campaign_stats.json").write_text(
+        json.dumps(stats, indent=1))
+
+
 def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
                   fresh: bool = False, checkpoint_dir=None,
-                  strategy: str = "tree", strategy_options=None):
+                  strategy: str = "tree", strategy_options=None,
+                  evaluator=None, warm_start: bool = False):
     """Run a strategy over a batch of cells in one concurrent campaign;
     returns ``{cell_key: report}`` plus the campaign's throughput
     stats.  Non-tree strategies checkpoint under a per-strategy
     subdirectory so campaigns with different strategies on the same
     cells never clobber each other."""
-    from repro.core.campaign import CAMPAIGN_DIR, Campaign
-    if checkpoint_dir:
-        ckpt = pathlib.Path(checkpoint_dir)
-    else:
-        ckpt = CAMPAIGN_DIR if strategy == "tree" \
-            else CAMPAIGN_DIR / strategy
+    from repro.core.campaign import Campaign
+    ckpt = campaign_dir(strategy, checkpoint_dir)
+    if fresh:
+        fresh_campaign_dir(ckpt, cells)
     camp = Campaign(
         cells, strategy=strategy, strategy_options=strategy_options,
-        threshold=threshold, checkpoint_dir=ckpt,
+        threshold=threshold, checkpoint_dir=ckpt, evaluator=evaluator,
+        warm_start=warm_start,
         baseline_factory=lambda spec: _baseline(baseline_overrides))
-    if fresh:
-        camp.discard_checkpoints()
     reports = camp.run()
     for rep in reports.values():
         _save_cell_report(rep, strategy)
-    ckpt.mkdir(parents=True, exist_ok=True)
-    (ckpt / "campaign.md").write_text(report.strategy_markdown(reports))
-    (ckpt / "campaign_stats.json").write_text(
-        json.dumps(camp.last_stats, indent=1))
+    _write_campaign_summary(ckpt, reports, camp.last_stats)
     return reports, camp.last_stats
+
+
+def run_worker(args, cells, options) -> int:
+    """``--worker``: one fabric worker over a shared directory."""
+    from repro.core.fabric import FabricWorker, load_evaluator
+    ckpt = campaign_dir(args.strategy, args.dir)
+    worker = FabricWorker(
+        cells, ckpt, strategy=args.strategy, strategy_options=options,
+        threshold=args.threshold,
+        evaluator=load_evaluator(args.evaluator),
+        baseline_factory=lambda spec: _baseline(),
+        worker_id=args.worker_id, ttl_s=args.worker_ttl,
+        warm_start=args.warm_start,
+        ready_file=pathlib.Path(args.ready_file)
+        if args.ready_file else None,
+        go_file=pathlib.Path(args.go_file) if args.go_file else None)
+    stats = worker.run()
+    print(json.dumps(stats, indent=1))
+    return 0
+
+
+def run_fabric(args, cells, options) -> int:
+    """``--workers N`` / ``--coordinate``: spawn local workers over the
+    per-strategy campaign directory, wait, summarize."""
+    from repro.core.fabric import run_coordinator
+    ckpt = campaign_dir(args.strategy, args.dir)
+    if args.fresh:
+        fresh_campaign_dir(ckpt, cells)
+    n = args.workers or 2
+    out = run_coordinator(
+        cells, ckpt, workers=n, strategy=args.strategy,
+        strategy_options=options,
+        evaluator_spec=args.evaluator, ttl_s=args.worker_ttl,
+        threshold=args.threshold, warm_start=args.warm_start,
+        extra_args=_worker_passthrough(args),
+        log_dir=ckpt / "worker_logs")
+    reports, stats = out["reports"], out["stats"]
+    for rep in reports.values():
+        _save_cell_report(rep, args.strategy)
+    _write_campaign_summary(ckpt, reports, stats)
+    print(report.strategy_markdown(reports))
+    print(f"\n[fabric:{stats['strategy']}] {stats['cells']} cells, "
+          f"{stats['workers']} workers, {stats['wall_s']}s "
+          f"({stats['cells_per_hour']} cells/h)")
+    return 0
+
+
+def _worker_passthrough(args) -> list:
+    """Strategy options forwarded verbatim to spawned workers."""
+    extra = []
+    if args.sweep_knobs:
+        extra += ["--sweep-knobs", args.sweep_knobs]
+    if args.budget is not None:
+        extra += ["--budget", str(args.budget)]
+    if args.seed is not None:
+        extra += ["--seed", str(args.seed)]
+    return extra
 
 
 def _print_cell_summary(rep) -> None:
@@ -155,7 +257,40 @@ def main(argv=None) -> int:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--threshold", type=float, default=0.05)
     ap.add_argument("--fresh", action="store_true",
-                    help="campaign mode: discard checkpoints, re-tune")
+                    help="campaign/fabric mode: discard the cells' "
+                         "checkpoints and leases in the per-strategy "
+                         "directory, re-tune (the trial history is kept)")
+    fab = ap.add_argument_group("campaign fabric (core/fabric.py)")
+    fab.add_argument("--workers", type=int,
+                     help="fabric mode: spawn N local worker processes "
+                          "over the shared per-strategy directory")
+    fab.add_argument("--coordinate", action="store_true",
+                     help="fabric mode with the default worker count "
+                          "(2) — same as --workers 2")
+    fab.add_argument("--worker", action="store_true",
+                     help="join a shared directory as one fabric "
+                          "worker (start any number, on any host)")
+    fab.add_argument("--dir",
+                     help="shared fabric directory (default: the "
+                          "per-strategy campaign checkpoint dir)")
+    fab.add_argument("--evaluator",
+                     help="module:factory dotted path for the trial "
+                          "evaluator (default: RooflineEvaluator; "
+                          "benchmarks/tests swap in synthetic surfaces)")
+    fab.add_argument("--worker-ttl", type=float, default=30.0,
+                     help="lease TTL seconds: a lease whose heartbeat "
+                          "is older than this is recovered (default 30)")
+    fab.add_argument("--worker-id", help="explicit worker id")
+    fab.add_argument("--warm-start", action="store_true",
+                     help="seed fresh cells from the best configs of "
+                          "the nearest already-tuned cells in the "
+                          "trial history")
+    fab.add_argument("--ready-file",
+                     help="touch this file once initialized (benchmark "
+                          "start barrier)")
+    fab.add_argument("--go-file",
+                     help="wait for this file before claiming cells "
+                          "(benchmark start barrier)")
     args = ap.parse_args(argv)
 
     if args.sweep_knobs and args.strategy != "sensitivity":
@@ -165,15 +300,28 @@ def main(argv=None) -> int:
         ap.error("--budget/--seed only apply to --strategy random")
     options = _strategy_options(args.strategy, args.sweep_knobs,
                                 args.budget, args.seed)
+    fabric_mode = args.worker or args.coordinate or args.workers
+    if args.fresh and not (args.all or args.cells):
+        ap.error("--fresh only applies to campaign/fabric modes")
+    if args.worker and args.fresh:
+        ap.error("--fresh is a coordinator/campaign action; workers "
+                 "join shared state, they must not clear it")
+    if fabric_mode and not (args.all or args.cells):
+        ap.error("fabric modes need --cells or --all")
     if args.all or args.cells:
         from repro.core.campaign import enumerate_cells, parse_cells
         cells = parse_cells(args.cells,
                             default_multi_pod=args.multi_pod) \
             if args.cells else enumerate_cells(meshes=(args.multi_pod,))
+        if args.worker:
+            return run_worker(args, cells, options)
+        if args.coordinate or args.workers:
+            return run_fabric(args, cells, options)
         reports, stats = tune_campaign(cells, threshold=args.threshold,
                                        fresh=args.fresh,
                                        strategy=args.strategy,
-                                       strategy_options=options)
+                                       strategy_options=options,
+                                       warm_start=args.warm_start)
         print(report.strategy_markdown(reports))
         print(f"\n[{stats['strategy']}] {stats['cells']} cells in "
               f"{stats['wall_s']}s "

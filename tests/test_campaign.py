@@ -61,10 +61,11 @@ def surface(wl, rt):
 
 
 class CountingSurface:
-    def __init__(self, fail_after=None):
+    def __init__(self, fail_after=None, fn=None):
         self.calls = []
         self.lock = threading.Lock()
         self.fail_after = fail_after
+        self.fn = fn or surface
 
     def __call__(self, wl, rt):
         with self.lock:
@@ -72,7 +73,7 @@ class CountingSurface:
             if self.fail_after is not None \
                     and len(self.calls) > self.fail_after:
                 raise KeyboardInterrupt("simulated kill")
-        return surface(wl, rt)
+        return self.fn(wl, rt)
 
 
 def sequential_reference():
@@ -399,3 +400,248 @@ def test_campaign_markdown(tmp_path):
     assert "smollm-135m" in md and "xlstm-1.3b" in md
     assert f"cells tuned: {len(CELLS)}" in md
     assert "geometric-mean speedup" in md
+
+
+# ------------------------------------------------- history + warm-start
+# The PR-2 bench batch: cells of the same shape kind share one best
+# tree outcome on the synthetic fabric surface — the structure
+# warm-starting exploits.
+FCELLS = [CellSpec("smollm-135m", "train_4k"),
+          CellSpec("smollm-135m", "prefill_32k"),
+          CellSpec("xlstm-1.3b", "prefill_32k"),
+          CellSpec("xlstm-1.3b", "decode_32k")]
+
+
+def fsurface(wl, rt):
+    from benchmarks.fabric_surface import surface_cost
+    return surface_cost(wl, rt)
+
+
+def trials_to_best(rep, target_config):
+    """1-based count of evaluated trials until ``target_config`` first
+    appears in the log; inf if it never does."""
+    for i, e in enumerate(rep.log):
+        if e["config"] == target_config:
+            return i + 1
+    return float("inf")
+
+
+def test_campaign_writes_history_by_default(tmp_path):
+    from repro.core.history import TrialHistory
+    camp = Campaign(FCELLS, evaluator=fsurface,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path)
+    reports = camp.run()
+    hist = TrialHistory(tmp_path / "history.jsonl")
+    assert hist.n_records() == sum(r.n_trials for r in reports.values())
+    assert sorted(hist.cells()) == sorted(c.key() for c in FCELLS)
+    # resume replays, so nothing is re-emitted
+    Campaign(FCELLS, evaluator=fsurface,
+             baseline_factory=baseline_factory,
+             checkpoint_dir=tmp_path).run()
+    assert hist.n_records() == sum(r.n_trials for r in reports.values())
+    # history=False opts out
+    camp2 = Campaign(FCELLS, evaluator=fsurface,
+                     baseline_factory=baseline_factory,
+                     checkpoint_dir=tmp_path / "nohist", history=False)
+    camp2.run()
+    assert not (tmp_path / "nohist" / "history.jsonl").exists()
+
+
+def test_warm_start_reaches_best_in_fewer_trials(tmp_path):
+    """Acceptance: the warm-started arm reaches the cold best config in
+    strictly fewer evaluated trials on >= 2 of the 4 batch cells."""
+    from repro.core.history import TrialHistory
+    cold = Campaign(FCELLS, evaluator=fsurface,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path / "cold").run()
+    hist = TrialHistory(tmp_path / "cold" / "history.jsonl")
+    warm_camp = Campaign(FCELLS, evaluator=fsurface,
+                         baseline_factory=baseline_factory,
+                         checkpoint_dir=tmp_path / "warm",
+                         history=hist, warm_start=True)
+    warm = warm_camp.run()
+    assert warm_camp.last_stats["warmstarted_cells"] >= 2
+    improved = sum(
+        trials_to_best(warm[c.key()], cold[c.key()].final_config)
+        < trials_to_best(cold[c.key()], cold[c.key()].final_config)
+        for c in FCELLS)
+    assert improved >= 2
+    # warm-start trials still respect the <=10-run budget
+    assert all(r.n_trials <= 10 for r in warm.values())
+
+
+def test_warm_start_resume_uses_checkpointed_seeds(tmp_path):
+    """An interrupted warm-started campaign must replay against the
+    seeds its checkpoint recorded, even if the history has since grown
+    and a fresh query would return different seeds."""
+    import shutil
+    from repro.core.history import TrialHistory
+    Campaign(FCELLS, evaluator=fsurface,
+             baseline_factory=baseline_factory,
+             checkpoint_dir=tmp_path / "cold").run()
+    h_main = tmp_path / "h_main.jsonl"
+    h_ref = tmp_path / "h_ref.jsonl"
+    shutil.copy(tmp_path / "cold" / "history.jsonl", h_main)
+    shutil.copy(tmp_path / "cold" / "history.jsonl", h_ref)
+    # uninterrupted warm reference
+    ref = Campaign(FCELLS, evaluator=fsurface,
+                   baseline_factory=baseline_factory,
+                   checkpoint_dir=tmp_path / "ref",
+                   history=TrialHistory(h_ref), warm_start=True).run()
+    # interrupted warm run
+    killer = CountingSurface(fail_after=8, fn=fsurface)
+    camp = Campaign(FCELLS, evaluator=killer,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path / "warm",
+                    history=TrialHistory(h_main), warm_start=True,
+                    max_workers=2)
+    with pytest.raises(KeyboardInterrupt):
+        camp.run()
+    absorbed = []
+    with_seeds = 0
+    for spec in FCELLS:
+        path = tmp_path / "warm" / f"{spec.key()}.json"
+        if path.exists():
+            d = json.loads(path.read_text())
+            absorbed += [(d["cell"], e["config"]) for e in d["log"]]
+            with_seeds += "warmstart" in d
+    assert absorbed and with_seeds
+    # the history grows under the campaign: a fresh query would now
+    # return different seeds for every cell
+    poison = TrialHistory(h_main)
+    best = dict(next(iter(poison.records())))
+    best["cell"] = "glm4-9b__train_4k__pod"
+    best["arch"], best["shape"] = "glm4-9b", "train_4k"
+    best["cost_s"] = 0.001
+    best["config"] = default_config(
+        shard_strategy="fsdp", attn_impl="pallas").as_dict()
+    poison.append(best)
+    resumer = CountingSurface(fn=fsurface)
+    camp2 = Campaign(FCELLS, evaluator=resumer,
+                     baseline_factory=baseline_factory,
+                     checkpoint_dir=tmp_path / "warm",
+                     history=poison, warm_start=True, max_workers=2)
+    resumed = camp2.run()
+    re_evaluated = {(k, json.dumps(c, sort_keys=True))
+                    for k, c in resumer.calls}
+    absorbed_set = {(k, json.dumps(c, sort_keys=True))
+                    for k, c in absorbed}
+    assert not re_evaluated & absorbed_set
+    for spec in FCELLS:
+        assert resumed[spec.key()].__dict__ == ref[spec.key()].__dict__
+
+
+def test_warm_start_invalidates_cold_checkpoints(tmp_path):
+    """Turning warm-start on changes a seeded cell's walk, so a cold
+    checkpoint must not be replayed into it; a cell whose query yields
+    no seeds keeps its cold signature and still replays."""
+    from repro.core.history import TrialHistory
+    cold_camp = Campaign(FCELLS, evaluator=fsurface,
+                         baseline_factory=baseline_factory,
+                         checkpoint_dir=tmp_path)
+    cold_camp.run()
+    warm_camp = Campaign(FCELLS, evaluator=fsurface,
+                         baseline_factory=baseline_factory,
+                         checkpoint_dir=tmp_path, warm_start=True)
+    warm_camp.run()
+    # seeds existed for every cell -> all cold checkpoints discarded
+    assert warm_camp.last_stats["replayed_trials"] == 0
+    # single cell, empty foreign history -> no seeds -> cold replay
+    solo = tmp_path / "solo"
+    Campaign(FCELLS[:1], evaluator=fsurface,
+             baseline_factory=baseline_factory,
+             checkpoint_dir=solo).run()
+    counting = CountingSurface()
+    camp = Campaign(FCELLS[:1], evaluator=counting,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=solo, warm_start=True)
+    camp.run()
+    assert counting.calls == []
+    assert camp.last_stats["replayed_trials"] > 0
+
+
+def test_warm_start_stored_empty_seed_list_wins_on_resume(tmp_path):
+    """A checkpointed ``"warmstart": []`` is a stored decision: even if
+    the history has since grown and a fresh query would now return
+    seeds, resume must honor the empty list and replay — not discard
+    the checkpoint and re-pay the walk."""
+    from repro.core.history import TrialHistory
+    solo = tmp_path / "solo"
+    camp = Campaign(FCELLS[:1], evaluator=fsurface,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=solo, warm_start=True)
+    camp.run()                           # no neighbors -> no seeds
+    ck = json.loads((solo / f"{FCELLS[0].key()}.json").read_text())
+    assert ck["warmstart"] == []
+    # the history grows: a neighbor cell appears with a great config
+    hist = TrialHistory(solo / "history.jsonl")
+    rec = dict(next(iter(hist.records())))
+    rec.update(cell=FCELLS[2].key(), arch=FCELLS[2].arch,
+               shape=FCELLS[2].shape, cost_s=0.001,
+               config=default_config(shard_strategy="fsdp_tp",
+                                     attn_impl="pallas",
+                                     compute_dtype="bfloat16").as_dict())
+    hist.append(rec)
+    assert hist.warmstart_configs(FCELLS[0].arch, FCELLS[0].shape)
+    counting = CountingSurface(fn=fsurface)
+    camp2 = Campaign(FCELLS[:1], evaluator=counting,
+                     baseline_factory=baseline_factory,
+                     checkpoint_dir=solo, warm_start=True)
+    camp2.run()
+    assert counting.calls == []          # stored [] won; full replay
+    assert camp2.last_stats["replayed_trials"] > 0
+
+
+def test_warm_start_without_history_rejected():
+    with pytest.raises(ValueError, match="warm_start"):
+        Campaign(CELLS, evaluator=surface, checkpoint_dir=None,
+                 warm_start=True)
+
+
+# ----------------------------------------------- --fresh (launch/tune)
+def test_fresh_respects_per_strategy_dirs(tmp_path, monkeypatch):
+    """Satellite: ``--fresh`` under ``--strategy random`` clears only
+    the random subdirectory's checkpoints (and leases) — the tree
+    strategy's checkpoints in the parent dir survive untouched."""
+    import repro.core.campaign as campaign_mod
+    from repro.launch import tune
+    monkeypatch.setattr(campaign_mod, "CAMPAIGN_DIR", tmp_path / "camp")
+    monkeypatch.setattr(tune, "RESULTS_DIR", tmp_path / "tuning")
+    cells = CELLS[:2]
+    tune.tune_campaign(cells, evaluator=surface)
+    tune.tune_campaign(cells, strategy="random",
+                       strategy_options={"budget": 3, "seed": 1},
+                       evaluator=surface)
+    tree_dir, rand_dir = tmp_path / "camp", tmp_path / "camp" / "random"
+    assert all((tree_dir / f"{c.key()}.json").exists() for c in cells)
+    assert all((rand_dir / f"{c.key()}.json").exists() for c in cells)
+    # a crashed worker's leftover lease in the random dir
+    (rand_dir / "leases").mkdir()
+    (rand_dir / "leases" / f"{cells[0].key()}.lease").write_text("{}")
+    tree_bytes = {c.key(): (tree_dir / f"{c.key()}.json").read_bytes()
+                  for c in cells}
+    counting = CountingSurface()
+    tune.tune_campaign(cells, strategy="random",
+                       strategy_options={"budget": 3, "seed": 1},
+                       evaluator=counting, fresh=True)
+    assert counting.calls                # random really re-tuned
+    assert not (rand_dir / "leases"
+                / f"{cells[0].key()}.lease").exists()
+    for c in cells:                      # tree state untouched
+        assert (tree_dir / f"{c.key()}.json").read_bytes() \
+            == tree_bytes[c.key()]
+    counting2 = CountingSurface()
+    tune.tune_campaign(cells, evaluator=counting2)
+    assert counting2.calls == []         # tree still replays fully
+
+
+def test_fresh_rejected_outside_campaign_mode(capsys):
+    from repro.launch import tune
+    with pytest.raises(SystemExit):
+        tune.main(["--arch", "smollm-135m", "--shape", "train_4k",
+                   "--fresh"])
+    assert "--fresh only applies" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        tune.main(["--worker", "--cells", "smollm-135m:train_4k",
+                   "--fresh"])

@@ -1,10 +1,18 @@
 """Trial-throughput engine: knob partition, two-level compile cache,
-cached-vs-naive cost identity.
+cached-vs-naive cost identity, multi-process disk safety.
 
 The load-bearing invariant: the cache may only change HOW MANY compiles
 a sweep pays for, never any observed cost — configs sharing a
-compile_key() must compile to identical programs."""
+compile_key() must compile to identical programs.  Since the campaign
+fabric, the disk level is shared across worker *processes*: writes are
+unique-tempfile + atomic-rename, and a torn entry is a miss, never a
+crash."""
 import dataclasses
+import json
+import os
+import pathlib
+import subprocess
+import sys
 import threading
 
 import pytest
@@ -140,6 +148,87 @@ def test_compile_cache_inflight_dedup():
         t.join()
     assert calls == [1]                 # one build for four callers
     assert all(o == {"v": 1} for o in out)
+
+
+def test_compile_cache_tolerates_torn_disk_entry(tmp_path):
+    """A half-written entry (crashed writer, pre-atomic-rename era) is
+    a miss: the reader rebuilds and atomically repairs the file."""
+    cc = CompileCache(directory=tmp_path)
+    (tmp_path / "k.json").write_text('{"x": 1, "trunc')
+    assert cc.get_or_build("k", lambda: {"x": "rebuilt"}) \
+        == {"x": "rebuilt"}
+    # the torn file was repaired on disk: a fresh cache reads it
+    assert CompileCache(directory=tmp_path) \
+        .get_or_build("k", lambda: {"x": "NO"}) == {"x": "rebuilt"}
+    # non-dict junk is equally a miss
+    (tmp_path / "j.json").write_text("[1, 2]")
+    assert cc.get_or_build("j", lambda: {"x": "j"}) == {"x": "j"}
+
+
+def test_compile_cache_writes_are_atomic_unique_tempfiles(tmp_path):
+    """No fixed .tmp path: concurrent same-key writers in different
+    processes must never interleave bytes in one temp file."""
+    cc = CompileCache(directory=tmp_path)
+    cc.get_or_build("k", lambda: {"x": 1})
+    leftovers = [p.name for p in tmp_path.iterdir()
+                 if p.suffix == ".tmp"]
+    assert leftovers == []               # temp was renamed into place
+    assert json.loads((tmp_path / "k.json").read_text()) == {"x": 1}
+
+
+_STRESS_CHILD = r"""
+import json, random, sys, time
+from repro.core.trial import CompileCache
+
+cache_dir, out_path, seed = sys.argv[1], sys.argv[2], int(sys.argv[3])
+rng = random.Random(seed)
+cc = CompileCache(directory=cache_dir, mem_entries=2)  # force disk traffic
+got = {}
+for i in range(120):
+    key = f"k{rng.randint(0, 7)}"
+
+    def build(key=key):
+        time.sleep(rng.random() * 0.002)
+        return {"key": key, "payload": "x" * 4096}
+
+    val = cc.get_or_build(key, build)
+    assert val["key"] == key and len(val["payload"]) == 4096, val
+    got[key] = val
+json.dump(got, open(out_path, "w"))
+"""
+
+
+@pytest.mark.parametrize("n_procs", [2])
+def test_compile_cache_two_process_stress(tmp_path, n_procs):
+    """Satellite: two processes hammer one cache directory with
+    overlapping keys.  Every read must return a complete entry (no
+    torn pickles), and the directory must end consistent."""
+    cache_dir = tmp_path / "cache"
+    procs = []
+    for i in range(n_procs):
+        out = tmp_path / f"out{i}.json"
+        env = dict(os.environ,
+                   PYTHONPATH="src" + os.pathsep
+                   + os.environ.get("PYTHONPATH", ""),
+                   JAX_PLATFORMS="cpu")
+        root = pathlib.Path(__file__).resolve().parents[1]
+        procs.append((subprocess.Popen(
+            [sys.executable, "-c", _STRESS_CHILD, str(cache_dir),
+             str(out), str(i)], cwd=root,
+            env=env, stderr=subprocess.PIPE), out))
+    outs = []
+    for p, out in procs:
+        _, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err.decode()
+        outs.append(json.load(open(out)))
+    # both processes observed identical values per key
+    for key in set(outs[0]) | set(outs[1]):
+        vals = [o[key] for o in outs if key in o]
+        assert all(v == vals[0] for v in vals)
+    # the directory holds only complete JSON entries, no temp leftovers
+    for p in cache_dir.iterdir():
+        assert p.suffix == ".json", p
+        assert json.loads(p.read_text())["key"] == p.stem
 
 
 # ------------------------------------------- evaluator cost identity

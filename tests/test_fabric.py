@@ -1,0 +1,329 @@
+"""Campaign fabric: lease lifecycle, crash recovery, worker scheduling.
+
+In-process tests drive synthetic evaluators (no XLA compiles, no
+subprocesses).  Load-bearing invariants:
+
+  * a lease is exclusive while its heartbeat is fresh; an expired lease
+    is stolen by exactly one contender;
+  * a worker that crashes mid-cell leaves an expiring lease + a
+    checkpoint of everything absorbed — the recovering worker re-pays
+    none of it;
+  * any number of workers over one directory complete all cells with
+    per-cell decisions bit-identical to the single-process campaign.
+
+The multi-*process* path (subprocess workers, SIGKILL recovery, scaling)
+is exercised end-to-end by ``benchmarks/bench_fabric.py`` and the CI
+fabric smoke.
+"""
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core.campaign import Campaign, CellSpec, tuning_fingerprint
+from repro.core.fabric import (FabricWorker, Heartbeat, Lease,
+                               LeaseBoard, LeaseLost, checkpoint_done,
+                               load_evaluator, worker_argv)
+from repro.core.params import default_config
+from repro.core.trial import TrialRunner
+from repro.core.tree import run_tuning
+
+from test_campaign import CELLS, CountingSurface, baseline_factory, \
+    surface
+
+
+# ---------------------------------------------------------------- leases
+def test_lease_exclusive_until_released(tmp_path):
+    a = LeaseBoard(tmp_path, worker_id="a", ttl_s=30)
+    b = LeaseBoard(tmp_path, worker_id="b", ttl_s=30)
+    lease = a.try_acquire("cell-1")
+    assert lease is not None
+    assert b.try_acquire("cell-1") is None
+    assert b.try_acquire("cell-2") is not None    # other cells are free
+    lease.release()
+    assert b.try_acquire("cell-1") is not None
+
+
+def test_expired_lease_is_stolen(tmp_path):
+    a = LeaseBoard(tmp_path, worker_id="a", ttl_s=0.1)
+    b = LeaseBoard(tmp_path, worker_id="b", ttl_s=30)
+    assert a.try_acquire("cell-1") is not None
+    assert b.try_acquire("cell-1") is None        # still fresh
+    time.sleep(0.15)
+    stolen = b.try_acquire("cell-1")
+    assert stolen is not None and stolen.state.worker == "b"
+
+
+def test_steal_race_single_winner(tmp_path):
+    dead = LeaseBoard(tmp_path, worker_id="dead", ttl_s=0.05)
+    assert dead.try_acquire("cell-1") is not None
+    time.sleep(0.1)
+    boards = [LeaseBoard(tmp_path, worker_id=f"w{i}", ttl_s=30)
+              for i in range(6)]
+    got = [None] * len(boards)
+
+    def claim(i):
+        got[i] = boards[i].try_acquire("cell-1")
+
+    ts = [threading.Thread(target=claim, args=(i,))
+          for i in range(len(boards))]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    winners = [lease for lease in got if lease is not None]
+    assert len(winners) == 1
+    held = LeaseBoard(tmp_path).held()
+    assert [st.worker for st in held] == [winners[0].state.worker]
+
+
+def test_heartbeat_keeps_lease_fresh_then_expires(tmp_path):
+    a = LeaseBoard(tmp_path, worker_id="a", ttl_s=0.4)
+    b = LeaseBoard(tmp_path, worker_id="b", ttl_s=30)
+    lease = a.try_acquire("cell-1")
+    with Heartbeat(lease, interval=0.1):
+        time.sleep(0.8)                  # > ttl, but heartbeats refresh
+        assert b.try_acquire("cell-1") is None
+    time.sleep(0.5)                      # heartbeat stopped: expires
+    assert b.try_acquire("cell-1") is not None
+
+
+def test_refresh_after_steal_raises_lease_lost(tmp_path):
+    a = LeaseBoard(tmp_path, worker_id="a", ttl_s=0.05)
+    b = LeaseBoard(tmp_path, worker_id="b", ttl_s=30)
+    lease = a.try_acquire("cell-1")
+    time.sleep(0.1)
+    assert b.try_acquire("cell-1") is not None
+    with pytest.raises(LeaseLost):
+        lease.refresh()
+
+
+def test_torn_lease_file_is_stealable(tmp_path):
+    board = LeaseBoard(tmp_path, worker_id="w", ttl_s=30)
+    (tmp_path / "leases").mkdir()
+    (tmp_path / "leases" / "cell-1.lease").write_text("{torn")
+    lease = board.try_acquire("cell-1")
+    assert lease is not None and lease.state.worker == "w"
+
+
+def test_reap_expired(tmp_path):
+    a = LeaseBoard(tmp_path, worker_id="a", ttl_s=0.05)
+    b = LeaseBoard(tmp_path, worker_id="b", ttl_s=30)
+    a.try_acquire("done-cell")
+    b.try_acquire("live-cell")
+    time.sleep(0.1)
+    board = LeaseBoard(tmp_path, ttl_s=30)
+    assert board.reap_expired() == ["done-cell"]
+    assert [st.cell for st in board.held()] == ["live-cell"]
+
+
+# --------------------------------------------------------------- workers
+def test_single_worker_matches_single_process_campaign(tmp_path):
+    worker = FabricWorker(CELLS, tmp_path / "fab", evaluator=surface,
+                          baseline_factory=baseline_factory, ttl_s=30)
+    stats = worker.run()
+    assert sorted(stats["cells_completed"]) \
+        == sorted(c.key() for c in CELLS)
+    assert LeaseBoard(tmp_path / "fab").held() == []
+    ref = Campaign(CELLS, evaluator=surface,
+                   baseline_factory=baseline_factory,
+                   checkpoint_dir=tmp_path / "ref").run()
+    for spec in CELLS:
+        assert checkpoint_done(tmp_path / "fab", spec.key(), "tree")
+        d = json.loads((tmp_path / "fab" / f"{spec.key()}.json")
+                       .read_text())
+        rep = worker.strategy.load_report(d["report"])
+        assert tuning_fingerprint(rep) \
+            == tuning_fingerprint(ref[spec.key()])
+    # every evaluated trial landed in the shared history
+    assert worker.history.n_records() \
+        == sum(r.n_trials for r in ref.values())
+
+
+def test_two_workers_share_the_board_disjointly(tmp_path):
+    d = tmp_path / "fab"
+    counting = CountingSurface()
+    workers = [FabricWorker(CELLS, d, evaluator=counting,
+                            baseline_factory=baseline_factory,
+                            worker_id=f"w{i}", ttl_s=30, poll_s=0.05)
+               for i in range(2)]
+    stats = [None, None]
+
+    def drive(i):
+        stats[i] = workers[i].run()
+
+    ts = [threading.Thread(target=drive, args=(i,)) for i in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    done = stats[0]["cells_completed"] + stats[1]["cells_completed"]
+    assert sorted(done) == sorted(c.key() for c in CELLS)  # no overlap
+    assert LeaseBoard(d).held() == []
+    # no trial ran twice: the lease made the cells disjoint
+    ref_trials = {}
+    for spec in CELLS:
+        runner = TrialRunner(spec.workload(), surface)
+        ref_trials[spec.key()] = run_tuning(
+            runner, baseline_factory(spec), threshold=0.05).n_trials
+    assert len(counting.calls) == sum(ref_trials.values())
+
+
+def test_worker_releases_lease_on_evaluator_fault(tmp_path):
+    """An exception (not a SIGKILL) unwinds the worker's finally: the
+    lease is released immediately — recovery needs no TTL wait."""
+    d = tmp_path / "fab"
+    killer = CountingSurface(fail_after=3)
+    a = FabricWorker(CELLS, d, evaluator=killer,
+                     baseline_factory=baseline_factory,
+                     worker_id="a", ttl_s=30, poll_s=0.05)
+    with pytest.raises(KeyboardInterrupt):
+        a.run()
+    assert LeaseBoard(d).held() == []
+
+
+def test_crashed_worker_recovered_without_repaying(tmp_path):
+    """The fabric acceptance invariant, in-process: worker A is
+    SIGKILL-dead mid-cell — checkpoints hold everything absorbed, its
+    lease is still on the board with a stopped heartbeat.  Worker B
+    steals the expired lease and completes everything without
+    re-evaluating one absorbed trial.  (bench_fabric.py stages the
+    same scenario with a real SIGKILL across processes.)"""
+    d = tmp_path / "fab"
+    killer = CountingSurface(fail_after=9)
+    camp = Campaign(CELLS, evaluator=killer,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=d, max_workers=2)
+    with pytest.raises(KeyboardInterrupt):
+        camp.run()                       # A's work until the kill
+    absorbed = []
+    unfinished = []
+    for spec in CELLS:
+        path = d / f"{spec.key()}.json"
+        if path.exists():
+            ck = json.loads(path.read_text())
+            absorbed += [(ck["cell"], e["config"]) for e in ck["log"]]
+            if not ck.get("done"):
+                unfinished.append(spec.key())
+        else:
+            unfinished.append(spec.key())
+    assert absorbed and unfinished
+    # the dead worker's lease survives it, heartbeat frozen
+    dead_board = LeaseBoard(d, worker_id="a", ttl_s=0.3)
+    assert dead_board.try_acquire(unfinished[0]) is not None
+    time.sleep(0.4)                      # let A's lease expire
+    resumer = CountingSurface()
+    b = FabricWorker(CELLS, d, evaluator=resumer,
+                     baseline_factory=baseline_factory,
+                     worker_id="b", ttl_s=30, poll_s=0.05)
+    stats = b.run()
+    assert sorted(stats["cells_completed"]) \
+        == sorted(c.key() for c in CELLS)
+    assert LeaseBoard(d).held() == []
+    repaid = {(k, json.dumps(c, sort_keys=True)) for k, c in
+              ((k, c) for k, c in resumer.calls)} \
+        & {(k, json.dumps(c, sort_keys=True)) for k, c in absorbed}
+    assert repaid == set()
+    assert stats["replayed_trials"] == len(absorbed)
+    # decisions identical to the uninterrupted single-process campaign
+    ref = Campaign(CELLS, evaluator=surface,
+                   baseline_factory=baseline_factory,
+                   checkpoint_dir=tmp_path / "ref").run()
+    for spec in CELLS:
+        ck = json.loads((d / f"{spec.key()}.json").read_text())
+        rep = b.strategy.load_report(ck["report"])
+        assert rep.__dict__ == ref[spec.key()].__dict__
+
+
+def test_worker_skips_done_cells(tmp_path):
+    d = tmp_path / "fab"
+    FabricWorker(CELLS, d, evaluator=surface,
+                 baseline_factory=baseline_factory).run()
+    counting = CountingSurface()
+    stats = FabricWorker(CELLS, d, evaluator=counting,
+                         baseline_factory=baseline_factory).run()
+    assert counting.calls == []
+    assert stats["cells_completed"] == []
+
+
+def test_worker_retunes_done_checkpoints_with_stale_parameters(tmp_path):
+    """A done checkpoint written under a different threshold must read
+    as not-done: the fabric claims the cell and re-tunes it, exactly
+    like the single-process campaign would (the weak strategy-only
+    check would silently skip it)."""
+    d = tmp_path / "fab"
+    FabricWorker(CELLS[:2], d, evaluator=surface,
+                 baseline_factory=baseline_factory,
+                 threshold=0.05).run()
+    counting = CountingSurface()
+    stats = FabricWorker(CELLS[:2], d, evaluator=counting,
+                         baseline_factory=baseline_factory,
+                         threshold=0.10).run()
+    assert counting.calls                # really re-tuned
+    assert sorted(stats["cells_completed"]) \
+        == sorted(c.key() for c in CELLS[:2])
+    ref = Campaign(CELLS[:2], threshold=0.10, evaluator=surface,
+                   baseline_factory=baseline_factory,
+                   checkpoint_dir=tmp_path / "ref").run()
+    from repro.core.strategy import get_strategy
+    for spec in CELLS[:2]:
+        ck = json.loads((d / f"{spec.key()}.json").read_text())
+        assert ck["threshold"] == 0.10
+        rep = get_strategy("tree").load_report(ck["report"])
+        assert rep.__dict__ == ref[spec.key()].__dict__
+
+
+def test_worker_with_start_barrier(tmp_path):
+    d = tmp_path / "fab"
+    ready, go = tmp_path / "ready", tmp_path / "go"
+    worker = FabricWorker(CELLS[:1], d, evaluator=surface,
+                          baseline_factory=baseline_factory,
+                          ready_file=ready, go_file=go)
+    out = {}
+
+    def drive():
+        out["stats"] = worker.run()
+
+    t = threading.Thread(target=drive)
+    t.start()
+    deadline = time.time() + 5
+    while not ready.exists() and time.time() < deadline:
+        time.sleep(0.01)
+    assert ready.exists()
+    assert "stats" not in out            # blocked on the go barrier
+    go.touch()
+    t.join(timeout=5)
+    assert out["stats"]["cells_completed"] == [CELLS[0].key()]
+
+
+# ------------------------------------------------------------- plumbing
+def test_worker_argv_roundtrip(tmp_path):
+    argv = worker_argv(CELLS[:2], tmp_path, strategy="random",
+                       evaluator_spec="benchmarks.fabric_surface:"
+                                      "make_evaluator",
+                       ttl_s=5.0, warm_start=True,
+                       extra=["--budget", "3"])
+    assert "--worker" in argv and "--warm-start" in argv
+    assert argv[argv.index("--cells") + 1] \
+        == f"{CELLS[0].spec()},{CELLS[1].spec()}"
+    assert argv[-2:] == ["--budget", "3"]
+
+
+def test_load_evaluator_spec():
+    ev = load_evaluator("benchmarks.fabric_surface:make_evaluator")
+    res = ev(CELLS[0].workload(),
+             default_config(shard_strategy="fsdp_tp",
+                            attn_impl="pallas"))
+    assert res.cost_s > 0
+    with pytest.raises(ValueError):
+        load_evaluator("missing-colon")
+
+
+def test_checkpoint_done_checks_strategy(tmp_path):
+    FabricWorker(CELLS[:1], tmp_path, evaluator=surface,
+                 baseline_factory=baseline_factory).run()
+    key = CELLS[0].key()
+    assert checkpoint_done(tmp_path, key, "tree")
+    assert not checkpoint_done(tmp_path, key, "random")
+    assert not checkpoint_done(tmp_path, "no-such-cell", "tree")

@@ -1,0 +1,186 @@
+"""Trial-history store: durable appends, similarity, warm-start queries.
+
+Load-bearing invariants:
+
+  * appends are whole lines; readers skip torn/corrupt lines instead of
+    failing (concurrent fabric workers share one file);
+  * a cell's warm-start seeds come from the *nearest* already-tuned
+    cells (kind-dominant similarity over the ParamSpace registry) and
+    never from the cell's own records;
+  * configs read back from history are registry-validated — records
+    from an older knob space are skipped, never proposed.
+"""
+import json
+import threading
+
+import pytest
+
+from repro.core.history import (TrialHistory, active_knobs,
+                                cell_signature, cell_similarity,
+                                config_from_dict)
+from repro.core.params import default_config
+from repro.core.trial import TrialResult, TrialRunner, Workload
+
+
+def _rec(cell_args, cost, config=None, crashed=False, **over):
+    arch, shape = cell_args
+    wl = Workload(arch, shape)
+    d = {"v": 1, "ts": 1.0, "cell": wl.key(), "arch": arch,
+         "shape": shape, "multi_pod": False, "strategy": "tree",
+         "name": "t", "delta": {},
+         "config": (config or default_config().as_dict()),
+         "cost_s": cost, "crashed": crashed, "compiles": 0,
+         "compile_s": 0.0, "cached": False}
+    d.update(over)
+    return d
+
+
+# ----------------------------------------------------------- the store
+def test_append_and_read_roundtrip(tmp_path):
+    h = TrialHistory(tmp_path / "h.jsonl")
+    assert list(h.records()) == []
+    r1 = _rec(("smollm-135m", "train_4k"), 10.0)
+    r2 = _rec(("glm4-9b", "train_4k"), 20.0)
+    h.append(r1)
+    h.append(r2)
+    assert list(h.records()) == [r1, r2]
+    assert h.n_records() == 2
+    assert h.cells() == sorted([r1["cell"], r2["cell"]])
+
+
+def test_torn_and_corrupt_lines_skipped(tmp_path):
+    path = tmp_path / "h.jsonl"
+    h = TrialHistory(path)
+    good = _rec(("smollm-135m", "train_4k"), 10.0)
+    h.append(good)
+    with open(path, "a") as f:
+        f.write("{not json}\n")
+        f.write("[1, 2, 3]\n")              # parses but not a record
+        f.write('{"cell": "torn tail, no newline')
+    assert list(h.records()) == [good]
+    # an append after the torn tail starts on the same line — the torn
+    # line is lost (it was never durable), later records still parse
+    late = _rec(("glm4-9b", "train_4k"), 5.0)
+    h.append(late)
+    assert late in list(h.records())
+
+
+def test_concurrent_appends_keep_whole_lines(tmp_path):
+    h = TrialHistory(tmp_path / "h.jsonl")
+
+    def writer(i):
+        for j in range(50):
+            h.append(_rec(("smollm-135m", "train_4k"), float(i * 100 + j)))
+
+    ts = [threading.Thread(target=writer, args=(i,)) for i in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    recs = list(h.records())
+    assert len(recs) == 200
+    assert {r["cost_s"] for r in recs} \
+        == {float(i * 100 + j) for i in range(4) for j in range(50)}
+
+
+# ------------------------------------------------- signatures/similarity
+def test_active_knobs_follow_compile_reach():
+    train = active_knobs("train", "dense")
+    decode = active_knobs("decode", "dense")
+    # train-only knobs are active on train cells, not on decode cells
+    assert "microbatches" in train and "microbatches" not in decode
+    assert "remat_policy" in train and "remat_policy" not in decode
+    # serve-only knob: the KV dtype
+    assert "kv_cache_dtype" in decode and "kv_cache_dtype" not in train
+    # ...and never for the ssm family (no attention KV cache)
+    assert "kv_cache_dtype" not in active_knobs("decode", "ssm")
+    # analytic tunables are always active
+    for knobs in (train, decode):
+        assert "attn_block_q" in knobs
+
+
+def test_similarity_prefers_same_kind_over_same_arch():
+    target = cell_signature("smollm-135m", "prefill_32k")
+    same_kind = cell_signature("xlstm-1.3b", "prefill_32k")
+    same_arch = cell_signature("smollm-135m", "train_4k")
+    assert cell_similarity(target, same_kind) \
+        > cell_similarity(target, same_arch)
+    # identity dominates everything
+    assert cell_similarity(target, target) \
+        > cell_similarity(target, same_kind)
+
+
+def test_config_from_dict_tolerates_space_drift():
+    full = default_config().as_dict()
+    # unknown knob from a future/retired space: dropped
+    assert config_from_dict({**full, "gone_knob": 3}) \
+        == default_config()
+    # missing knobs take today's defaults
+    assert config_from_dict({"compute_dtype": "bfloat16"}) \
+        == default_config(compute_dtype="bfloat16")
+    # out-of-domain value: rejected
+    with pytest.raises(ValueError):
+        config_from_dict({**full, "compute_dtype": "float64"})
+
+
+# ------------------------------------------------------------ warm-start
+def test_warmstart_prefers_nearest_cell_best_config(tmp_path):
+    h = TrialHistory(tmp_path / "h.jsonl")
+    best_prefill = default_config(compute_dtype="bfloat16",
+                                  kv_cache_dtype="int8").as_dict()
+    best_train = default_config(remat_policy="none").as_dict()
+    h.append(_rec(("xlstm-1.3b", "prefill_32k"), 9.0))
+    h.append(_rec(("xlstm-1.3b", "prefill_32k"), 5.0,
+                  config=best_prefill))
+    h.append(_rec(("smollm-135m", "train_4k"), 4.0, config=best_train))
+    ws = h.warmstart_configs("smollm-135m", "prefill_32k",
+                             k_cells=2, per_cell=1)
+    # nearest (same kind) first, then the same-arch train cell
+    assert ws == [best_prefill, best_train]
+    assert h.warmstart_configs("smollm-135m", "prefill_32k",
+                               k_cells=1) == [best_prefill]
+
+
+def test_warmstart_excludes_own_cell_and_crashes(tmp_path):
+    h = TrialHistory(tmp_path / "h.jsonl")
+    own = default_config(compute_dtype="bfloat16").as_dict()
+    h.append(_rec(("smollm-135m", "train_4k"), 1.0, config=own))
+    h.append(_rec(("glm4-9b", "train_4k"), 2.0, crashed=True))
+    h.append(_rec(("glm4-9b", "train_4k"), float("inf")))
+    assert h.warmstart_configs("smollm-135m", "train_4k") == []
+
+
+def test_warmstart_skips_foreign_space_records_and_dedups(tmp_path):
+    h = TrialHistory(tmp_path / "h.jsonl")
+    bad = {**default_config().as_dict(), "compute_dtype": "float64"}
+    good = default_config(compute_dtype="bfloat16").as_dict()
+    h.append(_rec(("glm4-9b", "train_4k"), 1.0, config=bad))
+    h.append(_rec(("glm4-9b", "train_4k"), 2.0, config=good))
+    h.append(_rec(("xlstm-1.3b", "train_4k"), 3.0, config=good))
+    ws = h.warmstart_configs("smollm-135m", "train_4k",
+                             k_cells=3, per_cell=2)
+    assert ws == [good]                  # bad skipped, duplicate deduped
+    # an unknown arch in history is skipped, not fatal
+    h.append(_rec(("glm4-9b", "train_4k"), 0.5, arch="no-such-arch"))
+    assert good in h.warmstart_configs("smollm-135m", "train_4k",
+                                       k_cells=3)
+
+
+# ----------------------------------------------------- runner emission
+def test_trial_runner_emits_history_except_replays(tmp_path):
+    h = TrialHistory(tmp_path / "h.jsonl")
+    wl = Workload("smollm-135m", "train_4k")
+    runner = TrialRunner(wl, lambda w, rt: TrialResult(cost_s=1.0),
+                         history=h.sink("tree"))
+    cfg = default_config()
+    runner.record(cfg, "baseline", TrialResult(cost_s=1.0), {})
+    runner.record(cfg, "replayed", TrialResult(cost_s=2.0), {},
+                  replayed=True)
+    recs = list(h.records())
+    assert len(recs) == 1
+    assert recs[0]["name"] == "baseline"
+    assert recs[0]["cell"] == wl.key()
+    assert recs[0]["strategy"] == "tree"
+    assert recs[0]["config"] == cfg.as_dict()
+    # both trials still hit the log (the run budget counts them)
+    assert runner.n_trials == 2

@@ -1,0 +1,179 @@
+"""Golden-string tests for core/report.py markdown emission.
+
+The markdown lands verbatim in EXPERIMENTS.md artifacts, campaign.md
+summaries and the CLI output — drift is user-visible, so these tests
+pin the exact rendered text for every renderer: ``campaign_markdown``
+(speedup matrix incl. crash/recovered cells), ``strategy_markdown``
+(dispatch + mixed-type rejection), ``sensitivity_cell_markdown`` and
+``tuning_markdown``/``cell_markdown``.
+"""
+import pytest
+
+from repro.core import report
+from repro.core.sensitivity import KnobImpact, SensitivityReport
+from repro.core.tree import TuningReport
+
+
+def entry(name, delta, cost, accepted, note="", crashed=False):
+    return {"name": name, "delta": delta, "config": {},
+            "result": {"cost_s": cost, "crashed": crashed},
+            "accepted": accepted, "note": note}
+
+
+def tuned_report():
+    return TuningReport(
+        workload="smollm-135m__train_4k__pod", baseline_cost=2.0,
+        final_cost=1.25, final_config={"compute_dtype": "bfloat16"},
+        n_trials=3,
+        accepted=["serializer: {'compute_dtype': 'bfloat16'}"],
+        log=[entry("baseline", {}, 2.0, True,
+                   "baseline (defaults after cluster-level config)"),
+             entry("serializer", {"compute_dtype": "bfloat16"}, 1.25,
+                   True, "-37.5% vs incumbent"),
+             entry("memoryFraction", {"remat_policy": "full"}, 0.0039,
+                   False, "crashed (exceeds per-chip HBM)",
+                   crashed=True)])
+
+
+def recovered_report():
+    return TuningReport(
+        workload="xlstm-1.3b__decode_32k__pod",
+        baseline_cost=float("inf"), final_cost=0.5, final_config={},
+        n_trials=2, accepted=["serializer: recovered"],
+        log=[entry("baseline", {}, float("inf"), True, "",
+                   crashed=True),
+             entry("serializer", {"compute_dtype": "bfloat16"}, 0.5,
+                   True)])
+
+
+def crashed_report():
+    return TuningReport(
+        workload="glm4-9b__train_4k__pod", baseline_cost=3.0,
+        final_cost=float("inf"), final_config={}, n_trials=1,
+        accepted=[],
+        log=[entry("baseline", {}, float("inf"), True, "",
+                   crashed=True)])
+
+
+def sens_report():
+    return SensitivityReport(
+        workload="smollm-135m__train_4k__pod", baseline_cost=1.5,
+        impacts=[
+            KnobImpact("compute_dtype",
+                       "spark.serializer (Java -> Kryo)",
+                       ["bfloat16"], [-28.0], 0),
+            KnobImpact("remat_policy",
+                       "spark.shuffle.memoryFraction "
+                       "+ spark.storage.memoryFraction",
+                       ["none", "full"], [-16.0, float("nan")], 1)],
+        n_trials=4)
+
+
+CAMPAIGN_GOLDEN = """\
+### Campaign: tuning-tree speedup per cell
+
+| arch | train_4k__pod | decode_32k__pod |
+|---|---|---|
+| smollm-135m | x1.60 (3) | — |
+| xlstm-1.3b | — | recovered (2) |
+| glm4-9b | crash | — |
+
+* cells tuned: 3
+* total trials: 6 (cap 30)
+* accepted changes: 2
+* geometric-mean speedup: x1.60
+
+Each cell: `x<speedup> (<trials used>)`.\
+"""
+
+
+def test_campaign_markdown_golden():
+    reports = {r.workload: r for r in
+               (tuned_report(), recovered_report(), crashed_report())}
+    assert report.campaign_markdown(reports) == CAMPAIGN_GOLDEN
+
+
+def test_campaign_gmean_skips_crashed_cells():
+    """A crashed-final cell (speedup 0) and a crashed-baseline cell
+    (speedup inf) must not drag the geometric mean to 0/inf."""
+    reports = {r.workload: r for r in
+               (tuned_report(), recovered_report(), crashed_report())}
+    md = report.campaign_markdown(reports)
+    assert "geometric-mean speedup: x1.60" in md
+
+
+SENS_CELL_GOLDEN = """\
+### Sensitivity: `smollm-135m__train_4k__pod`
+
+* baseline cost: **1.500 s**
+* trials used:   4
+
+| knob (Spark analogue) | values | deviation % | mean abs % | crashes |
+|---|---|---|---|---|
+| compute_dtype (spark.serializer (Java -> Kryo)) | bfloat16 | -28.0 | \
+28.0% | 0 |
+| remat_policy (spark.shuffle.memoryFraction \
++ spark.storage.memoryFraction) | none, full | -16.0, crash | 16.0% | 1 |\
+"""
+
+
+def test_sensitivity_cell_markdown_golden():
+    assert report.sensitivity_cell_markdown(sens_report()) \
+        == SENS_CELL_GOLDEN
+
+
+STRATEGY_SENS_GOLDEN = """\
+### Campaign: sensitivity impact per cell (Table 2)
+
+| knob (Spark analogue) | smollm-135m__train_4k__pod | Average |
+|---|---|---|
+| compute_dtype | 28.0% | 28.0% |
+| remat_policy | 16.0% (1 crash) | 16.0% |\
+"""
+
+
+def test_strategy_markdown_dispatch():
+    sens = sens_report()
+    assert report.strategy_markdown({sens.workload: sens}) \
+        == STRATEGY_SENS_GOLDEN
+    tuned = tuned_report()
+    assert report.strategy_markdown({tuned.workload: tuned}) \
+        == report.campaign_markdown({tuned.workload: tuned})
+    with pytest.raises(TypeError, match="mixed report types"):
+        report.strategy_markdown({"cell-a": sens, "cell-b": tuned})
+
+
+TUNING_GOLDEN = """\
+### Case study: `smollm-135m__train_4k__pod`
+
+* baseline cost: **2.000 s**
+* final cost:    **1.250 s** (speedup x1.60)
+* trials used:   3 (cap 10)
+* accepted: serializer: {'compute_dtype': 'bfloat16'}
+
+| # | stage | change | cost | vs incumbent | verdict |
+|---|---|---|---|---|---|
+| 0 | baseline | - | 2.000 s | baseline (defaults after cluster-level \
+config) | baseline |
+| 1 | serializer | compute_dtype=bfloat16 | 1.250 s | -37.5% vs \
+incumbent | accept |
+| 2 | memoryFraction | remat_policy=full | 3.90 ms | crashed (exceeds \
+per-chip HBM) | CRASH |\
+"""
+
+
+def test_tuning_markdown_golden():
+    assert report.tuning_markdown(tuned_report()) == TUNING_GOLDEN
+
+
+def test_cell_markdown_dispatches_on_report_type():
+    assert report.cell_markdown(sens_report()) == SENS_CELL_GOLDEN
+    assert report.cell_markdown(tuned_report()) == TUNING_GOLDEN
+
+
+def test_fmt_s_edges():
+    assert report._fmt_s(float("nan")) == "crash"
+    assert report._fmt_s(float("inf")) == "crash"
+    assert report._fmt_s(1e30) == "crash"
+    assert report._fmt_s(2.5) == "2.500 s"
+    assert report._fmt_s(0.0039) == "3.90 ms"
