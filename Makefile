@@ -1,4 +1,5 @@
-.PHONY: verify verify-fast bench-trials bench-campaign bench-fabric
+.PHONY: verify verify-fast bench-trials bench-campaign bench-fabric \
+	bench-online
 
 # tier-1: full suite, fail-fast (ROADMAP.md)
 verify:
@@ -20,3 +21,8 @@ bench-campaign:
 # -> BENCH_fabric.json
 bench-fabric:
 	PYTHONPATH=src python -m benchmarks.bench_fabric
+
+# online-scheduler benchmark (priority time-to-first-improvement /
+# mid-run admission latency) -> BENCH_online.json
+bench-online:
+	PYTHONPATH=src python -m benchmarks.bench_online

@@ -48,9 +48,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-import os
 import pathlib
-import tempfile
 import time
 import warnings
 from concurrent.futures import FIRST_COMPLETED, wait
@@ -59,6 +57,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.configs import SHAPES, get_config, get_shape, list_archs, \
     shape_applicable
 from repro.core.executor import SweepExecutor
+from repro.core.fsutil import atomic_publish
 from repro.core.history import (HISTORY_FILENAME, TrialHistory,
                                 config_from_dict)
 from repro.core.params import TunableConfig, default_config
@@ -196,6 +195,22 @@ class Campaign:
     The seeds a cell actually used are persisted in its checkpoint and
     replayed on resume, so an interrupted warm-started campaign is
     immune to the history growing underneath it.
+
+    **Online scheduling** (core/schedule.py) — ``prioritize`` names the
+    cell prioritizer (``"arch"``: the historical first-seen-arch order;
+    ``"history"``: expected speedup from the trial history, unknown
+    cells explore-first; or a custom :class:`~repro.core.schedule
+    .CellPrioritizer` instance).  ``intake=True`` re-scans
+    ``<checkpoint_dir>/intake/`` between batches so cells submitted
+    while the campaign runs (``launch/tune.py --add-cells``) are
+    admitted live.  ``max_active_cells`` bounds concurrent cells
+    (None: all).  None of the three changes a cold cell's decisions —
+    only scheduling order.  The one interaction: ``warm_start`` seeds
+    are resolved when a cell is *handed out*, so in a bounded or
+    intake campaign a late cell may be seeded by trials this same run
+    appended — deliberate (the cumulative-history contract),
+    deterministic given the history at activation, and replay-exact on
+    resume because the checkpoint stores the seeds actually used.
     """
 
     def __init__(self, cells: Sequence[CellSpec], *,
@@ -213,9 +228,13 @@ class Campaign:
                  history: Any = None,
                  warm_start: bool = False,
                  warm_start_cells: int = 2,
-                 warm_start_per_cell: int = 1):
-        if not cells:
-            raise ValueError("campaign needs at least one cell")
+                 warm_start_per_cell: int = 1,
+                 prioritize: Any = "arch",
+                 intake: bool = False,
+                 max_active_cells: Optional[int] = None):
+        if not cells and not intake:
+            raise ValueError("campaign needs at least one cell "
+                             "(or intake admission)")
         if len(set(c.key() for c in cells)) != len(cells):
             raise ValueError("duplicate cells in campaign")
         self.cells = list(cells)
@@ -253,6 +272,16 @@ class Campaign:
         if self.warm_start and self.history is None:
             raise ValueError("warm_start needs a trial history "
                              "(checkpoint_dir or history=)")
+        self.prioritize = prioritize
+        if prioritize == "history" and self.history is None:
+            raise ValueError("prioritize='history' needs a trial "
+                             "history (checkpoint_dir or history=)")
+        self.intake = bool(intake)
+        if self.intake and self.checkpoint_dir is None:
+            raise ValueError("intake admission needs a checkpoint_dir")
+        if max_active_cells is not None and max_active_cells < 1:
+            raise ValueError("max_active_cells must be >= 1")
+        self.max_active_cells = max_active_cells
         self.last_stats: Dict = {}
 
     # --------------------------------------------------------- per cell
@@ -398,22 +427,11 @@ class Campaign:
         }
         if self.warm_start:
             state["warmstart"] = cr.warmstart
-        path = self._ckpt_path(cr.spec)
-        # unique tempfile + atomic replace: concurrent fabric workers
-        # racing on one cell (a stolen-but-alive lease) each publish a
-        # complete checkpoint, never a torn one
-        fd, tmp = tempfile.mkstemp(dir=self.checkpoint_dir,
-                                   prefix=f".{path.name}.", suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                f.write(json.dumps(state, indent=1, default=str))
-            os.replace(tmp, path)
-        except BaseException:
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+        # atomic publish: concurrent fabric workers racing on one cell
+        # (a stolen-but-alive lease) each land a complete checkpoint,
+        # never a torn one
+        atomic_publish(self._ckpt_path(cr.spec),
+                       json.dumps(state, indent=1, default=str))
 
     # -------------------------------------------------------- advancing
     def _advance(self, cr: _CellRun):
@@ -454,34 +472,52 @@ class Campaign:
         cr.cursor.absorb(results, indices)
         self._save_checkpoint(cr)
 
+    # -------------------------------------------------------- activation
+    def _activate(self, spec: CellSpec) -> _CellRun:
+        """Build one cell's run state (cursor, checkpoint, warm-start)
+        the moment the queue hands the cell out."""
+        baseline = self.baseline_factory(spec)
+        runner = TrialRunner(
+            spec.workload(), self.evaluator,
+            history=self.history.sink(self.strategy.name)
+            if self.history is not None else None)
+        cursor = self._make_cursor(spec, runner, baseline)
+        ckpt = self._read_checkpoint(spec)
+        warmstart = self._resolve_warmstart(spec, baseline, cursor, ckpt)
+        cr = _CellRun(spec, runner, cursor,
+                      self._signature(spec, baseline, cursor))
+        cr.warmstart = warmstart
+        self._apply_checkpoint(cr, ckpt)
+        return cr
+
     # -------------------------------------------------------------- run
     def run(self) -> Dict[str, Any]:
-        """Run the strategy on every cell; returns ``{cell_key: report}``
-        in the campaign's cell order."""
-        t0 = time.time()
-        # group cells by arch (first-appearance order) so same-arch
-        # trials are adjacent in the executor queue
-        first_seen: Dict[str, int] = {}
-        for i, c in enumerate(self.cells):
-            first_seen.setdefault(c.arch, i)
-        ordered = sorted(self.cells, key=lambda c: first_seen[c.arch])
-        runs: Dict[str, _CellRun] = {}
-        for spec in ordered:
-            baseline = self.baseline_factory(spec)
-            runner = TrialRunner(
-                spec.workload(), self.evaluator,
-                history=self.history.sink(self.strategy.name)
-                if self.history is not None else None)
-            cursor = self._make_cursor(spec, runner, baseline)
-            ckpt = self._read_checkpoint(spec)
-            warmstart = self._resolve_warmstart(spec, baseline, cursor,
-                                                ckpt)
-            cr = _CellRun(spec, runner, cursor,
-                          self._signature(spec, baseline, cursor))
-            cr.warmstart = warmstart
-            self._apply_checkpoint(cr, ckpt)
-            runs[spec.key()] = cr
+        """Drain the cell queue: run the strategy on every admitted
+        cell; returns ``{cell_key: report}`` in admission order.
 
+        Cells start in queue-priority order (core/schedule.py — the
+        default ``arch`` prioritizer reproduces the historical
+        first-seen-arch kickoff, so same-arch trials stay adjacent in
+        the executor queue; ``history`` starts the highest
+        expected-speedup cells first).  With ``intake=True`` the
+        checkpoint directory's ``intake/`` is re-scanned between
+        batches, so cells submitted while the campaign runs are
+        admitted, tuned and reported without a restart; priority is
+        re-queried at every hand-out, and in-flight cells are re-ranked
+        between batches by their cursor-reported ``expected_gain``.
+        ``max_active_cells`` bounds how many cells are in flight at
+        once (None: all — the batch behaviour); a bounded campaign is
+        where priority shapes wall-clock-to-first-improvement most.
+        Scheduling order never changes per-cell decisions: each cursor
+        is a deterministic state machine.
+        """
+        from repro.core.schedule import CellQueue
+        t0 = time.time()
+        queue = CellQueue(
+            self.cells, prioritizer=self.prioritize,
+            history=self.history,
+            directory=self.checkpoint_dir if self.intake else None)
+        runs: Dict[str, _CellRun] = {}
         own_executor = self.executor is None
         executor = self.executor or SweepExecutor(self.evaluator,
                                                   self.max_workers)
@@ -490,14 +526,39 @@ class Campaign:
             def kick(cr: _CellRun) -> None:
                 batch = self._advance(cr)
                 if batch is None:
+                    queue.mark_done(cr.spec.key())
                     return
                 futs = [executor.submit(cr.runner.workload, c.config)
                         for c in batch]
                 pending[cr.spec.key()] = (batch, futs)
 
-            for cr in runs.values():
-                if cr.report is None:
+            def fill() -> None:
+                """Admit live submissions, then start queued cells
+                while cell slots are free (priority re-queried at
+                every hand-out)."""
+                queue.scan_intake()
+                while (self.max_active_cells is None
+                       or len(pending) < self.max_active_cells):
+                    spec = queue.pop_next()
+                    if spec is None:
+                        return
+                    cr = self._activate(spec)
+                    runs[spec.key()] = cr
+                    if cr.report is not None:    # done via checkpoint
+                        queue.mark_done(spec.key())
+                        continue
                     kick(cr)
+
+            def live_rank(key: str):
+                """Re-rank ready cells by the cursor's own live gain
+                estimate — the highest-expected-gain cell's next batch
+                enters the executor queue first."""
+                gain_fn = getattr(runs[key].cursor, "expected_gain",
+                                  None)
+                return queue.rank_key(
+                    key, gain=gain_fn() if callable(gain_fn) else None)
+
+            fill()
             while pending:
                 outstanding = {f for _, fs in pending.values()
                                for f in fs if not f.done()}
@@ -505,29 +566,32 @@ class Campaign:
                     wait(outstanding, return_when=FIRST_COMPLETED)
                 ready = [k for k, (_, fs) in pending.items()
                          if all(f.done() for f in fs)]
+                ready.sort(key=live_rank)
                 for key in ready:
                     batch, futs = pending.pop(key)
                     results = [f.result() for f in futs]
                     self._absorb(runs[key], batch, results)
                     kick(runs[key])
+                fill()
         finally:
             if own_executor:
                 executor.shutdown()
 
         reports = {spec.key(): runs[spec.key()].report
-                   for spec in self.cells}
+                   for spec in queue.cells()}
         n_trials = sum(r.n_trials for r in reports.values())
         replayed = sum(cr.replayed for cr in runs.values())
         wall = time.time() - t0
         self.last_stats = {
             "strategy": self.strategy.name,
-            "cells": len(self.cells),
+            "cells": len(queue),
             "trials": n_trials,
             "replayed_trials": replayed,
             "evaluated_trials": n_trials - replayed,
             "wall_s": round(wall, 1),
-            "cells_per_hour": round(len(self.cells) / max(wall, 1e-9)
+            "cells_per_hour": round(len(queue) / max(wall, 1e-9)
                                     * 3600.0, 1),
+            "queue": queue.snapshot(),
         }
         if self.warm_start:
             self.last_stats["warmstarted_cells"] = sum(

@@ -40,6 +40,13 @@ Topologies:
     same directory and wait (``launch/tune.py --workers N`` /
     ``--coordinate``).
 
+Since the online scheduler (core/schedule.py), the shared directory is
+also the *admission* channel: workers re-scan its ``intake/`` for new
+cell submissions on every pass, claim cells in queue-priority order
+(``--prioritize history``: highest expected speedup first), and with
+``--watch`` idle instead of exiting once the board is drained — a
+running fabric is a tuning service new workloads can join at any time.
+
 **Filesystem requirements** — the protocol leans on three POSIX
 semantics of the shared directory: atomic ``O_CREAT | O_EXCL`` create
 (lease claims and steal locks — needs NFSv4+ if the mount is NFS; v2/v3
@@ -67,7 +74,6 @@ import pathlib
 import socket
 import subprocess
 import sys
-import tempfile
 import threading
 import time
 import uuid
@@ -75,6 +81,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core.campaign import (CHECKPOINT_VERSION, Campaign, CellSpec)
 from repro.core.executor import SweepExecutor
+from repro.core.fsutil import atomic_publish
 from repro.core.history import HISTORY_FILENAME, TrialHistory
 from repro.core.strategy import get_strategy
 
@@ -261,18 +268,9 @@ class LeaseBoard:
                        f"now held by "
                        f"{held.worker if held else 'nobody'}"))
             lease.state.heartbeat_at = time.time()
-            fd, tmp = tempfile.mkstemp(dir=self.dir, prefix=".hb.",
-                                       suffix=".tmp")
-            try:
-                with os.fdopen(fd, "w") as f:
-                    f.write(json.dumps(lease.state.as_dict()))
-                os.replace(tmp, self._path(cell))
-            except BaseException:
-                try:
-                    os.unlink(tmp)
-                except OSError:
-                    pass
-                raise
+            atomic_publish(self._path(cell),
+                           json.dumps(lease.state.as_dict()),
+                           prefix=".hb.")
             return True
         finally:
             self._unlock(cell)
@@ -397,6 +395,17 @@ class FabricWorker:
     :class:`~repro.core.trial.RooflineEvaluator` whose disk compile
     cache is shared with every other worker.
 
+    **Online mode** (core/schedule.py) — target cells are not frozen at
+    startup: every scheduling pass re-scans the shared directory's
+    ``intake/`` and admits new submissions, and the claim order follows
+    the cell queue's priority (``prioritize="history"``: highest
+    expected speedup first, unknown cells explore-first; ``"arch"``:
+    the historical arch-grouped order).  With ``watch=True`` a worker
+    that has drained the board *idles and keeps re-scanning* instead of
+    exiting, so cells submitted hours later are claimed by the same
+    process; the ``intake/STOP`` sentinel (``launch/tune.py --stop``)
+    ends the watch once everything admitted is done.
+
     ``ready_file`` / ``go_file`` implement an optional start barrier
     for benchmarks: the worker touches ``ready_file`` once initialized,
     then blocks until ``go_file`` exists — so measured wall-clock
@@ -417,10 +426,14 @@ class FabricWorker:
                  warm_start_cells: int = 2,
                  warm_start_per_cell: int = 1,
                  max_workers: Optional[int] = None,
+                 prioritize: Any = "arch",
+                 watch: bool = False,
+                 started_at: Optional[float] = None,
                  ready_file: Optional[pathlib.Path] = None,
                  go_file: Optional[pathlib.Path] = None):
-        if not cells:
-            raise ValueError("fabric worker needs at least one cell")
+        if not cells and not watch:
+            raise ValueError("fabric worker needs at least one cell "
+                             "(or watch mode: claim intake submissions)")
         self.cells = list(cells)
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
@@ -440,6 +453,13 @@ class FabricWorker:
         self.warm_start_per_cell = warm_start_per_cell
         self.max_workers = max_workers
         self.history = TrialHistory(self.dir / HISTORY_FILENAME)
+        self.prioritize = prioritize
+        self.watch = bool(watch)
+        # the reference instant for stale-STOP clearing: callers that
+        # pay long imports before constructing the worker (the CLI)
+        # pass their process start; a STOP dropped after it is live
+        self.started_at = started_at if started_at is not None \
+            else time.time()
         self.ready_file = ready_file
         self.go_file = go_file
         # the completion probe: a Campaign that never runs, only asks
@@ -454,7 +474,8 @@ class FabricWorker:
             checkpoint_dir=self.dir, history=self.history,
             warm_start=self.warm_start,
             warm_start_cells=self.warm_start_cells,
-            warm_start_per_cell=self.warm_start_per_cell)
+            warm_start_per_cell=self.warm_start_per_cell,
+            intake=True)    # probe only; also admits the no-seed case
 
     # ------------------------------------------------------------ cells
     def _done(self, spec: CellSpec) -> bool:
@@ -479,8 +500,16 @@ class FabricWorker:
 
     # -------------------------------------------------------------- run
     def run(self) -> Dict[str, Any]:
-        """Work the board until every target cell is done; returns
-        per-worker stats (cells completed here, trials, waits)."""
+        """Work the board until every admitted cell is done (or, with
+        ``watch``, until the STOP sentinel lands); returns per-worker
+        stats (cells completed here, trials, waits, admissions).
+
+        Every pass re-scans the intake directory (live admission) and
+        claims in cell-queue priority order.  The lease board stays the
+        sole claim arbiter — the queue only decides which cell this
+        worker *tries* next, so two workers ranking the board
+        identically still split it cleanly."""
+        from repro.core.schedule import CellQueue, stop_requested_since
         if self.ready_file is not None:
             self.ready_file.parent.mkdir(parents=True, exist_ok=True)
             self.ready_file.touch()
@@ -488,14 +517,31 @@ class FabricWorker:
             while not self.go_file.exists():
                 time.sleep(0.05)
         t0 = time.time()
+        queue = CellQueue(self.cells, prioritizer=self.prioritize,
+                          history=self.history, directory=self.dir)
         completed: List[str] = []
         evaluated = replayed = 0
         lease_losses = 0
         waited_s = 0.0
         while True:
-            remaining = [s for s in self.cells if not self._done(s)]
+            queue.scan_intake()
+            for spec in queue.cells():
+                if queue.state(spec.key()) != "done" \
+                        and self._done(spec):
+                    queue.mark_done(spec.key())
+            remaining = queue.order()    # pending, priority order
             if not remaining:
-                break
+                # board drained: exit — unless watching for late
+                # submissions and no STOP has landed *for this
+                # session* (a sentinel predating this worker targets a
+                # previous session and is ignored, never deleted — see
+                # core/schedule.request_stop)
+                if not self.watch or stop_requested_since(
+                        self.dir, self.started_at):
+                    break
+                time.sleep(self.poll_s)
+                waited_s += self.poll_s
+                continue
             progress = False
             for spec in remaining:
                 lease = self.board.try_acquire(spec.key())
@@ -512,17 +558,23 @@ class FabricWorker:
                     progress = True
                 finally:
                     lease.release()
+                queue.mark_done(spec.key())
+                break                    # re-rank: priority may have moved
             if not progress:
                 # every remaining cell is leased by a live worker — wait
                 # for them (or for their leases to expire) and re-scan
                 time.sleep(self.poll_s)
                 waited_s += self.poll_s
+        snap = queue.snapshot()
         return {
             "worker": self.board.worker_id,
             "cells_completed": completed,
             "evaluated_trials": evaluated,
             "replayed_trials": replayed,
             "lease_losses": lease_losses,
+            "cells_admitted": snap["admitted"],
+            "intake_admitted": snap["from_intake"],
+            "prioritize": snap["prioritize"],
             "waited_s": round(waited_s, 2),
             "wall_s": round(time.time() - t0, 2),
         }
@@ -535,6 +587,8 @@ def worker_argv(cells: Sequence[CellSpec], directory: pathlib.Path, *,
                 ttl_s: float = DEFAULT_TTL_S,
                 threshold: float = 0.05,
                 warm_start: bool = False,
+                prioritize: str = "arch",
+                watch: bool = False,
                 worker_id: Optional[str] = None,
                 ready_file: Optional[pathlib.Path] = None,
                 go_file: Optional[pathlib.Path] = None,
@@ -542,14 +596,19 @@ def worker_argv(cells: Sequence[CellSpec], directory: pathlib.Path, *,
     """The ``launch/tune.py --worker`` command line for one worker."""
     argv = [sys.executable, "-m", "repro.launch.tune", "--worker",
             "--dir", str(directory),
-            "--cells", ",".join(c.spec() for c in cells),
             "--strategy", strategy,
             "--threshold", str(threshold),
             "--worker-ttl", str(ttl_s)]
+    if cells:
+        argv += ["--cells", ",".join(c.spec() for c in cells)]
     if evaluator_spec:
         argv += ["--evaluator", evaluator_spec]
     if warm_start:
         argv += ["--warm-start"]
+    if prioritize != "arch":
+        argv += ["--prioritize", prioritize]
+    if watch:
+        argv += ["--watch"]
     if worker_id:
         argv += ["--worker-id", worker_id]
     if ready_file is not None:
@@ -589,11 +648,20 @@ def run_coordinator(cells: Sequence[CellSpec],
                     ttl_s: float = DEFAULT_TTL_S,
                     threshold: float = 0.05,
                     warm_start: bool = False,
+                    prioritize: str = "arch",
+                    watch: bool = False,
                     extra_args: Sequence[str] = (),
                     log_dir: Optional[pathlib.Path] = None,
                     timeout_s: Optional[float] = None) -> Dict[str, Any]:
     """Spawn N local workers over one shared directory, wait for them,
     verify completion and collect the per-cell reports.
+
+    With ``watch=True`` the workers stay alive after draining the board
+    and keep claiming intake submissions; the coordinator then blocks
+    until someone requests a stop (``launch/tune.py --stop`` /
+    :func:`~repro.core.schedule.request_stop`) and the workers drain
+    out.  Cells admitted through the intake directory while the fabric
+    ran are verified and reported exactly like the seed cells.
 
     Completion is verified with the same full-signature probe the
     workers use (:meth:`Campaign.cell_done` with ``strategy_options`` /
@@ -604,6 +672,7 @@ def run_coordinator(cells: Sequence[CellSpec],
     ``RuntimeError`` if any cell is incomplete or a lease is left held
     after the workers exit (expired leftovers are reaped first).
     """
+    from repro.core.schedule import scan_intake
     directory = pathlib.Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     t0 = time.time()
@@ -615,23 +684,35 @@ def run_coordinator(cells: Sequence[CellSpec],
             cells, directory, strategy=strategy,
             evaluator_spec=evaluator_spec, ttl_s=ttl_s,
             threshold=threshold, warm_start=warm_start,
+            prioritize=prioritize, watch=watch,
             worker_id=f"w{i}-{uuid.uuid4().hex[:6]}",
             extra=extra_args, log_path=log))
     rcs = [p.wait(timeout=timeout_s) for p in procs]
     wall = time.time() - t0
 
+    # the worker-side queue admits intake submissions live; fold them
+    # into the verification set so an admitted cell is held to the same
+    # completion bar as a seed cell
+    all_cells = list(cells)
+    known = {c.key() for c in all_cells}
+    for admitted in scan_intake(directory):
+        if admitted.key() not in known:
+            known.add(admitted.key())
+            all_cells.append(admitted)
+
     board = LeaseBoard(directory, ttl_s=ttl_s)
     reaped = board.reap_expired()
     leftover = board.held()
     spec = get_strategy(strategy)
-    probe = Campaign(list(cells), strategy=strategy,
+    probe = Campaign(all_cells, strategy=strategy,
                      strategy_options=strategy_options,
                      threshold=threshold,
                      evaluator=lambda wl, rt: None,  # probe never runs
-                     checkpoint_dir=directory, warm_start=warm_start)
+                     checkpoint_dir=directory, warm_start=warm_start,
+                     intake=True)
     reports: Dict[str, Any] = {}
     incomplete = []
-    for cell in cells:
+    for cell in all_cells:
         path = directory / f"{cell.key()}.json"
         if not probe.cell_done(cell):
             incomplete.append(cell.key())
@@ -641,9 +722,14 @@ def run_coordinator(cells: Sequence[CellSpec],
     stats = {
         "workers": workers,
         "strategy": spec.name,
-        "cells": len(cells),
+        "cells": len(all_cells),
+        "seed_cells": len(cells),
+        "intake_cells": len(all_cells) - len(cells),
+        "prioritize": prioritize,
+        "watch": watch,
         "wall_s": round(wall, 2),
-        "cells_per_hour": round(len(cells) / max(wall, 1e-9) * 3600.0, 1),
+        "cells_per_hour": round(len(all_cells) / max(wall, 1e-9)
+                                * 3600.0, 1),
         "worker_rcs": rcs,
         "reaped_leases": reaped,
         "leases_left": [st.cell for st in leftover],

@@ -1,0 +1,42 @@
+"""Shared filesystem idioms for the campaign stack.
+
+Every multi-process coordination file in this codebase — compile-cache
+entries (core/trial.py), campaign checkpoints (core/campaign.py), lease
+heartbeats (core/fabric.py), intake submissions (core/schedule.py) —
+is published the same way: write to a uniquely-named tempfile in the
+*same directory*, then atomically ``os.replace`` it over the target.
+Concurrent publishers each land a complete file (last writer wins) and
+readers never observe a torn one.  This module is the single copy of
+that idiom, so a future durability change (e.g. fsync-before-rename
+for the NFS requirements documented in core/fabric.py) lands once.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import tempfile
+from typing import Optional
+
+
+def atomic_publish(path: pathlib.Path, text: str,
+                   prefix: Optional[str] = None) -> None:
+    """Publish ``text`` at ``path`` atomically (unique tempfile +
+    same-directory ``os.replace`` — the same directory is what makes
+    the rename atomic).  The parent directory must exist.  On any
+    error the tempfile is removed and the exception re-raised; the
+    target is either its old content or the complete new content,
+    never a mix."""
+    path = pathlib.Path(path)
+    fd, tmp = tempfile.mkstemp(dir=path.parent,
+                               prefix=prefix or f".{path.name}.",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise

@@ -143,6 +143,7 @@ class TrialHistory:
     def __init__(self, path: pathlib.Path):
         self.path = pathlib.Path(path)
         self._cache: Optional[Tuple[Tuple[int, int], List[Dict]]] = None
+        self._speedups: Optional[Tuple[Tuple[int, int], Dict]] = None
 
     # ------------------------------------------------------- appending
     def append(self, record: Dict[str, Any]) -> None:
@@ -231,6 +232,90 @@ class TrialHistory:
 
     def n_records(self) -> int:
         return sum(1 for _ in self.records())
+
+    # ------------------------------------------------- expected speedup
+    def cell_speedups(self) -> Dict[str, Dict[str, Any]]:
+        """Per recorded cell: the observed baseline cost, best viable
+        cost and the implied speedup (baseline / best).
+
+        The baseline is the cheapest viable record named ``baseline``
+        (the same deterministic trial every strategy evaluates first);
+        a cell whose baseline crashed falls back to its earliest viable
+        record, so a "recovered" cell still reports the gain its trials
+        actually demonstrated.  Cells with no viable record at all are
+        omitted.
+
+        Cached on the same (size, mtime) signature as :meth:`records`:
+        a scheduling pass scoring N cells pays one aggregation, not N
+        (the online scheduler re-ranks on every queue hand-out).
+        """
+        recs = self.records()            # refreshes self._cache
+        sig = self._cache[0] if self._cache is not None else None
+        if sig is not None and self._speedups is not None \
+                and self._speedups[0] == sig:
+            return dict(self._speedups[1])
+        per_cell: Dict[str, List[Dict]] = {}
+        for rec in recs:
+            if _viable(rec):
+                per_cell.setdefault(rec["cell"], []).append(rec)
+        out: Dict[str, Dict[str, Any]] = {}
+        for cell, recs in per_cell.items():
+            base = min((r["cost_s"] for r in recs
+                        if r.get("name") == "baseline"),
+                       default=None)
+            if base is None:
+                base = min(recs, key=lambda r: r.get("ts", 0.0))["cost_s"]
+            best = min(r["cost_s"] for r in recs)
+            first = recs[0]
+            out[cell] = {
+                "arch": first.get("arch"),
+                "shape": first.get("shape"),
+                "multi_pod": bool(first.get("multi_pod", False)),
+                "baseline_cost": base,
+                "best_cost": best,
+                "speedup": base / best if best > 0 else float("nan"),
+                "trials": len(recs),
+            }
+        if sig is not None:
+            self._speedups = (sig, out)
+        return dict(out)
+
+    def expected_speedup(self, arch: str, shape: str,
+                         multi_pod: bool = False, *,
+                         k_cells: int = 2) -> Optional[float]:
+        """Expected-speedup estimate for a cell: the best observed
+        speedup among the ``k_cells`` nearest *same-shape-kind* cells
+        in the history (best-of-nearest, the same registry-derived
+        similarity warm-start retrieval uses).  Unlike
+        :meth:`warmstart_configs`, the target cell's own records are
+        included — identity similarity dominates, so a cell the history
+        has already tuned is scored by its own demonstrated gain.
+
+        Speedups only transfer within a shape kind: the tuning tree's
+        stages and the sweepable knobs are kind-keyed, so a train
+        cell's demonstrated gain says nothing about a decode cell's
+        walk.  ``None`` when no same-kind cell is recorded — the online
+        scheduler treats that as *unknown* and schedules the cell
+        explore-first."""
+        target_sig = cell_signature(arch, shape, multi_pod)
+        scored: List[Tuple[float, str, float]] = []
+        for cell, info in self.cell_speedups().items():
+            sp = info["speedup"]
+            if sp != sp:                 # NaN: nothing demonstrable
+                continue
+            try:
+                sig = cell_signature(info["arch"], info["shape"],
+                                     info["multi_pod"])
+            except (KeyError, TypeError):
+                continue                 # cell from a foreign assignment
+            if sig["kind"] != target_sig["kind"]:
+                continue                 # gains don't transfer kinds
+            scored.append((cell_similarity(target_sig, sig), cell, sp))
+        scored.sort(key=lambda t: (-t[0], t[1]))
+        top = scored[:max(0, k_cells)]
+        if not top:
+            return None
+        return max(sp for _, _, sp in top)
 
     # ------------------------------------------------------ warm-start
     def warmstart_configs(self, arch: str, shape: str,

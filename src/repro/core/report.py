@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import json
 import math
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core.sensitivity import SensitivityReport
 from repro.core.tree import MAX_TRIALS, TuningReport
@@ -83,9 +83,33 @@ def tuning_markdown(rep: TuningReport) -> str:
     return "\n".join(out)
 
 
-def campaign_markdown(reports: Dict[str, TuningReport]) -> str:
+def queue_markdown(queue: Dict) -> str:
+    """Admission / priority view of an online campaign (the
+    ``Campaign.last_stats["queue"]`` snapshot, core/schedule.py):
+    one row per admitted cell — how it entered (seed vs intake), the
+    priority score it was scheduled under (``—`` = unknown →
+    explore-first) and its final queue state."""
+    lines = [f"### Queue: {queue.get('admitted', 0)} cells admitted "
+             f"({queue.get('from_intake', 0)} via intake), "
+             f"prioritize={queue.get('prioritize', 'arch')}",
+             "",
+             "| cell | admitted | priority | state |",
+             "|---|---|---|---|"]
+    for d in queue.get("cells", []):
+        score = d.get("score")
+        lines.append(
+            f"| {d['cell']} | {d.get('source', '?')} | "
+            f"{'—' if score is None else f'{score:.2f}'} | "
+            f"{d.get('state', '?')} |")
+    return "\n".join(lines)
+
+
+def campaign_markdown(reports: Dict[str, TuningReport],
+                      queue: Optional[Dict] = None) -> str:
     """Cross-cell speedup matrix: rows = archs, cols = shape__mesh cells
-    (the paper's case-study summary generalized to the full assignment)."""
+    (the paper's case-study summary generalized to the full assignment).
+    With ``queue`` (an online campaign's admission snapshot) the
+    admission/priority table is appended."""
     parsed = []
     for key, rep in reports.items():
         arch, shape, mesh = key.split("__")
@@ -130,6 +154,8 @@ def campaign_markdown(reports: Dict[str, TuningReport]) -> str:
               f"* geometric-mean speedup: x{gmean:.2f}",
               "",
               "Each cell: `x<speedup> (<trials used>)`."]
+    if queue is not None:
+        lines += ["", queue_markdown(queue)]
     return "\n".join(lines)
 
 
@@ -140,15 +166,20 @@ def cell_markdown(rep) -> str:
     return tuning_markdown(rep)
 
 
-def strategy_markdown(reports: Dict) -> str:
+def strategy_markdown(reports: Dict, queue: Optional[Dict] = None) -> str:
     """Render a campaign's cross-cell summary, whatever strategy
     produced it: tuning-style reports get the speedup matrix,
-    sensitivity reports get the Table-2 impact matrix."""
+    sensitivity reports get the Table-2 impact matrix.  ``queue``
+    (an online campaign's admission snapshot) appends the
+    admission/priority table."""
     if all(isinstance(r, SensitivityReport) for r in reports.values()):
-        return ("### Campaign: sensitivity impact per cell (Table 2)\n\n"
-                + sensitivity_markdown(reports))
+        md = ("### Campaign: sensitivity impact per cell (Table 2)\n\n"
+              + sensitivity_markdown(reports))
+        if queue is not None:
+            md += "\n\n" + queue_markdown(queue)
+        return md
     if all(isinstance(r, TuningReport) for r in reports.values()):
-        return campaign_markdown(reports)
+        return campaign_markdown(reports, queue=queue)
     raise TypeError("mixed report types in one campaign: "
                     + ", ".join(sorted({type(r).__name__
                                         for r in reports.values()})))

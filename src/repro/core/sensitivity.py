@@ -135,6 +135,16 @@ class SensitivityCursor:
                                  self.baseline_cost, self.impacts,
                                  self.runner.n_trials)
 
+    def expected_gain(self) -> Optional[float]:
+        """The OFAT matrix is a fixed design: the whole sweep is one
+        batch, so the gain estimate is all-or-nothing — unknown before
+        the baseline, the full sweep while it is pending, zero after."""
+        if self._phase >= 2:
+            return 0.0
+        if self._phase == 0:
+            return None
+        return 1.0
+
     def signature_parts(self) -> list:
         return [[k, list(v)] for k, v in self.knobs.items()]
 

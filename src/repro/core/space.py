@@ -169,10 +169,12 @@ SPACE = ParamSpace([
          sweep=("fsdp_tp", "dp", "fsdp", "tp"),
          reach_evidence="structural: param/activation sharding in every "
                         "step function (runtime/sharding.py)"),
-    # 3. spark.shuffle.compress
+    # 3. spark.shuffle.compress — the error-feedback int8 path joined
+    # the sweep once the trial-throughput engine made the extra point
+    # ~free (it shares the explicit-gradsync compile projection)
     Knob("grad_comm_dtype", ("float32", "bfloat16", "int8_ef"), "compile",
          spark="spark.shuffle.compress",
-         sweep=("float32", "bfloat16"),
+         sweep=("float32", "bfloat16", "int8_ef"),
          reach_evidence="train only; explicit path (gradsync) only"),
     # 4. spark.io.compression.codec (snappy | lzf | lz4; float32 = off)
     Knob("comm_codec", ("bfloat16", "float16", "int8", "float32"),
@@ -202,9 +204,12 @@ SPACE = ParamSpace([
          sweep=(128, 256, 512),
          reach_evidence="Pallas kernel tile only; never in the "
                         "calibration compiles (attn_impl forced to xla)"),
+    # the kv tile joined the sweep alongside the q tile: both are
+    # analytic-only, so the whole sweep reuses one compile
     Knob("attn_block_kv", (128, 256, 512), "analytic",
          spark="spark.shuffle.file.buffer",
          doc="spark.shuffle.file.buffer (kv tile)",
+         sweep=(128, 256, 512),
          reach_evidence="Pallas kernel tile only; never in the "
                         "calibration compiles (attn_impl forced to xla)"),
     # 9. spark.shuffle.consolidateFiles
@@ -212,10 +217,12 @@ SPACE = ParamSpace([
          spark="spark.shuffle.consolidateFiles",
          sweep=(False, True),
          reach_evidence="train only; explicit path (gradsync) only"),
-    # 10. spark.rdd.compress
+    # 10. spark.rdd.compress — float32 (compression off) joined the
+    # sweep so the matrix shows the cost of *disabling* the default,
+    # like the paper's compress-off rows
     Knob("kv_cache_dtype", ("bfloat16", "int8", "float32"), "compile",
          spark="spark.rdd.compress",
-         sweep=("bfloat16", "int8"),
+         sweep=("bfloat16", "int8", "float32"),
          reach_evidence="prefill/decode cache ops; not ssm family"),
     # 11. spark.shuffle.spill.compress
     Knob("remat_save_dtype", ("float32", "bfloat16"), "compile",

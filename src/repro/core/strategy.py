@@ -77,7 +77,14 @@ class SearchCursor(Protocol):
         configs of the nearest already-tuned cells.  A strategy is free
         to ignore them (the default no-op); one that uses them must
         fold them into ``signature_parts()`` so checkpoints stay
-        replay-exact.
+        replay-exact;
+      * ``expected_gain()`` is a *live* estimate of the improvement
+        still ahead of the walk (higher = more expected gain; ``None``
+        = unknown, which the online scheduler treats as explore-first).
+        It feeds the campaign's cell prioritizer (core/schedule.py)
+        when in-flight cells are re-ranked between batches; it must
+        never influence the cursor's own decisions, so reporting any
+        estimate keeps walks bit-identical.
     """
 
     runner: TrialRunner
@@ -92,6 +99,8 @@ class SearchCursor(Protocol):
                indices: Sequence[int]) -> None: ...
 
     def report(self) -> Any: ...
+
+    def expected_gain(self) -> Optional[float]: ...
 
     def signature_parts(self) -> list: ...
 
@@ -200,6 +209,15 @@ class RandomCursor:
             accepted=self.accepted,
             log=[dataclasses.asdict(e) for e in self.runner.log],
         )
+
+    def expected_gain(self) -> Optional[float]:
+        """Unknown before the baseline; the whole (non-adaptive) budget
+        while the sweep batch is pending; zero once absorbed."""
+        if self._phase >= 2:
+            return 0.0
+        if self._phase == 0:
+            return None
+        return 1.0
 
     def signature_parts(self) -> list:
         return ["random", self.seed, self.budget]

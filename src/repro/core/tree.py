@@ -333,6 +333,19 @@ class TreeCursor:
             log=[dataclasses.asdict(e) for e in self.runner.log],
         )
 
+    def expected_gain(self) -> Optional[float]:
+        """Live estimate for the online scheduler (core/schedule.py):
+        the share of the tree still ahead of the walk — each remaining
+        stage is one more chance to accept an improvement.  ``None``
+        before the baseline is absorbed (nothing observed yet:
+        explore-first), ``0.0`` once the walk is done."""
+        if self._done:
+            return 0.0
+        if self._stage_i < 0:
+            return None
+        total = max(1, len(self.stages))
+        return max(0.0, (total - self._stage_i) / total)
+
     def signature_parts(self) -> list:
         """JSON-serializable description of everything that shapes this
         walk's decisions — part of the campaign checkpoint signature.

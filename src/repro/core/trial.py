@@ -33,7 +33,6 @@ import hashlib
 import json
 import os
 import pathlib
-import tempfile
 import threading
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
@@ -155,21 +154,12 @@ class CompileCache:
         return None
 
     def _disk_put(self, key: str, val: Dict) -> None:
-        """Publish one entry atomically (unique tempfile + os.replace),
+        """Publish one entry atomically (core/fsutil.atomic_publish),
         safe against concurrent writers in other processes."""
+        from repro.core.fsutil import atomic_publish
         self.dir.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=self.dir, prefix=f".{key}.",
-                                   suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                f.write(json.dumps(val))
-            os.replace(tmp, self._path(key))
-        except BaseException:
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+        atomic_publish(self._path(key), json.dumps(val),
+                       prefix=f".{key}.")
 
     def get_or_build(self, key: str, builder: Callable[[], Dict]) -> Dict:
         while True:

@@ -34,11 +34,34 @@ of the nearest already-tuned cells in the shared ``history.jsonl``
 trial store (core/history.py); every campaign appends to that store,
 so each run makes the next one cheaper.
 
+Online mode (core/schedule.py) turns a campaign/fabric into a tuning
+*service*:
+
+  * ``--add-cells a:s,...`` — submit cells to the (per-strategy)
+    campaign directory's ``intake/``; a *running* campaign or fabric
+    admits them between batches, no restart needed;
+  * ``--prioritize {arch,history}`` — cell scheduling order: ``arch``
+    is the historical arch-grouped order, ``history`` starts the
+    highest expected-speedup cells first (estimates from the trial
+    history; unknown cells explore-first);
+  * ``--watch`` — fabric workers idle and keep re-scanning the intake
+    once the board is drained, instead of exiting;
+  * ``--status`` — the operator's queue view: pending/claimed/done
+    cells, intake submissions and the live lease board;
+  * ``--stop`` — drop the STOP sentinel: ``--watch`` workers exit once
+    everything admitted is done.
+
 MUST set the placeholder device count before ANY jax-touching import.
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=512")
+
+import time
+# captured before the multi-second jax-touching imports below: the
+# stale-STOP guard for --watch workers (core/schedule.clear_stop) must
+# reference the process start, not post-import construction time
+_START_TS = time.time()
 
 import argparse
 import dataclasses
@@ -122,15 +145,20 @@ def campaign_dir(strategy: str = "tree", override=None) -> pathlib.Path:
 
 def fresh_campaign_dir(ckpt: pathlib.Path, cells) -> None:
     """``--fresh``: discard the cells' checkpoints AND their leases in
-    the (per-strategy) campaign directory, plus stale cross-cell
-    summaries.  The trial history is deliberately kept — re-tuning is
-    exactly when accumulated knowledge pays (``--warm-start``)."""
+    the (per-strategy) campaign directory, the *whole* intake (every
+    submission plus any STOP sentinel — a stale ``--add-cells`` file
+    must not silently re-admit a foreign cell into the fresh campaign)
+    and stale cross-cell summaries.  The trial history is deliberately
+    kept — re-tuning is exactly when accumulated knowledge pays
+    (``--warm-start``)."""
     from repro.core.fabric import LeaseBoard
+    from repro.core.schedule import clear_intake
     for spec in cells:
         path = ckpt / f"{spec.key()}.json"
         if path.exists():
             path.unlink()
     LeaseBoard(ckpt).clear([spec.key() for spec in cells])
+    clear_intake(ckpt)
     for name in ("campaign.md", "campaign_stats.json"):
         if (ckpt / name).exists():
             (ckpt / name).unlink()
@@ -138,7 +166,8 @@ def fresh_campaign_dir(ckpt: pathlib.Path, cells) -> None:
 
 def _write_campaign_summary(ckpt: pathlib.Path, reports, stats) -> None:
     ckpt.mkdir(parents=True, exist_ok=True)
-    (ckpt / "campaign.md").write_text(report.strategy_markdown(reports))
+    (ckpt / "campaign.md").write_text(
+        report.strategy_markdown(reports, queue=stats.get("queue")))
     (ckpt / "campaign_stats.json").write_text(
         json.dumps(stats, indent=1))
 
@@ -146,12 +175,15 @@ def _write_campaign_summary(ckpt: pathlib.Path, reports, stats) -> None:
 def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
                   fresh: bool = False, checkpoint_dir=None,
                   strategy: str = "tree", strategy_options=None,
-                  evaluator=None, warm_start: bool = False):
+                  evaluator=None, warm_start: bool = False,
+                  prioritize: str = "arch", intake: bool = True):
     """Run a strategy over a batch of cells in one concurrent campaign;
     returns ``{cell_key: report}`` plus the campaign's throughput
     stats.  Non-tree strategies checkpoint under a per-strategy
     subdirectory so campaigns with different strategies on the same
-    cells never clobber each other."""
+    cells never clobber each other.  The campaign scans the
+    directory's ``intake/`` between batches (``--add-cells``
+    submissions join a running campaign live)."""
     from repro.core.campaign import Campaign
     ckpt = campaign_dir(strategy, checkpoint_dir)
     if fresh:
@@ -159,7 +191,7 @@ def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
     camp = Campaign(
         cells, strategy=strategy, strategy_options=strategy_options,
         threshold=threshold, checkpoint_dir=ckpt, evaluator=evaluator,
-        warm_start=warm_start,
+        warm_start=warm_start, prioritize=prioritize, intake=intake,
         baseline_factory=lambda spec: _baseline(baseline_overrides))
     reports = camp.run()
     for rep in reports.values():
@@ -179,6 +211,8 @@ def run_worker(args, cells, options) -> int:
         baseline_factory=lambda spec: _baseline(),
         worker_id=args.worker_id, ttl_s=args.worker_ttl,
         warm_start=args.warm_start,
+        prioritize=args.prioritize, watch=args.watch,
+        started_at=_START_TS,
         ready_file=pathlib.Path(args.ready_file)
         if args.ready_file else None,
         go_file=pathlib.Path(args.go_file) if args.go_file else None)
@@ -200,6 +234,7 @@ def run_fabric(args, cells, options) -> int:
         strategy_options=options,
         evaluator_spec=args.evaluator, ttl_s=args.worker_ttl,
         threshold=args.threshold, warm_start=args.warm_start,
+        prioritize=args.prioritize, watch=args.watch,
         extra_args=_worker_passthrough(args),
         log_dir=ckpt / "worker_logs")
     reports, stats = out["reports"], out["stats"]
@@ -210,6 +245,66 @@ def run_fabric(args, cells, options) -> int:
     print(f"\n[fabric:{stats['strategy']}] {stats['cells']} cells, "
           f"{stats['workers']} workers, {stats['wall_s']}s "
           f"({stats['cells_per_hour']} cells/h)")
+    return 0
+
+
+def run_add_cells(args) -> int:
+    """``--add-cells``: submit cells to a (possibly running) campaign
+    directory's intake — a watching fabric or an in-flight campaign
+    admits them between batches, no restart needed."""
+    from repro.core.campaign import parse_cells
+    from repro.core.schedule import submit_cells
+    cells = parse_cells(args.add_cells,
+                        default_multi_pod=args.multi_pod)
+    ckpt = campaign_dir(args.strategy, args.dir)
+    paths = submit_cells(ckpt, cells)
+    for spec, path in zip(cells, paths):
+        print(f"submitted {spec.key()} -> {path}")
+    print(f"{len(cells)} cell(s) in intake of {ckpt}")
+    return 0
+
+
+def run_status(args, cells) -> int:
+    """``--status``: the operator's queue view — pending/claimed/done
+    depth, per-cell state (intake submissions included) and the live
+    lease board (held/expired leases, no lease-file spelunking)."""
+    from repro.core.schedule import queue_status
+    ckpt = campaign_dir(args.strategy, args.dir)
+    status = queue_status(ckpt, strategy=args.strategy, cells=cells)
+    depth = status["depth"]
+    print(f"campaign dir: {status['dir']}")
+    print(f"strategy:     {status['strategy']}")
+    stop = ""
+    if status["stop_requested"]:
+        age = time.time() - (status["stop_requested_at"] or 0.0)
+        stop = f"  [STOP requested {age:.0f}s ago — a watch worker " \
+               "started since then ignores it]"
+    print(f"queue depth:  {depth['pending']} pending / "
+          f"{depth['claimed']} claimed / {depth['done']} done" + stop)
+    for d in status["cells"]:
+        state = "done" if d["done"] else (
+            f"claimed by {d['claimed_by']}" if "claimed_by" in d
+            else "pending")
+        print(f"  {d['cell']:<40} {state:<28} ({d['source']})")
+    if status["leases"]:
+        print("leases:")
+        for lease in status["leases"]:
+            flag = "EXPIRED" if lease["expired"] else "live"
+            print(f"  {lease['cell']:<40} {lease['worker']} "
+                  f"@{lease['host']} hb {lease['age_s']}s/"
+                  f"{lease['ttl_s']}s [{flag}]")
+    else:
+        print("leases: (none held)")
+    return 0
+
+
+def run_stop(args) -> int:
+    """``--stop``: drop the STOP sentinel — ``--watch`` workers exit
+    once every admitted cell is done."""
+    from repro.core.schedule import request_stop
+    ckpt = campaign_dir(args.strategy, args.dir)
+    path = request_stop(ckpt)
+    print(f"stop requested: {path}")
     return 0
 
 
@@ -258,8 +353,32 @@ def main(argv=None) -> int:
     ap.add_argument("--threshold", type=float, default=0.05)
     ap.add_argument("--fresh", action="store_true",
                     help="campaign/fabric mode: discard the cells' "
-                         "checkpoints and leases in the per-strategy "
-                         "directory, re-tune (the trial history is kept)")
+                         "checkpoints, leases and intake submissions "
+                         "in the per-strategy directory, re-tune (the "
+                         "trial history is kept)")
+    online = ap.add_argument_group("online scheduler (core/schedule.py)")
+    online.add_argument("--prioritize", default="arch",
+                        choices=["arch", "history"],
+                        help="cell scheduling order: arch = historical "
+                             "arch-grouped; history = expected speedup "
+                             "from the trial history (unknown cells "
+                             "explore-first)")
+    online.add_argument("--add-cells",
+                        help="submit arch:shape[:pod|multipod] cells to "
+                             "the campaign directory's intake (a "
+                             "running campaign/fabric admits them "
+                             "live), then exit")
+    online.add_argument("--watch", action="store_true",
+                        help="fabric workers: keep re-scanning the "
+                             "intake when the board is drained instead "
+                             "of exiting (end with --stop)")
+    online.add_argument("--status", action="store_true",
+                        help="print the queue view (pending/claimed/"
+                             "done cells, intake, lease board), then "
+                             "exit")
+    online.add_argument("--stop", action="store_true",
+                        help="request watching workers to exit once "
+                             "every admitted cell is done, then exit")
     fab = ap.add_argument_group("campaign fabric (core/fabric.py)")
     fab.add_argument("--workers", type=int,
                      help="fabric mode: spawn N local worker processes "
@@ -298,6 +417,40 @@ def main(argv=None) -> int:
     if (args.budget is not None or args.seed is not None) \
             and args.strategy != "random":
         ap.error("--budget/--seed only apply to --strategy random")
+    if args.add_cells or args.stop:
+        # standalone actions against a campaign directory: any other
+        # mode flag would be silently ignored, so reject the combination
+        # instead of letting the operator believe it took effect
+        ignored = [flag for flag, on in (
+            ("--arch", args.arch), ("--shape", args.shape),
+            ("--cells", args.cells), ("--all", args.all),
+            ("--fresh", args.fresh), ("--watch", args.watch),
+            ("--status", args.status), ("--worker", args.worker),
+            ("--workers", args.workers),
+            ("--coordinate", args.coordinate),
+            ("--warm-start", args.warm_start)) if on]
+        if args.add_cells and args.stop:
+            ap.error("--add-cells and --stop are separate actions; "
+                     "run them as two invocations")
+        if ignored:
+            action = "--add-cells" if args.add_cells else "--stop"
+            ap.error(f"{action} is a standalone action; "
+                     f"{', '.join(ignored)} would be ignored — "
+                     "drop it or run it separately")
+        return run_add_cells(args) if args.add_cells else run_stop(args)
+    if args.status:
+        # read-only action: --cells/--all scope the view, but a fabric
+        # or fresh flag would be silently ignored — reject it
+        ignored = [flag for flag, on in (
+            ("--arch", args.arch), ("--shape", args.shape),
+            ("--fresh", args.fresh), ("--watch", args.watch),
+            ("--worker", args.worker), ("--workers", args.workers),
+            ("--coordinate", args.coordinate),
+            ("--warm-start", args.warm_start)) if on]
+        if ignored:
+            ap.error("--status is a read-only action; "
+                     f"{', '.join(ignored)} would be ignored — "
+                     "drop it or run it separately")
     options = _strategy_options(args.strategy, args.sweep_knobs,
                                 args.budget, args.seed)
     fabric_mode = args.worker or args.coordinate or args.workers
@@ -306,13 +459,25 @@ def main(argv=None) -> int:
     if args.worker and args.fresh:
         ap.error("--fresh is a coordinator/campaign action; workers "
                  "join shared state, they must not clear it")
-    if fabric_mode and not (args.all or args.cells):
-        ap.error("fabric modes need --cells or --all")
-    if args.all or args.cells:
+    if args.watch and not fabric_mode:
+        ap.error("--watch only applies to fabric modes (--worker / "
+                 "--workers / --coordinate)")
+    if fabric_mode and not (args.all or args.cells) \
+            and not (args.worker and args.watch):
+        ap.error("fabric modes need --cells or --all (a --watch "
+                 "--worker may start empty and live off the intake)")
+    if args.all or args.cells or (args.worker and args.watch) \
+            or args.status:
         from repro.core.campaign import enumerate_cells, parse_cells
-        cells = parse_cells(args.cells,
-                            default_multi_pod=args.multi_pod) \
-            if args.cells else enumerate_cells(meshes=(args.multi_pod,))
+        if args.cells:
+            cells = parse_cells(args.cells,
+                                default_multi_pod=args.multi_pod)
+        elif args.all:
+            cells = enumerate_cells(meshes=(args.multi_pod,))
+        else:
+            cells = []
+        if args.status:
+            return run_status(args, cells)
         if args.worker:
             return run_worker(args, cells, options)
         if args.coordinate or args.workers:
@@ -321,8 +486,10 @@ def main(argv=None) -> int:
                                        fresh=args.fresh,
                                        strategy=args.strategy,
                                        strategy_options=options,
-                                       warm_start=args.warm_start)
-        print(report.strategy_markdown(reports))
+                                       warm_start=args.warm_start,
+                                       prioritize=args.prioritize)
+        print(report.strategy_markdown(reports,
+                                       queue=stats.get("queue")))
         print(f"\n[{stats['strategy']}] {stats['cells']} cells in "
               f"{stats['wall_s']}s "
               f"({stats['cells_per_hour']} cells/h; "

@@ -83,6 +83,43 @@ def test_concurrent_appends_keep_whole_lines(tmp_path):
         == {float(i * 100 + j) for i in range(4) for j in range(50)}
 
 
+def test_torn_tail_self_heals_under_concurrent_append(tmp_path):
+    """Satellite: a torn tail (crashed non-atomic writer, no trailing
+    newline) must never corrupt records appended *concurrently* after
+    it — every appender detects the unterminated line and starts on a
+    fresh one; at worst the race emits blank lines, which readers
+    skip."""
+    path = tmp_path / "h.jsonl"
+    h = TrialHistory(path)
+    good = _rec(("smollm-135m", "train_4k"), 1.0)
+    h.append(good)
+    with open(path, "a") as f:
+        f.write('{"cell": "torn mid-record, no newli')
+    n_threads, per_thread = 4, 25
+
+    def writer(i):
+        hh = TrialHistory(path)          # own fd per thread, like workers
+        for j in range(per_thread):
+            hh.append(_rec(("glm4-9b", "train_4k"),
+                           float(1000 + i * 100 + j)))
+
+    ts = [threading.Thread(target=writer, args=(i,))
+          for i in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    recs = list(h.records())
+    # the pre-existing record and every concurrent append are durable;
+    # the torn line is dropped (it was never durable), nothing merged
+    assert len(recs) == 1 + n_threads * per_thread
+    assert good in recs
+    assert {r["cost_s"] for r in recs if r["cost_s"] >= 1000} \
+        == {float(1000 + i * 100 + j)
+            for i in range(n_threads) for j in range(per_thread)}
+    assert not any("torn" in json.dumps(r) for r in recs)
+
+
 # ------------------------------------------------- signatures/similarity
 def test_active_knobs_follow_compile_reach():
     train = active_knobs("train", "dense")
@@ -164,6 +201,81 @@ def test_warmstart_skips_foreign_space_records_and_dedups(tmp_path):
     h.append(_rec(("glm4-9b", "train_4k"), 0.5, arch="no-such-arch"))
     assert good in h.warmstart_configs("smollm-135m", "train_4k",
                                        k_cells=3)
+
+
+def test_warmstart_mixed_old_space_records_fall_through(tmp_path):
+    """Satellite: per_cell=1 with a mixed-space cell — the *best*
+    record's config is registry-invalid (older knob space), so the
+    query must fall through to the same cell's next-best valid record
+    rather than returning nothing or crashing."""
+    h = TrialHistory(tmp_path / "h.jsonl")
+    retired = {**default_config().as_dict(),
+               "compute_dtype": "float64",          # out-of-domain
+               "gone_knob": 7}                      # unknown field
+    valid = default_config(compute_dtype="bfloat16").as_dict()
+    worse = default_config(remat_policy="none").as_dict()
+    h.append(_rec(("glm4-9b", "train_4k"), 1.0, config=retired))
+    h.append(_rec(("glm4-9b", "train_4k"), 2.0, config=valid))
+    h.append(_rec(("glm4-9b", "train_4k"), 3.0, config=worse))
+    ws = h.warmstart_configs("smollm-135m", "train_4k",
+                             k_cells=1, per_cell=1)
+    assert ws == [valid]                 # invalid best skipped in-cell
+    # a cell whose records are ALL from a retired space contributes
+    # nothing but doesn't block other cells
+    also_bad = {**default_config().as_dict(), "microbatches": 3}
+    h.append(_rec(("xlstm-1.3b", "train_4k"), 0.1, config=also_bad))
+    ws = h.warmstart_configs("smollm-135m", "train_4k",
+                             k_cells=2, per_cell=1)
+    assert ws == [valid]
+
+
+# ------------------------------------------------------ expected speedup
+def test_cell_speedups_baseline_vs_best(tmp_path):
+    h = TrialHistory(tmp_path / "h.jsonl")
+    h.append(_rec(("smollm-135m", "train_4k"), 100.0, name="baseline"))
+    h.append(_rec(("smollm-135m", "train_4k"), 50.0, name="serializer"))
+    h.append(_rec(("smollm-135m", "train_4k"), 80.0, name="rejected"))
+    sp = h.cell_speedups()["smollm-135m__train_4k__pod"]
+    assert sp["baseline_cost"] == 100.0 and sp["best_cost"] == 50.0
+    assert sp["speedup"] == 2.0 and sp["trials"] == 3
+    # crashed-baseline cell: earliest viable record is the proxy base
+    h.append(_rec(("glm4-9b", "train_4k"), 40.0, name="serializer",
+                  ts=2.0))
+    h.append(_rec(("glm4-9b", "train_4k"), 20.0, name="memory", ts=3.0))
+    sp2 = h.cell_speedups()["glm4-9b__train_4k__pod"]
+    assert sp2["baseline_cost"] == 40.0 and sp2["speedup"] == 2.0
+
+
+def test_expected_speedup_best_of_nearest_same_kind(tmp_path):
+    h = TrialHistory(tmp_path / "h.jsonl")
+    # same-kind neighbours with different demonstrated gains
+    h.append(_rec(("xlstm-1.3b", "prefill_32k"), 100.0, name="baseline"))
+    h.append(_rec(("xlstm-1.3b", "prefill_32k"), 50.0, name="t"))
+    h.append(_rec(("zamba2-7b", "prefill_32k"), 100.0, name="baseline"))
+    h.append(_rec(("zamba2-7b", "prefill_32k"), 80.0, name="t"))
+    # a train cell with a huge gain must NOT leak into prefill targets
+    h.append(_rec(("smollm-135m", "train_4k"), 100.0, name="baseline"))
+    h.append(_rec(("smollm-135m", "train_4k"), 10.0, name="t"))
+    est = h.expected_speedup("smollm-135m", "prefill_32k", k_cells=2)
+    assert est == 2.0                    # best of the two prefill cells
+    # kind isolation: no decode cell recorded -> unknown
+    assert h.expected_speedup("smollm-135m", "decode_32k") is None
+    # own records dominate when present
+    assert h.expected_speedup("xlstm-1.3b", "prefill_32k",
+                              k_cells=1) == 2.0
+    # empty history -> unknown
+    assert TrialHistory(tmp_path / "empty.jsonl") \
+        .expected_speedup("smollm-135m", "train_4k") is None
+
+
+def test_expected_speedup_skips_crashes_and_foreign_archs(tmp_path):
+    h = TrialHistory(tmp_path / "h.jsonl")
+    h.append(_rec(("glm4-9b", "train_4k"), 2.0, crashed=True))
+    h.append(_rec(("glm4-9b", "train_4k"), float("inf")))
+    assert h.expected_speedup("smollm-135m", "train_4k") is None
+    h.append(_rec(("glm4-9b", "train_4k"), 100.0, name="baseline",
+                  arch="no-such-arch"))
+    assert h.expected_speedup("smollm-135m", "train_4k") is None
 
 
 # ----------------------------------------------------- runner emission

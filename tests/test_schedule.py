@@ -1,0 +1,473 @@
+"""Online campaign scheduler: intake admission, priority, watch fabric.
+
+All tests drive synthetic evaluators — no XLA compiles.  Load-bearing
+invariants:
+
+  * intake submissions are atomic whole files; torn/foreign files are
+    skipped, re-submission dedups, ``--fresh`` clears them;
+  * the ``arch`` prioritizer reproduces the historical first-seen-arch
+    kickoff order bit-for-bit; ``history`` orders by expected speedup
+    with unknown cells explore-first and arch grouping as tie-break;
+  * a cell submitted while a campaign (or watch fabric worker) runs is
+    admitted, tuned and reported without restart — and its decisions
+    are bit-identical to a static campaign over the same cell;
+  * priority changes scheduling order only: per-cell decisions stay
+    bit-identical to the static arch-ordered campaign.
+"""
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core.campaign import Campaign, CellSpec
+from repro.core.fabric import FabricWorker, LeaseBoard, checkpoint_done
+from repro.core.history import TrialHistory
+from repro.core.schedule import (ArchPrioritizer, CellQueue,
+                                 HistoryPrioritizer, clear_intake,
+                                 get_prioritizer, intake_dir,
+                                 queue_status, request_stop, scan_intake,
+                                 stop_requested, submit_cells)
+from repro.core.trial import TrialRunner, Workload
+from repro.core.tree import run_tuning
+
+from test_campaign import CELLS, CountingSurface, baseline_factory, \
+    surface
+
+DECODE = CELLS[3]                        # xlstm-1.3b decode_32k
+
+
+def _hist_rec(arch, shape, name, cost, ts=1.0):
+    from repro.core.params import default_config
+    wl = Workload(arch, shape)
+    return {"v": 1, "ts": ts, "cell": wl.key(), "arch": arch,
+            "shape": shape, "multi_pod": False, "strategy": "tree",
+            "name": name, "delta": {},
+            "config": default_config().as_dict(),
+            "cost_s": cost, "crashed": False, "compiles": 0,
+            "compile_s": 0.0, "cached": False}
+
+
+def prime_speedup(hist, arch, shape, speedup):
+    """Record a (baseline, best) pair demonstrating ``speedup``."""
+    hist.append(_hist_rec(arch, shape, "baseline", 100.0, ts=1.0))
+    hist.append(_hist_rec(arch, shape, "best", 100.0 / speedup, ts=2.0))
+
+
+# ---------------------------------------------------------------- intake
+def test_submit_scan_roundtrip(tmp_path):
+    assert scan_intake(tmp_path) == []
+    paths = submit_cells(tmp_path, CELLS[:2])
+    assert all(p.exists() for p in paths)
+    assert scan_intake(tmp_path) == CELLS[:2]
+    # re-submission is idempotent (same key, file overwritten — the
+    # refreshed timestamp moves it to the back of the scan order)
+    submit_cells(tmp_path, CELLS[:1])
+    assert scan_intake(tmp_path) == [CELLS[1], CELLS[0]]
+
+
+def test_scan_orders_by_submission_time(tmp_path):
+    submit_cells(tmp_path, [CELLS[1]])
+    time.sleep(0.01)
+    submit_cells(tmp_path, [CELLS[0]])
+    assert scan_intake(tmp_path) == [CELLS[1], CELLS[0]]
+
+
+def test_scan_skips_torn_and_foreign_files(tmp_path):
+    inbox = intake_dir(tmp_path)
+    inbox.mkdir(parents=True)
+    (inbox / "torn.cell").write_text("{not json")
+    (inbox / "foreign.cell").write_text(json.dumps({"v": 1}))
+    (inbox / "badcell.cell").write_text(
+        json.dumps({"v": 1, "cell": "no-such-arch:train_4k"}))
+    (inbox / "badts.cell").write_text(
+        json.dumps({"v": 1, "cell": "smollm-135m:prefill_32k",
+                    "submitted_at": "yesterday"}))
+    (inbox / "nonstr.cell").write_text(json.dumps({"v": 1, "cell": 5}))
+    submit_cells(tmp_path, [CELLS[0]])
+    assert scan_intake(tmp_path) == [CELLS[0]]
+
+
+def test_stop_requested_since_ignores_stale_sentinels(tmp_path):
+    """A stop targets the sessions running when it was requested: a
+    sentinel older than a session's start reads as no-stop for it
+    (and is never deleted — one worker's notion of stale must not
+    cancel a stop that is live for the rest of the fabric)."""
+    from repro.core.schedule import stop_requested_since
+    assert not stop_requested_since(tmp_path, 0.0)     # absent
+    path = request_stop(tmp_path)
+    ts = json.loads(path.read_text())["requested_at"]
+    assert stop_requested_since(tmp_path, ts - 1.0)    # live
+    assert stop_requested_since(tmp_path, ts)          # boundary: live
+    assert not stop_requested_since(tmp_path, ts + 1.0)  # stale
+    assert path.exists()                 # checks never delete the file
+    # a foreign `touch`ed sentinel (no payload) falls back to mtime
+    path.unlink()
+    (intake_dir(tmp_path) / "STOP").touch()
+    assert stop_requested_since(tmp_path, time.time() - 60)
+    assert not stop_requested_since(tmp_path, time.time() + 60)
+
+
+def test_clear_intake_and_stop(tmp_path):
+    submit_cells(tmp_path, CELLS[:2])
+    assert not stop_requested(tmp_path)
+    request_stop(tmp_path)
+    assert stop_requested(tmp_path)
+    clear_intake(tmp_path, CELLS[:1])    # targeted: only that cell
+    assert scan_intake(tmp_path) == [CELLS[1]]
+    assert not stop_requested(tmp_path)  # STOP cleared with the cells
+    clear_intake(tmp_path)               # cells=None: everything
+    assert scan_intake(tmp_path) == []
+
+
+# ----------------------------------------------------------- prioritizers
+def test_get_prioritizer_resolution():
+    assert isinstance(get_prioritizer("arch"), ArchPrioritizer)
+    hist = TrialHistory.__new__(TrialHistory)   # never read
+    assert isinstance(get_prioritizer("history", history=hist),
+                      HistoryPrioritizer)
+    custom = ArchPrioritizer()
+    assert get_prioritizer(custom) is custom
+    with pytest.raises(KeyError):
+        get_prioritizer("no-such-mode")
+    with pytest.raises(ValueError):
+        get_prioritizer("history", history=None)
+
+
+def test_arch_prioritizer_reproduces_first_seen_arch_order():
+    shuffled = [CELLS[2], CELLS[0], CELLS[3], CELLS[1]]
+    queue = CellQueue(shuffled, prioritizer="arch")
+    first_seen = {}
+    for i, c in enumerate(shuffled):
+        first_seen.setdefault(c.arch, i)
+    assert queue.order() \
+        == sorted(shuffled, key=lambda c: first_seen[c.arch])
+
+
+def test_history_prioritizer_orders_by_expected_speedup(tmp_path):
+    hist = TrialHistory(tmp_path / "h.jsonl")
+    prime_speedup(hist, DECODE.arch, DECODE.shape, 2.0)
+    prime_speedup(hist, "smollm-135m", "train_4k", 1.2)
+    prime_speedup(hist, "glm4-9b", "train_4k", 1.05)
+    queue = CellQueue(CELLS, prioritizer="history", history=hist)
+    order = queue.order()
+    # prefill has no neighbour above the similarity floor -> unknown ->
+    # explore-first; then the known cells by expected speedup: decode
+    # (2.0), then smollm train (1.2) and glm4 train (pulled to 1.2 by
+    # its same-kind same-family smollm neighbour) — the tie broken by
+    # first-seen-arch order
+    assert order == [CELLS[1], DECODE, CELLS[0], CELLS[2]]
+
+
+def test_history_prioritizer_unknown_cells_explore_first(tmp_path):
+    hist = TrialHistory(tmp_path / "h.jsonl")
+    prime_speedup(hist, DECODE.arch, DECODE.shape, 2.0)
+    queue = CellQueue(CELLS, prioritizer="history", history=hist)
+    # only the decode cell clears the similarity floor; every other
+    # cell is unknown and explores first, decode's known 2.0 goes last
+    assert queue.order() == [CELLS[0], CELLS[1], CELLS[2], DECODE]
+    # an empty history leaves everything unknown -> arch order
+    cold = CellQueue(CELLS, prioritizer="history",
+                     history=TrialHistory(tmp_path / "empty.jsonl"))
+    assert cold.order() == CellQueue(CELLS, prioritizer="arch").order()
+
+
+# ------------------------------------------------------------- the queue
+def test_queue_admission_dedup_and_states(tmp_path):
+    queue = CellQueue(CELLS[:2], directory=tmp_path)
+    assert queue.admit(CELLS[:3]) == [CELLS[2]]      # dedup
+    submit_cells(tmp_path, [CELLS[3], CELLS[0]])
+    assert queue.scan_intake() == [CELLS[3]]          # CELLS[0] known
+    assert len(queue) == 4
+    assert queue.depth() == {"pending": 4, "active": 0, "done": 0}
+    first = queue.pop_next()
+    assert first == CELLS[0]
+    queue.mark_done(first.key())
+    assert queue.depth() == {"pending": 3, "active": 0, "done": 1}
+    snap = queue.snapshot()
+    assert snap["admitted"] == 4 and snap["from_intake"] == 1
+    assert snap["cells"][0]["state"] == "done"
+    assert {d["source"] for d in snap["cells"]} == {"seed", "intake"}
+
+
+# -------------------------------------------------------- online campaign
+def test_campaign_admits_intake_mid_run(tmp_path):
+    """A cell submitted while the campaign runs is admitted between
+    batches, tuned and reported — bit-identical to a static campaign."""
+    late = DECODE
+    submitted = threading.Event()
+
+    def gated(wl, rt):
+        if not submitted.is_set():
+            submit_cells(tmp_path / "camp", [late])
+            submitted.set()
+        return surface(wl, rt)
+
+    camp = Campaign(CELLS[:1], evaluator=gated,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path / "camp", intake=True)
+    reports = camp.run()
+    assert set(reports) == {CELLS[0].key(), late.key()}
+    runner = TrialRunner(late.workload(), surface)
+    ref = run_tuning(runner, baseline_factory(late), threshold=0.05)
+    assert reports[late.key()].__dict__ == ref.__dict__
+    snap = camp.last_stats["queue"]
+    assert snap["from_intake"] == 1
+    assert all(d["state"] == "done" for d in snap["cells"])
+
+
+def test_history_priority_runs_best_cell_first(tmp_path):
+    """With ``prioritize='history'`` and one cell slot, the highest
+    expected-speedup cell is evaluated first — and every cell's
+    decisions stay bit-identical to the arch-ordered campaign."""
+    d = tmp_path / "camp"
+    hist = TrialHistory(d / "history.jsonl")
+    prime_speedup(hist, DECODE.arch, DECODE.shape, 2.0)
+    prime_speedup(hist, "smollm-135m", "train_4k", 1.2)
+    prime_speedup(hist, "glm4-9b", "train_4k", 1.05)
+    prime_speedup(hist, "smollm-135m", "prefill_32k", 1.1)
+    counting = CountingSurface()
+    camp = Campaign(CELLS, evaluator=counting,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=d, prioritize="history",
+                    max_active_cells=1)
+    reports = camp.run()
+    first_seen = list(dict.fromkeys(k for k, _ in counting.calls))
+    assert first_seen[0] == DECODE.key()
+    ref = Campaign(CELLS, evaluator=surface,
+                   baseline_factory=baseline_factory,
+                   checkpoint_dir=tmp_path / "ref").run()
+    for key in reports:
+        assert reports[key].__dict__ == ref[key].__dict__
+
+
+def test_max_active_cells_bounds_concurrency(tmp_path):
+    calls = []
+    lock = threading.Lock()
+
+    def tracking(wl, rt):
+        with lock:
+            calls.append(wl.key())
+        time.sleep(0.002)
+        return surface(wl, rt)
+
+    camp = Campaign(CELLS, evaluator=tracking,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=None, max_active_cells=1,
+                    max_workers=4)
+    camp.run()
+    # one cell slot: a later cell's first trial never precedes an
+    # earlier cell's last trial
+    first, last = {}, {}
+    for i, key in enumerate(calls):
+        first.setdefault(key, i)
+        last[key] = i
+    order = sorted(first, key=first.get)
+    assert len(order) == len(CELLS)
+    for a, b in zip(order, order[1:]):
+        assert last[a] < first[b]
+
+
+def test_campaign_rejects_bad_online_options():
+    with pytest.raises(ValueError, match="max_active_cells"):
+        Campaign(CELLS, evaluator=surface, checkpoint_dir=None,
+                 max_active_cells=0)
+    with pytest.raises(ValueError, match="intake"):
+        Campaign(CELLS, evaluator=surface, checkpoint_dir=None,
+                 intake=True)
+    with pytest.raises(ValueError, match="history"):
+        Campaign(CELLS, evaluator=surface, checkpoint_dir=None,
+                 prioritize="history")
+    with pytest.raises(ValueError, match="at least one cell"):
+        Campaign([], evaluator=surface, checkpoint_dir=None)
+
+
+# ---------------------------------------------------------- watch fabric
+def test_watch_worker_claims_late_submission_and_stops(tmp_path):
+    """The acceptance scenario, in-process: a watching worker drains
+    its seed cell, idles, claims a cell submitted to the intake while
+    it runs, and exits on STOP with no lease left held."""
+    d = tmp_path / "fab"
+    worker = FabricWorker(CELLS[:1], d, evaluator=surface,
+                          baseline_factory=baseline_factory,
+                          watch=True, poll_s=0.02, ttl_s=30)
+    out = {}
+    t = threading.Thread(
+        target=lambda: out.setdefault("stats", worker.run()))
+    t.start()
+    deadline = time.time() + 20
+    while not checkpoint_done(d, CELLS[0].key(), "tree") \
+            and time.time() < deadline:
+        time.sleep(0.01)
+    assert checkpoint_done(d, CELLS[0].key(), "tree")
+    time.sleep(0.1)
+    assert t.is_alive()                  # watching, not exited
+    submit_cells(d, [CELLS[2]])
+    while not checkpoint_done(d, CELLS[2].key(), "tree") \
+            and time.time() < deadline:
+        time.sleep(0.01)
+    assert checkpoint_done(d, CELLS[2].key(), "tree")
+    request_stop(d)
+    t.join(timeout=10)
+    assert not t.is_alive()
+    stats = out["stats"]
+    assert sorted(stats["cells_completed"]) \
+        == sorted([CELLS[0].key(), CELLS[2].key()])
+    assert stats["intake_admitted"] == 1
+    assert LeaseBoard(d).held() == []
+    # the admitted cell's decisions match the static campaign
+    runner = TrialRunner(CELLS[2].workload(), surface)
+    ref = run_tuning(runner, baseline_factory(CELLS[2]), threshold=0.05)
+    ck = json.loads((d / f"{CELLS[2].key()}.json").read_text())
+    rep = worker.strategy.load_report(ck["report"])
+    assert rep.__dict__ == ref.__dict__
+
+
+def test_watch_worker_ignores_stale_stop_sentinel(tmp_path):
+    """A STOP left behind by a previous session must not silently
+    disable a NEW watch worker: the worker ignores the pre-start
+    sentinel (without deleting it — deletion could cancel a stop that
+    is live for older workers) and idles until a fresh stop lands."""
+    d = tmp_path / "fab"
+    stale = request_stop(d)              # stale, from a prior session
+    worker = FabricWorker(CELLS[:1], d, evaluator=surface,
+                          baseline_factory=baseline_factory,
+                          watch=True, poll_s=0.02, ttl_s=30)
+    out = {}
+    t = threading.Thread(
+        target=lambda: out.setdefault("stats", worker.run()))
+    t.start()
+    deadline = time.time() + 20
+    while not checkpoint_done(d, CELLS[0].key(), "tree") \
+            and time.time() < deadline:
+        time.sleep(0.01)
+    time.sleep(0.1)
+    assert t.is_alive()                  # still watching — STOP was stale
+    assert stale.exists()                # ignored, not deleted
+    request_stop(d)                      # a fresh stop drains it
+    t.join(timeout=10)
+    assert not t.is_alive()
+    assert out["stats"]["cells_completed"] == [CELLS[0].key()]
+
+
+def test_worker_claims_in_history_priority_order(tmp_path):
+    d = tmp_path / "fab"
+    hist = TrialHistory(d / "history.jsonl")
+    prime_speedup(hist, DECODE.arch, DECODE.shape, 2.0)
+    prime_speedup(hist, "smollm-135m", "train_4k", 1.2)
+    prime_speedup(hist, "glm4-9b", "train_4k", 1.05)
+    prime_speedup(hist, "smollm-135m", "prefill_32k", 1.1)
+    counting = CountingSurface()
+    worker = FabricWorker(CELLS, d, evaluator=counting,
+                          baseline_factory=baseline_factory,
+                          prioritize="history", ttl_s=30)
+    stats = worker.run()
+    assert sorted(stats["cells_completed"]) \
+        == sorted(c.key() for c in CELLS)
+    first_seen = list(dict.fromkeys(k for k, _ in counting.calls))
+    assert first_seen[0] == DECODE.key()
+
+
+def test_worker_without_cells_needs_watch(tmp_path):
+    with pytest.raises(ValueError, match="at least one cell"):
+        FabricWorker([], tmp_path, evaluator=surface)
+
+
+# ---------------------------------------------------------------- status
+def test_queue_status_view(tmp_path):
+    FabricWorker(CELLS[:2], tmp_path, evaluator=surface,
+                 baseline_factory=baseline_factory).run()
+    submit_cells(tmp_path, [CELLS[2]])
+    board = LeaseBoard(tmp_path, worker_id="w-live", ttl_s=30)
+    assert board.try_acquire(CELLS[3].key()) is not None
+    st = queue_status(tmp_path, strategy="tree", cells=CELLS[:2])
+    assert st["depth"] == {"pending": 1, "claimed": 1, "done": 2}
+    by_cell = {d["cell"]: d for d in st["cells"]}
+    assert by_cell[CELLS[0].key()]["done"]
+    assert by_cell[CELLS[2].key()]["source"] == "intake"
+    assert not by_cell[CELLS[2].key()]["done"]
+    assert by_cell[CELLS[3].key()]["source"] == "lease"
+    assert by_cell[CELLS[3].key()]["claimed_by"] == "w-live"
+    assert len(st["leases"]) == 1
+    assert st["leases"][0]["worker"] == "w-live"
+    assert not st["leases"][0]["expired"]
+    assert not st["stop_requested"]
+
+
+# ------------------------------------------------------------- tune CLI
+def test_tune_cli_add_cells_status_stop(tmp_path, monkeypatch, capsys):
+    import repro.core.campaign as campaign_mod
+    from repro.launch import tune
+    monkeypatch.setattr(campaign_mod, "CAMPAIGN_DIR", tmp_path / "camp")
+    assert tune.main(["--add-cells", "smollm-135m:train_4k"]) == 0
+    out = capsys.readouterr().out
+    assert "submitted smollm-135m__train_4k__pod" in out
+    assert scan_intake(tmp_path / "camp") == [CELLS[0]]
+    assert tune.main(["--status"]) == 0
+    out = capsys.readouterr().out
+    assert "queue depth:  1 pending / 0 claimed / 0 done" in out
+    assert "(none held)" in out
+    assert tune.main(["--stop"]) == 0
+    capsys.readouterr()
+    assert stop_requested(tmp_path / "camp")
+    assert tune.main(["--status"]) == 0
+    assert "STOP requested" in capsys.readouterr().out
+
+
+def test_tune_cli_watch_requires_fabric_mode(capsys):
+    from repro.launch import tune
+    with pytest.raises(SystemExit):
+        tune.main(["--cells", "smollm-135m:train_4k", "--watch"])
+    assert "--watch only applies" in capsys.readouterr().err
+
+
+def test_tune_cli_add_cells_and_stop_reject_mode_flags(capsys):
+    """--add-cells/--stop must error on flags they would silently
+    ignore, not leave the operator believing e.g. --fresh ran."""
+    from repro.launch import tune
+    with pytest.raises(SystemExit):
+        tune.main(["--add-cells", "smollm-135m:train_4k", "--fresh"])
+    assert "standalone action" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        tune.main(["--stop", "--watch"])
+    assert "standalone action" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        tune.main(["--add-cells", "smollm-135m:train_4k", "--stop"])
+    assert "separate actions" in capsys.readouterr().err
+
+
+def test_fresh_clears_intake(tmp_path, monkeypatch):
+    import repro.core.campaign as campaign_mod
+    from repro.launch import tune
+    monkeypatch.setattr(campaign_mod, "CAMPAIGN_DIR", tmp_path / "camp")
+    monkeypatch.setattr(tune, "RESULTS_DIR", tmp_path / "tuning")
+    ckpt = tune.campaign_dir("tree", None)
+    # one listed cell and one stale foreign --add-cells leftover: a
+    # fresh campaign must not silently re-admit the foreign one
+    submit_cells(ckpt, [CELLS[0], CELLS[2]])
+    request_stop(ckpt)
+    reports, _ = tune.tune_campaign(CELLS[:1], evaluator=surface,
+                                    fresh=True)
+    assert scan_intake(ckpt) == []       # the WHOLE intake is gone
+    assert not stop_requested(ckpt)
+    assert sorted(reports) == [CELLS[0].key()]   # foreign not admitted
+
+
+# ---------------------------------------------------------- expected gain
+def test_tree_cursor_expected_gain_shrinks():
+    from repro.core.executor import run_trials
+    from repro.core.tree import TreeCursor
+    runner = TrialRunner(CELLS[0].workload(), surface)
+    cursor = TreeCursor(runner, baseline_factory(CELLS[0]))
+    assert cursor.expected_gain() is None        # pre-baseline: unknown
+    gains = []
+    while True:
+        batch = cursor.propose()
+        if not batch:
+            break
+        pairs = run_trials(runner, [c.as_trial() for c in batch])
+        cursor.absorb([r for _, r in pairs], [i for i, _ in pairs])
+        gains.append(cursor.expected_gain())
+    assert gains[0] == 1.0                       # whole walk ahead
+    assert gains == sorted(gains, reverse=True)  # monotone shrink
+    assert cursor.expected_gain() == 0.0
