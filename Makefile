@@ -1,5 +1,5 @@
 .PHONY: verify verify-fast bench-trials bench-campaign bench-fabric \
-	bench-online
+	bench-online bench-chaos
 
 # tier-1: full suite, fail-fast (ROADMAP.md)
 verify:
@@ -26,3 +26,8 @@ bench-fabric:
 # mid-run admission latency) -> BENCH_online.json
 bench-online:
 	PYTHONPATH=src python -m benchmarks.bench_online
+
+# chaos benchmark (poison quarantine / hang deadline / transient
+# retry, with bit-identity controls) -> BENCH_chaos.json
+bench-chaos:
+	PYTHONPATH=src python -m benchmarks.bench_chaos

@@ -1,0 +1,316 @@
+"""Chaos benchmark: hardened trial execution under injected faults.
+
+Four arms over the PR-2 4-cell batch on the fault-injecting synthetic
+surface (benchmarks/chaos_surface.py, which wraps the deterministic
+fabric surface — every non-faulted trial is bit-identical to the
+fault-free run).  All faults target knobs whose tuning-tree stages are
+train-only, so the single train cell (``smollm-135m:train_4k``) absorbs
+every fault and the three other cells double as bit-identity controls.
+
+  * **reference** — fault-free in-process campaign; the decision oracle
+    and the evaluation-count baseline every chaos arm is diffed against;
+  * **hang** — the ``microbatches=2`` config wedges (sleeps
+    ``CHAOS_HANG_S`` = 300 s).  With ``--trial-timeout`` the sweep
+    abandons it, records a ``timeout`` failure, and the campaign's wall
+    stays bounded by the deadline, not the hang.  Non-hang cells must be
+    bit-identical to reference;
+  * **transient** — the ``grad_comm_dtype=bfloat16`` configs each fail
+    once with ``OSError`` (transient class), then succeed.  With
+    ``--max-retries`` every cell's decisions must be bit-identical to
+    reference, extra evaluator invocations must equal the retry count
+    exactly (each fault costs one re-evaluation, nothing cascades), and
+    zero extra compiles are paid;
+  * **poison** — the ``remat_policy=full`` config SIGKILLs whichever
+    worker evaluates it.  A 2-worker fabric (strike threshold K=2) runs
+    until both workers die; a third worker steals the expired lease,
+    reaps the orphaned evaluation intents into strikes, quarantines the
+    config fleet-wide and completes the cell (degraded).  The
+    evaluation ledger must show the poison config evaluated exactly K
+    times across the whole fleet — the crash-loop is broken.
+
+Results land in results/benchmarks/BENCH_chaos.json and a copy at the
+repo root (BENCH_chaos.json) for CI tracking.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_chaos
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import contextlib
+import json
+import pathlib
+import shutil
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+DEFAULT_CELLS = ("smollm-135m:train_4k,smollm-135m:prefill_32k,"
+                 "xlstm-1.3b:prefill_32k,xlstm-1.3b:decode_32k")
+FAULT_CELL = "smollm-135m__train_4k__pod"
+KILL_DELTA = "remat_policy=full"
+HANG_DELTA = "microbatches=2"
+FLAKY_DELTA = "grad_comm_dtype=bfloat16"
+HANG_S = 300.0
+TRIAL_TIMEOUT_S = 1.0
+STRIKE_K = 2
+KILL_TTL_S = 2.0
+EVALUATOR_SPEC = "benchmarks.chaos_surface:make_evaluator"
+
+
+def _baseline(spec=None):
+    from repro.core.params import default_config
+    return default_config(shard_strategy="fsdp_tp", attn_impl="pallas")
+
+
+@contextlib.contextmanager
+def _chaos_env(**pairs):
+    """Set CHAOS_* env vars for the duration (make_evaluator reads env
+    at factory time, so in-process arms scope their faults here)."""
+    old = {k: os.environ.get(k) for k in pairs}
+    os.environ.update({k: str(v) for k, v in pairs.items()})
+    try:
+        yield
+    finally:
+        for k, v in old.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+def _subprocess_env(ledger, **chaos):
+    env = os.environ.copy()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(ROOT / "src"), str(ROOT)]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    env["CHAOS_LEDGER"] = str(ledger)
+    env.update({k: str(v) for k, v in chaos.items()})
+    return env
+
+
+def _identical(reports, ref, keys):
+    from repro.core.campaign import tuning_fingerprint
+    return all(tuning_fingerprint(reports[k]) == tuning_fingerprint(ref[k])
+               for k in keys)
+
+
+def _compiles(reports):
+    return sum(int(e["result"].get("compiles") or 0)
+               for rep in reports.values() for e in rep.log)
+
+
+def _ledger_lines(path):
+    try:
+        return [json.loads(line)
+                for line in path.read_text().splitlines() if line]
+    except OSError:
+        return []
+
+
+def _fabric_reports(directory, cells):
+    from repro.core.strategy import get_strategy
+    spec = get_strategy("tree")
+    out = {}
+    for c in cells:
+        d = json.loads((directory / f"{c.key()}.json").read_text())
+        assert d.get("done"), f"{c.key()} incomplete"
+        out[c.key()] = spec.load_report(d["report"])
+    return out
+
+
+# ---------------------------------------------------------- reference
+def run_reference_arm(cells, scratch):
+    """Fault-free chaos surface (no deltas set): same decisions as the
+    plain fabric surface, plus a ledger for invocation accounting."""
+    from benchmarks.chaos_surface import make_evaluator
+    from repro.core.campaign import Campaign
+    ledger = scratch / "ledger-reference.jsonl"
+    with _chaos_env(CHAOS_LEDGER=ledger):
+        reports = Campaign(cells, evaluator=make_evaluator(),
+                           baseline_factory=_baseline,
+                           checkpoint_dir=None).run()
+    return reports, len(_ledger_lines(ledger))
+
+
+# --------------------------------------------------------------- hang
+def run_hang_arm(cells, scratch, ref):
+    from benchmarks.chaos_surface import make_evaluator
+    from repro.core.campaign import Campaign
+    d = scratch / "hang"
+    with _chaos_env(CHAOS_HANG_DELTA=HANG_DELTA, CHAOS_HANG_S=HANG_S):
+        camp = Campaign(cells, evaluator=make_evaluator(),
+                        baseline_factory=_baseline, checkpoint_dir=d,
+                        trial_timeout_s=TRIAL_TIMEOUT_S)
+        t0 = time.time()
+        reports = camp.run()
+        wall = time.time() - t0
+    health = (camp.last_stats.get("health") or {}).get(FAULT_CELL, {})
+    timeouts = int((health.get("failures") or {}).get("timeout", 0))
+    controls = [k for k in ref if k != FAULT_CELL]
+    return {
+        "hang_s": HANG_S,
+        "trial_timeout_s": TRIAL_TIMEOUT_S,
+        "wall_s": round(wall, 2),
+        "wall_bounded_by_timeout": wall < HANG_S / 2,
+        "timeouts_recorded": timeouts,
+        "fault_cell_degraded": bool(health.get("degraded")),
+        "controls_identical": _identical(reports, ref, controls),
+    }
+
+
+# ---------------------------------------------------------- transient
+def run_transient_arm(cells, scratch, ref, ref_evals):
+    from benchmarks.chaos_surface import make_evaluator
+    from repro.core.campaign import Campaign
+    d = scratch / "transient"
+    ledger = scratch / "ledger-transient.jsonl"
+    with _chaos_env(CHAOS_FLAKY_DELTA=FLAKY_DELTA, CHAOS_FLAKY_FAILS=1,
+                    CHAOS_LEDGER=ledger):
+        camp = Campaign(cells, evaluator=make_evaluator(),
+                        baseline_factory=_baseline, checkpoint_dir=d,
+                        max_retries=2)
+        reports = camp.run()
+    retries = int((camp.last_stats.get("hardening") or {})
+                  .get("retries", 0))
+    evals = len(_ledger_lines(ledger))
+    return {
+        "max_retries": 2,
+        "retries": retries,
+        "evaluations": evals,
+        "reference_evaluations": ref_evals,
+        "extra_evaluations": evals - ref_evals,
+        "extra_compiles": _compiles(reports) - _compiles(ref),
+        "all_cells_identical": _identical(reports, ref, list(ref)),
+    }
+
+
+# ------------------------------------------------------------- poison
+def run_poison_arm(cells, scratch, ref):
+    """2-worker fabric vs a worker-killing config.  Workers are managed
+    directly (not run_coordinator — SIGKILL'd workers exit -9 and the
+    coordinator treats any nonzero rc as failure, which is exactly the
+    behavior under test here)."""
+    from repro.core.fabric import LeaseBoard, spawn_worker
+    from repro.core.quarantine import Quarantine
+    d = scratch / "poison"
+    ledger = d / "ledger.jsonl"
+    d.mkdir(parents=True, exist_ok=True)
+    env = _subprocess_env(ledger, CHAOS_KILL_DELTA=KILL_DELTA)
+
+    def worker(i):
+        return spawn_worker(cells, d, strategy="tree",
+                            evaluator_spec=EVALUATOR_SPEC,
+                            ttl_s=KILL_TTL_S, worker_id=f"w{i}",
+                            strike_threshold=STRIKE_K,
+                            log_path=d / "logs" / f"worker-{i}.log",
+                            env=env)
+
+    t0 = time.time()
+    rcs = [p.wait(timeout=300) for p in [worker(0), worker(1)]]
+    # both workers evaluated the poison config once each and died; the
+    # survivor-less board still holds the poison cell's expired lease
+    finisher = worker(2)
+    rc2 = finisher.wait(timeout=300)
+    wall = time.time() - t0
+    assert rc2 == 0, f"finisher worker rc {rc2}"
+    assert LeaseBoard(d).held() == [], "lease left held"
+
+    poison_evals = sum(
+        1 for rec in _ledger_lines(ledger)
+        if str(rec["config"].get("remat_policy")) == "full")
+    summary = Quarantine(d, strike_threshold=STRIKE_K).summary()
+    state = json.loads((d / f"{FAULT_CELL}.json").read_text())
+    health = state.get("health") or {}
+    reports = _fabric_reports(d, cells)
+    controls = [k for k in ref if k != FAULT_CELL]
+    return {
+        "strike_threshold": STRIKE_K,
+        "worker_rcs": rcs + [rc2],
+        "wall_s": round(wall, 2),
+        "poison_evaluations_fleet_wide": poison_evals,
+        "crash_loop_broken": poison_evals <= STRIKE_K,
+        "quarantined_configs": summary["quarantined"],
+        "quarantine_records": summary["records"],
+        "fault_cell_done": bool(state.get("done")),
+        "fault_cell_degraded": bool(health.get("degraded")),
+        "fault_cell_quarantined_skips": int(health.get("quarantined", 0)),
+        "controls_identical": _identical(reports, ref, controls),
+    }
+
+
+# ------------------------------------------------------------------ main
+def main(cells_spec: str):
+    from repro.core.campaign import parse_cells
+    cells = parse_cells(cells_spec)
+    print(f"batch: {len(cells)} cells "
+          f"({', '.join(c.key() for c in cells)})")
+    scratch = ROOT / "results" / "bench_chaos_scratch"
+    shutil.rmtree(scratch, ignore_errors=True)
+    scratch.mkdir(parents=True, exist_ok=True)
+
+    ref, ref_evals = run_reference_arm(cells, scratch)
+    print(f"reference: {ref_evals} evaluations, fault-free")
+
+    hang = run_hang_arm(cells, scratch, ref)
+    print(f"hang: wall {hang['wall_s']}s vs {HANG_S}s hang "
+          f"({hang['timeouts_recorded']} timeouts, "
+          f"controls identical={hang['controls_identical']})")
+
+    transient = run_transient_arm(cells, scratch, ref, ref_evals)
+    print(f"transient: {transient['retries']} retries, "
+          f"{transient['extra_evaluations']} extra evaluations, "
+          f"{transient['extra_compiles']} extra compiles, "
+          f"identical={transient['all_cells_identical']}")
+
+    poison = run_poison_arm(cells, scratch, ref)
+    print(f"poison: evaluated {poison['poison_evaluations_fleet_wide']} "
+          f"times fleet-wide (K={STRIKE_K}), worker rcs "
+          f"{poison['worker_rcs']}, quarantined "
+          f"{poison['quarantined_configs']}")
+
+    out = {
+        "cells": [c.key() for c in cells],
+        "fault_cell": FAULT_CELL,
+        "evaluator": EVALUATOR_SPEC,
+        "deltas": {"kill": KILL_DELTA, "hang": HANG_DELTA,
+                   "flaky": FLAKY_DELTA},
+        "reference_evaluations": ref_evals,
+        "hang": hang,
+        "transient": transient,
+        "poison": poison,
+    }
+    res_dir = ROOT / "results" / "benchmarks"
+    res_dir.mkdir(parents=True, exist_ok=True)
+    (res_dir / "BENCH_chaos.json").write_text(json.dumps(out, indent=1))
+    (ROOT / "BENCH_chaos.json").write_text(json.dumps(out, indent=1))
+    shutil.rmtree(scratch, ignore_errors=True)
+    print(json.dumps(out, indent=1))
+    assert hang["wall_bounded_by_timeout"], \
+        "hang arm wall not bounded by the trial deadline!"
+    assert hang["timeouts_recorded"] >= 1 and hang["fault_cell_degraded"]
+    assert hang["controls_identical"], "hang arm changed control cells!"
+    assert transient["all_cells_identical"], \
+        "transient faults changed tuning decisions!"
+    assert transient["extra_compiles"] == 0, \
+        "transient recovery paid extra compiles!"
+    assert transient["retries"] >= 1 \
+        and transient["extra_evaluations"] == transient["retries"], \
+        "transient recovery cost != one re-evaluation per fault"
+    assert poison["crash_loop_broken"], \
+        (f"poison config evaluated {poison['poison_evaluations_fleet_wide']}"
+         f" times — quarantine failed to break the crash-loop at K")
+    assert poison["fault_cell_done"] and poison["fault_cell_degraded"]
+    assert poison["quarantined_configs"], "quarantine ledger empty!"
+    assert poison["controls_identical"], "poison arm changed control cells!"
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default=DEFAULT_CELLS,
+                    help="comma-separated arch:shape[:pod|multipod]")
+    a = ap.parse_args()
+    main(a.cells)

@@ -1,0 +1,113 @@
+"""Fault-injecting synthetic evaluator for chaos benchmarks/tests.
+
+Wraps the deterministic :func:`benchmarks.fabric_surface.surface_cost`
+surface (so every non-faulted trial is bit-identical to the fault-free
+fabric surface) and injects three fault classes on *chosen configs*,
+selected by knob=value deltas — deterministic-by-config, like real
+poison parameter values (the paper's crashing sort-by-key 0.1/0.7 run),
+not random (modeled on the ft/ preemption/straggler surfaces: faults
+you can aim).
+
+Environment variables parameterize spawned workers (env is the only
+channel a ``launch/tune.py --evaluator`` subprocess inherits):
+
+  * ``CHAOS_KILL_DELTA`` — ``knob=value[,knob=value...]``: a config
+    matching every pair SIGKILLs its own process (after
+    ``CHAOS_KILL_DELAY_S``, default 0.05 s — long enough for the
+    executor's quarantine intent record to land).  This is the poison
+    config the quarantine must bound at K evaluations fleet-wide;
+  * ``CHAOS_HANG_DELTA`` — matching configs sleep ``CHAOS_HANG_S``
+    (default 3600 s): a wedged XLA compile.  Only a trial deadline
+    (``--trial-timeout``) gets the sweep past it;
+  * ``CHAOS_FLAKY_DELTA`` — matching configs raise ``OSError`` (a
+    *transient* failure per the core/trial.py taxonomy) on their first
+    ``CHAOS_FLAKY_FAILS`` (default 1) evaluations in each process,
+    then succeed: retry/backoff must recover them with zero extra
+    compiles;
+  * ``CHAOS_SLEEP_S`` — per-trial sleep (evaluation latency), as in
+    fabric_surface;
+  * ``CHAOS_LEDGER`` — optional path; one ``{"cell", "config"}`` JSON
+    line is appended per evaluation *before* any fault fires, so the
+    ledger counts evaluations of the poison config even when the
+    process dies mid-trial.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import time
+
+from benchmarks.fabric_surface import surface_cost
+
+KILL_ENV = "CHAOS_KILL_DELTA"
+KILL_DELAY_ENV = "CHAOS_KILL_DELAY_S"
+HANG_ENV = "CHAOS_HANG_DELTA"
+HANG_S_ENV = "CHAOS_HANG_S"
+FLAKY_ENV = "CHAOS_FLAKY_DELTA"
+FLAKY_FAILS_ENV = "CHAOS_FLAKY_FAILS"
+SLEEP_ENV = "CHAOS_SLEEP_S"
+LEDGER_ENV = "CHAOS_LEDGER"
+
+
+def parse_delta(spec):
+    """``knob=value[,knob=value...]`` -> list of (knob, value-string)."""
+    out = []
+    for item in (spec or "").split(","):
+        item = item.strip()
+        if not item:
+            continue
+        knob, sep, value = item.partition("=")
+        if not sep:
+            raise ValueError(f"bad chaos delta {item!r} (want knob=value)")
+        out.append((knob.strip(), value.strip()))
+    return out
+
+
+def matches(rt, delta) -> bool:
+    """A config triggers a fault iff every knob=value pair matches
+    (string comparison, so booleans/ints match their CLI spelling)."""
+    return bool(delta) and all(str(getattr(rt, k)) == v
+                               for k, v in delta)
+
+
+def make_evaluator():
+    """Zero-arg factory (the ``--evaluator`` contract)."""
+    kill = parse_delta(os.environ.get(KILL_ENV))
+    kill_delay = float(os.environ.get(KILL_DELAY_ENV, "0.05") or "0.05")
+    hang = parse_delta(os.environ.get(HANG_ENV))
+    hang_s = float(os.environ.get(HANG_S_ENV, "3600") or "3600")
+    flaky = parse_delta(os.environ.get(FLAKY_ENV))
+    flaky_fails = int(os.environ.get(FLAKY_FAILS_ENV, "1") or "1")
+    sleep_s = float(os.environ.get(SLEEP_ENV, "0") or "0")
+    ledger = os.environ.get(LEDGER_ENV)
+    flaky_count = {}                     # per-process: config blob -> n
+
+    def evaluate(wl, rt):
+        if ledger:
+            # ledger first: the kill fault must still be counted
+            line = json.dumps({"cell": wl.key(), "config": rt.as_dict()},
+                              sort_keys=True) + "\n"
+            fd = os.open(ledger, os.O_WRONLY | os.O_CREAT | os.O_APPEND,
+                         0o644)
+            try:
+                os.write(fd, line.encode())
+            finally:
+                os.close(fd)
+        if matches(rt, kill):
+            time.sleep(kill_delay)       # let the intent record land
+            os.kill(os.getpid(), signal.SIGKILL)
+        if matches(rt, hang):
+            time.sleep(hang_s)           # a wedged compile
+        if matches(rt, flaky):
+            blob = json.dumps(rt.as_dict(), sort_keys=True, default=str)
+            n = flaky_count.get(blob, 0)
+            if n < flaky_fails:
+                flaky_count[blob] = n + 1
+                raise OSError("chaos: transient fault "
+                              f"({n + 1}/{flaky_fails})")
+        if sleep_s > 0:
+            time.sleep(sleep_s)
+        return surface_cost(wl, rt)
+
+    return evaluate

@@ -142,7 +142,7 @@ def tuning_fingerprint(rep: TuningReport) -> Dict:
     """The deterministic projection of a report used for equality checks
     across runs with different cache states: everything except the
     wall-clock compile accounting fields of each log entry."""
-    volatile = ("compile_s", "compiles", "cached")
+    volatile = ("compile_s", "compiles", "cached", "retries")
     return {
         "workload": rep.workload,
         "baseline_cost": rep.baseline_cost,
@@ -154,6 +154,43 @@ def tuning_fingerprint(rep: TuningReport) -> Dict:
                                  if k not in volatile}}
                 for e in rep.log],
     }
+
+
+def cell_health(log) -> Dict:
+    """Failure/retry accounting over a trial log (TrialLogEntry objects
+    or their checkpointed dicts).  Empty for a fault-free cell.
+
+    A cell is ``degraded`` when environment faults touched its walk —
+    timeouts, worker deaths (incl. quarantine skips) or unrecovered
+    transient failures.  Deterministic crashes are *not* degradation:
+    a config that legitimately overflows HBM is normal tuning signal.
+    Recovered transients leave only a ``retries`` count (the final
+    result, and thus every decision, is the fault-free one)."""
+    from repro.core.trial import (FAILURE_TIMEOUT, FAILURE_TRANSIENT,
+                                  FAILURE_WORKER_DEATH)
+    failures: Dict[str, int] = {}
+    retries = 0
+    quarantined = 0
+    for e in log:
+        res = e.get("result", {}) if isinstance(e, dict) else e.result
+        f = res.get("failure") or ""
+        if res.get("crashed") and f:
+            failures[f] = failures.get(f, 0) + 1
+        retries += int(res.get("retries") or 0)
+        if (res.get("error") or "").startswith("quarantined"):
+            quarantined += 1
+    out: Dict[str, Any] = {}
+    if failures:
+        out["failures"] = dict(sorted(failures.items()))
+    if retries:
+        out["retries"] = retries
+    if quarantined:
+        out["quarantined"] = quarantined
+    if quarantined or any(k in failures for k in
+                          (FAILURE_TRANSIENT, FAILURE_TIMEOUT,
+                           FAILURE_WORKER_DEATH)):
+        out["degraded"] = True
+    return out
 
 
 # ------------------------------------------------------------- campaign
@@ -231,7 +268,11 @@ class Campaign:
                  warm_start_per_cell: int = 1,
                  prioritize: Any = "arch",
                  intake: bool = False,
-                 max_active_cells: Optional[int] = None):
+                 max_active_cells: Optional[int] = None,
+                 trial_timeout_s: Optional[float] = None,
+                 max_retries: int = 0,
+                 quarantine: Any = None,
+                 strike_threshold: Optional[int] = None):
         if not cells and not intake:
             raise ValueError("campaign needs at least one cell "
                              "(or intake admission)")
@@ -282,6 +323,30 @@ class Campaign:
         if max_active_cells is not None and max_active_cells < 1:
             raise ValueError("max_active_cells must be >= 1")
         self.max_active_cells = max_active_cells
+        # ------------------------------------------- trial hardening
+        hardened = (trial_timeout_s is not None or max_retries
+                    or quarantine not in (None, False)
+                    or strike_threshold is not None)
+        if executor is not None and hardened:
+            raise ValueError("trial hardening (timeout/retries/"
+                             "quarantine) configures the campaign's own "
+                             "executor — configure the external "
+                             "SweepExecutor directly instead")
+        self.trial_timeout_s = trial_timeout_s
+        self.max_retries = int(max_retries)
+        if quarantine is False or (quarantine is None
+                                   and self.checkpoint_dir is None):
+            self.quarantine = None       # opted out / nowhere to persist
+        elif quarantine is None:
+            from repro.core.quarantine import Quarantine
+            self.quarantine = Quarantine(
+                self.checkpoint_dir,
+                **({"strike_threshold": strike_threshold}
+                   if strike_threshold is not None else {}))
+        else:
+            self.quarantine = quarantine
+            if strike_threshold is not None:
+                self.quarantine.strike_threshold = strike_threshold
         self.last_stats: Dict = {}
 
     # --------------------------------------------------------- per cell
@@ -427,6 +492,9 @@ class Campaign:
         }
         if self.warm_start:
             state["warmstart"] = cr.warmstart
+        health = cell_health(cr.runner.log)
+        if health:                       # fault-free checkpoints unchanged
+            state["health"] = health
         # atomic publish: concurrent fabric workers racing on one cell
         # (a stolen-but-alive lease) each land a complete checkpoint,
         # never a torn one
@@ -476,6 +544,11 @@ class Campaign:
     def _activate(self, spec: CellSpec) -> _CellRun:
         """Build one cell's run state (cursor, checkpoint, warm-start)
         the moment the queue hands the cell out."""
+        if self.quarantine is not None:
+            # we own this cell now (queue hand-out / fabric lease), so
+            # any intent on it without a completion is an evaluation
+            # that died with its worker: strike the in-flight config
+            self.quarantine.reap_orphans(spec.workload().key())
         baseline = self.baseline_factory(spec)
         runner = TrialRunner(
             spec.workload(), self.evaluator,
@@ -519,8 +592,11 @@ class Campaign:
             directory=self.checkpoint_dir if self.intake else None)
         runs: Dict[str, _CellRun] = {}
         own_executor = self.executor is None
-        executor = self.executor or SweepExecutor(self.evaluator,
-                                                  self.max_workers)
+        executor = self.executor or SweepExecutor(
+            self.evaluator, self.max_workers,
+            trial_timeout_s=self.trial_timeout_s,
+            max_retries=self.max_retries,
+            quarantine=self.quarantine)
         pending: Dict[str, Tuple[list, list]] = {}   # key -> (batch, futs)
         try:
             def kick(cr: _CellRun) -> None:
@@ -596,4 +672,17 @@ class Campaign:
         if self.warm_start:
             self.last_stats["warmstarted_cells"] = sum(
                 1 for cr in runs.values() if cr.warmstart)
+        health = {k: cell_health(cr.runner.log) for k, cr in runs.items()}
+        health = {k: h for k, h in health.items() if h}
+        if health:                       # fault-free stats unchanged
+            self.last_stats["health"] = health
+            for cd in self.last_stats["queue"].get("cells", []):
+                if cd.get("cell") in health:
+                    cd["health"] = health[cd["cell"]]
+            self.last_stats["degraded_cells"] = sorted(
+                k for k, h in health.items() if h.get("degraded"))
+            ex_stats = executor.stats()
+            self.last_stats["hardening"] = {
+                k: ex_stats[k] for k in ("retries", "timeouts",
+                                         "quarantined")}
         return reports

@@ -19,17 +19,37 @@ well on CPU-only infrastructure.  :class:`SweepExecutor` adds:
     a wrong guess costs only idle worker time, never correctness.
 
 Evaluation faults surface as crashed TrialResults (cost = inf), exactly
-like the sequential evaluator's behaviour.
+like the sequential evaluator's behaviour — classified per the failure
+taxonomy in core/trial.py.  Three hardening layers (all off by default;
+fault-free accounting is bit-identical to the unhardened executor):
+
+  * **deadlines** (``trial_timeout_s``) — an evaluation that exceeds
+    the deadline is recorded as a ``timeout`` failure; its wedged
+    thread is abandoned to a side pool of zombies (reaped opportunistically,
+    never joined with a wait), so one hanging XLA compile cannot wedge
+    the sweep;
+  * **retry/backoff** (``max_retries``) — ``transient`` failures are
+    re-evaluated with exponential backoff + deterministic jitter,
+    inside the original submission (finished futures leave the
+    in-flight table, so a fresh submit of a previously-crashed config
+    never dedups onto the crashed Future);
+  * **quarantine** (``quarantine=``, a core/quarantine.Quarantine) —
+    each evaluation is bracketed by intent/completion ledger records,
+    and configs quarantined fleet-wide are skipped outright, scored as
+    deterministic crashes.
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.params import TunableConfig
-from repro.core.trial import TrialResult, Workload
+from repro.core.trial import (FAILURE_TIMEOUT, FAILURE_WORKER_DEATH,
+                              TrialResult, Workload, classify_exception)
 
 
 def default_workers() -> int:
@@ -52,7 +72,8 @@ def _safe_eval(evaluator, wl: Workload, rt: TunableConfig) -> TrialResult:
         return evaluator(wl, rt)
     except Exception as e:
         return TrialResult(cost_s=float("inf"), crashed=True,
-                           error=f"{type(e).__name__}: {e}"[:500])
+                           error=f"{type(e).__name__}: {e}"[:500],
+                           failure=classify_exception(e))
 
 
 class SweepExecutor:
@@ -60,21 +81,34 @@ class SweepExecutor:
 
     def __init__(self, evaluator: Callable[[Workload, TunableConfig],
                                            TrialResult],
-                 max_workers: Optional[int] = None):
+                 max_workers: Optional[int] = None, *,
+                 trial_timeout_s: Optional[float] = None,
+                 max_retries: int = 0,
+                 retry_backoff_s: float = 0.05,
+                 quarantine=None):
         self.evaluator = evaluator
         self.max_workers = max_workers or default_workers()
+        self.trial_timeout_s = trial_timeout_s
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.quarantine = quarantine
         self._pool = ThreadPoolExecutor(
             max_workers=self.max_workers,
             thread_name_prefix="sweep")
         self._lock = threading.Lock()
         self._inflight: Dict[Tuple, Future] = {}
+        self._zombies: List[threading.Thread] = []
         self.n_evals = 0            # distinct evaluations actually run
         self.n_submitted = 0        # submissions incl. deduplicated ones
+        self.n_retries = 0          # transient re-evaluations paid for
+        self.n_timeouts = 0         # evaluations abandoned at the deadline
+        self.n_quarantined = 0      # candidates skipped as quarantined
 
     # ------------------------------------------------------------ core
     def submit(self, wl: Workload, rt: TunableConfig) -> Future:
         """Schedule one evaluation; identical in-flight candidates are
         coalesced onto the same future."""
+        self._reap_zombies()
         key = _trial_key(wl, rt)
         with self._lock:
             self.n_submitted += 1
@@ -89,10 +123,103 @@ class SweepExecutor:
     def _run(self, key: Tuple, wl: Workload, rt: TunableConfig
              ) -> TrialResult:
         try:
-            return _safe_eval(self.evaluator, wl, rt)
+            return self._evaluate(wl, rt)
         finally:
             with self._lock:
                 self._inflight.pop(key, None)
+
+    def _evaluate(self, wl: Workload, rt: TunableConfig) -> TrialResult:
+        """One candidate through the full hardening stack: quarantine
+        guard, then attempt + bounded transient retries."""
+        q = self.quarantine
+        if q is not None:
+            from repro.core.quarantine import config_key
+            ck = config_key(rt)
+            if q.is_quarantined(ck):
+                with self._lock:
+                    self.n_quarantined += 1
+                return TrialResult(
+                    cost_s=float("inf"), crashed=True,
+                    failure=FAILURE_WORKER_DEATH,
+                    error=f"quarantined: config {ck} reached "
+                          f"{q.effective_strikes(ck)} strikes "
+                          f"(threshold {q.strike_threshold}) — "
+                          "skipped fleet-wide, scored as a crash")
+        res = self._attempt(wl, rt)
+        attempt = 0
+        while res.retryable and attempt < self.max_retries:
+            attempt += 1
+            with self._lock:
+                self.n_retries += 1
+            time.sleep(self._backoff(wl, rt, attempt))
+            res = self._attempt(wl, rt)
+        res.retries = attempt
+        return res
+
+    def _backoff(self, wl: Workload, rt: TunableConfig,
+                 attempt: int) -> float:
+        """Exponential backoff with *deterministic* jitter (hash of the
+        candidate + attempt, not random): workers desynchronize without
+        making campaign wall-time depend on RNG state."""
+        blob = f"{_trial_key(wl, rt)}:{attempt}".encode()
+        jitter = int(hashlib.sha1(blob).hexdigest()[:4], 16) / 0xffff
+        return self.retry_backoff_s * (2 ** (attempt - 1)) * (1 + jitter)
+
+    def _attempt(self, wl: Workload, rt: TunableConfig) -> TrialResult:
+        """One evaluation bracketed by quarantine intent/completion; the
+        deadline (if any) is enforced here.  An interrupt (BaseException,
+        e.g. KeyboardInterrupt unwinding the pool) still writes the
+        completion — only true process death leaves an orphaned intent."""
+        q = self.quarantine
+        token = q.begin(wl.key(), rt) if q is not None else None
+        try:
+            if self.trial_timeout_s is None:
+                res = _safe_eval(self.evaluator, wl, rt)
+            else:
+                res = self._attempt_with_deadline(wl, rt)
+        except BaseException:
+            if token is not None:
+                q.complete(token, crashed=True, note="interrupted")
+            raise
+        if token is not None:
+            q.complete(token, crashed=res.crashed, note=res.failure)
+            if res.failure == FAILURE_TIMEOUT:
+                # a hang is as poisonous as a kill, just slower: strike
+                # it so K timeouts fleet-wide quarantine the config
+                q.strike(token["attempt"], token["key"], token["cell"],
+                         reason="deadline exceeded")
+        return res
+
+    def _attempt_with_deadline(self, wl: Workload,
+                               rt: TunableConfig) -> TrialResult:
+        done = threading.Event()
+        box: Dict[str, TrialResult] = {}
+
+        def work():
+            box["res"] = _safe_eval(self.evaluator, wl, rt)
+            done.set()
+
+        t = threading.Thread(target=work, daemon=True,
+                             name="sweep-trial")
+        t.start()
+        if done.wait(self.trial_timeout_s):
+            return box["res"]
+        # the evaluation is wedged: abandon its thread to the zombie
+        # side pool (reaped without waiting) so the sweep moves on
+        with self._lock:
+            self._zombies.append(t)
+            self.n_timeouts += 1
+        return TrialResult(
+            cost_s=float("inf"), crashed=True, failure=FAILURE_TIMEOUT,
+            error=f"trial exceeded deadline of {self.trial_timeout_s}s "
+                  "(evaluation abandoned)")
+
+    def _reap_zombies(self) -> None:
+        """Drop abandoned trial threads that have since finished.  Never
+        blocks: a still-wedged zombie just stays in the pool (it is a
+        daemon thread, so it cannot outlive the process)."""
+        with self._lock:
+            self._zombies = [t for t in self._zombies if t.is_alive()]
 
     def map(self, wl: Workload, configs: Sequence[TunableConfig]
             ) -> List[TrialResult]:
@@ -111,6 +238,7 @@ class SweepExecutor:
     def shutdown(self, wait: bool = True,
                  cancel_futures: bool = False) -> None:
         self._pool.shutdown(wait=wait, cancel_futures=cancel_futures)
+        self._reap_zombies()
 
     def __enter__(self) -> "SweepExecutor":
         return self
@@ -122,7 +250,11 @@ class SweepExecutor:
         with self._lock:
             return {"submitted": self.n_submitted, "evals": self.n_evals,
                     "deduped": self.n_submitted - self.n_evals,
-                    "workers": self.max_workers}
+                    "workers": self.max_workers,
+                    "retries": self.n_retries,
+                    "timeouts": self.n_timeouts,
+                    "quarantined": self.n_quarantined,
+                    "zombies": len(self._zombies)}
 
 
 def run_trials(runner, candidates: Sequence[Tuple[TunableConfig, str,

@@ -52,13 +52,20 @@ semantics of the shared directory: atomic ``O_CREAT | O_EXCL`` create
 (lease claims and steal locks — needs NFSv4+ if the mount is NFS; v2/v3
 O_EXCL is not atomic), atomic same-directory ``rename`` (checkpoints,
 compile-cache entries, heartbeats), and single-``write`` ``O_APPEND``
-appends (the trial history — local filesystems only; NFS may interleave
-bytes across hosts, which the torn-tolerant history reader survives by
-*dropping* the damaged lines, silently losing those records from
-warm-start retrieval).  Local disks and single-host multi-process use
-get all three; for multi-host NFS campaigns the leases and checkpoints
-are sound on v4+, and an object-store/rsync-backed history is the
-roadmap item.
+appends (the trial history and the quarantine ledger — local
+filesystems only; NFS may interleave bytes across hosts, which the
+torn-tolerant readers survive by *dropping* the damaged lines —
+acceptable for the history, where a lost line only weakens warm-start
+retrieval, but NOT for ``quarantine.jsonl``, where a dropped intent
+gives a worker-killing config a free extra evaluation).  Durability is
+a fourth, quarantine-specific need: intent records must survive the
+very worker crash they are recording, so the ledger (and the lease
+heartbeats + STOP sentinels) is written with ``durable=True``
+(``fsync`` before publish + parent-directory fsync,
+core/fsutil.py).  Local disks and single-host multi-process use get
+all four; for multi-host NFS campaigns the leases and checkpoints are
+sound on v4+, and an object-store/rsync-backed history + quarantine
+ledger is the roadmap item.
 
 The coordinator passes workers an ``--evaluator module:factory``
 dotted-path spec, so benchmarks and tests can swap the real
@@ -268,9 +275,11 @@ class LeaseBoard:
                        f"now held by "
                        f"{held.worker if held else 'nobody'}"))
             lease.state.heartbeat_at = time.time()
+            # durable: a heartbeat that evaporates in a host crash reads
+            # as a stale lease and triggers a false steal
             atomic_publish(self._path(cell),
                            json.dumps(lease.state.as_dict()),
-                           prefix=".hb.")
+                           prefix=".hb.", durable=True)
             return True
         finally:
             self._unlock(cell)
@@ -430,7 +439,10 @@ class FabricWorker:
                  watch: bool = False,
                  started_at: Optional[float] = None,
                  ready_file: Optional[pathlib.Path] = None,
-                 go_file: Optional[pathlib.Path] = None):
+                 go_file: Optional[pathlib.Path] = None,
+                 trial_timeout_s: Optional[float] = None,
+                 max_retries: int = 0,
+                 strike_threshold: Optional[int] = None):
         if not cells and not watch:
             raise ValueError("fabric worker needs at least one cell "
                              "(or watch mode: claim intake submissions)")
@@ -462,6 +474,16 @@ class FabricWorker:
             else time.time()
         self.ready_file = ready_file
         self.go_file = go_file
+        self.trial_timeout_s = trial_timeout_s
+        self.max_retries = int(max_retries)
+        # one fleet-shared evaluation-intent ledger (core/quarantine.py)
+        # over the campaign directory: every worker brackets trials with
+        # intent/completion records and skips quarantined configs
+        from repro.core.quarantine import Quarantine
+        self.quarantine = Quarantine(
+            self.dir, worker=self.board.worker_id,
+            **({"strike_threshold": strike_threshold}
+               if strike_threshold is not None else {}))
         # the completion probe: a Campaign that never runs, only asks
         # cell_done() — full signature validation (threshold, baseline,
         # walk, warm-start seeds), so a done checkpoint from different
@@ -475,6 +497,7 @@ class FabricWorker:
             warm_start=self.warm_start,
             warm_start_cells=self.warm_start_cells,
             warm_start_per_cell=self.warm_start_per_cell,
+            quarantine=False,            # probe never evaluates
             intake=True)    # probe only; also admits the no-seed case
 
     # ------------------------------------------------------------ cells
@@ -491,7 +514,10 @@ class FabricWorker:
             warm_start=self.warm_start,
             warm_start_cells=self.warm_start_cells,
             warm_start_per_cell=self.warm_start_per_cell,
-            max_workers=self.max_workers)
+            max_workers=self.max_workers,
+            trial_timeout_s=self.trial_timeout_s,
+            max_retries=self.max_retries,
+            quarantine=self.quarantine)
         with Heartbeat(lease) as hb:
             camp.run()
         stats = dict(camp.last_stats)
@@ -592,6 +618,9 @@ def worker_argv(cells: Sequence[CellSpec], directory: pathlib.Path, *,
                 worker_id: Optional[str] = None,
                 ready_file: Optional[pathlib.Path] = None,
                 go_file: Optional[pathlib.Path] = None,
+                trial_timeout_s: Optional[float] = None,
+                max_retries: int = 0,
+                strike_threshold: Optional[int] = None,
                 extra: Sequence[str] = ()) -> List[str]:
     """The ``launch/tune.py --worker`` command line for one worker."""
     argv = [sys.executable, "-m", "repro.launch.tune", "--worker",
@@ -605,6 +634,12 @@ def worker_argv(cells: Sequence[CellSpec], directory: pathlib.Path, *,
         argv += ["--evaluator", evaluator_spec]
     if warm_start:
         argv += ["--warm-start"]
+    if trial_timeout_s is not None:
+        argv += ["--trial-timeout", str(trial_timeout_s)]
+    if max_retries:
+        argv += ["--max-retries", str(max_retries)]
+    if strike_threshold is not None:
+        argv += ["--strike-threshold", str(strike_threshold)]
     if prioritize != "arch":
         argv += ["--prioritize", prioritize]
     if watch:
@@ -650,6 +685,9 @@ def run_coordinator(cells: Sequence[CellSpec],
                     warm_start: bool = False,
                     prioritize: str = "arch",
                     watch: bool = False,
+                    trial_timeout_s: Optional[float] = None,
+                    max_retries: int = 0,
+                    strike_threshold: Optional[int] = None,
                     extra_args: Sequence[str] = (),
                     log_dir: Optional[pathlib.Path] = None,
                     timeout_s: Optional[float] = None) -> Dict[str, Any]:
@@ -686,6 +724,8 @@ def run_coordinator(cells: Sequence[CellSpec],
             threshold=threshold, warm_start=warm_start,
             prioritize=prioritize, watch=watch,
             worker_id=f"w{i}-{uuid.uuid4().hex[:6]}",
+            trial_timeout_s=trial_timeout_s, max_retries=max_retries,
+            strike_threshold=strike_threshold,
             extra=extra_args, log_path=log))
     rcs = [p.wait(timeout=timeout_s) for p in procs]
     wall = time.time() - t0
@@ -709,7 +749,7 @@ def run_coordinator(cells: Sequence[CellSpec],
                      threshold=threshold,
                      evaluator=lambda wl, rt: None,  # probe never runs
                      checkpoint_dir=directory, warm_start=warm_start,
-                     intake=True)
+                     quarantine=False, intake=True)
     reports: Dict[str, Any] = {}
     incomplete = []
     for cell in all_cells:

@@ -35,11 +35,11 @@ from __future__ import annotations
 
 import functools
 import json
-import os
 import pathlib
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.core.fsutil import append_jsonl
 from repro.core.params import TunableConfig
 from repro.core.space import SPACE
 
@@ -147,25 +147,10 @@ class TrialHistory:
 
     # ------------------------------------------------------- appending
     def append(self, record: Dict[str, Any]) -> None:
-        line = json.dumps(record, sort_keys=True, default=str) + "\n"
-        self.path.parent.mkdir(parents=True, exist_ok=True)
-        fd = os.open(self.path, os.O_RDWR | os.O_CREAT | os.O_APPEND,
-                     0o644)
-        try:
-            # self-heal a torn tail (crashed non-atomic writer): never
-            # concatenate a new record onto an unterminated line.  Two
-            # appenders racing here at worst emit an empty line, which
-            # readers skip.
-            try:
-                os.lseek(fd, -1, os.SEEK_END)
-                torn = os.read(fd, 1) != b"\n"
-            except OSError:
-                torn = False             # empty file
-            if torn:
-                line = "\n" + line
-            os.write(fd, line.encode())
-        finally:
-            os.close(fd)
+        # one O_APPEND line with torn-tail self-healing; the idiom
+        # lives in core/fsutil.append_jsonl (shared with the quarantine
+        # ledger, core/quarantine.py)
+        append_jsonl(self.path, record)
 
     def record_trial(self, workload, strategy: str, rt: TunableConfig,
                      name: str, result, delta: Optional[Dict] = None
@@ -184,6 +169,8 @@ class TrialHistory:
             "config": rt.as_dict(),
             "cost_s": result.cost_s,
             "crashed": bool(result.crashed),
+            "failure": getattr(result, "failure", ""),
+            "retries": int(getattr(result, "retries", 0)),
             "compiles": result.compiles,
             "compile_s": result.compile_s,
             "cached": bool(result.cached),

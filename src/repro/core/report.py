@@ -83,24 +83,48 @@ def tuning_markdown(rep: TuningReport) -> str:
     return "\n".join(out)
 
 
+def _health_cell(h: Optional[Dict]) -> str:
+    """Compact per-cell failure/retry/quarantine summary (one table
+    cell of :func:`queue_markdown`)."""
+    if not h:
+        return "—"
+    parts = [f"{n} {kind}"
+             for kind, n in sorted((h.get("failures") or {}).items())]
+    if h.get("retries"):
+        parts.append(f"{h['retries']} retried")
+    if h.get("quarantined"):
+        parts.append(f"{h['quarantined']} quarantined")
+    if h.get("degraded"):
+        parts.append("DEGRADED")
+    return "; ".join(parts) or "—"
+
+
 def queue_markdown(queue: Dict) -> str:
     """Admission / priority view of an online campaign (the
-    ``Campaign.last_stats["queue"]`` snapshot, core/schedule.py):
-    one row per admitted cell — how it entered (seed vs intake), the
-    priority score it was scheduled under (``—`` = unknown →
-    explore-first) and its final queue state."""
+    ``Campaign.last_stats["queue"]`` snapshot, core/schedule.py, or a
+    ``queue_status`` dict): one row per admitted cell — how it entered
+    (seed vs intake), the priority score it was scheduled under (``—``
+    = unknown → explore-first) and its final queue state.  When any
+    cell carries failure accounting (``health``, core/campaign.py), a
+    health column is added so an operator sees a degrading campaign
+    before it finishes."""
+    cells = queue.get("cells", [])
+    with_health = any(d.get("health") for d in cells)
     lines = [f"### Queue: {queue.get('admitted', 0)} cells admitted "
              f"({queue.get('from_intake', 0)} via intake), "
              f"prioritize={queue.get('prioritize', 'arch')}",
              "",
-             "| cell | admitted | priority | state |",
-             "|---|---|---|---|"]
-    for d in queue.get("cells", []):
+             "| cell | admitted | priority | state |"
+             + (" health |" if with_health else ""),
+             "|---|---|---|---|" + ("---|" if with_health else "")]
+    for d in cells:
         score = d.get("score")
-        lines.append(
-            f"| {d['cell']} | {d.get('source', '?')} | "
-            f"{'—' if score is None else f'{score:.2f}'} | "
-            f"{d.get('state', '?')} |")
+        row = (f"| {d['cell']} | {d.get('source', '?')} | "
+               f"{'—' if score is None else f'{score:.2f}'} | "
+               f"{d.get('state', '?')} |")
+        if with_health:
+            row += f" {_health_cell(d.get('health'))} |"
+        lines.append(row)
     return "\n".join(lines)
 
 
@@ -154,6 +178,12 @@ def campaign_markdown(reports: Dict[str, TuningReport],
               f"* geometric-mean speedup: x{gmean:.2f}",
               "",
               "Each cell: `x<speedup> (<trials used>)`."]
+    degraded = sorted(d["cell"] for d in (queue or {}).get("cells", [])
+                      if (d.get("health") or {}).get("degraded"))
+    if degraded:                         # fault-free output unchanged
+        lines.insert(-2, f"* degraded cells (partial results under "
+                         f"faults): {len(degraded)} — "
+                         + ", ".join(f"`{c}`" for c in degraded))
     if queue is not None:
         lines += ["", queue_markdown(queue)]
     return "\n".join(lines)

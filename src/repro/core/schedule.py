@@ -157,8 +157,11 @@ def request_stop(directory: pathlib.Path) -> pathlib.Path:
     inbox = intake_dir(directory)
     inbox.mkdir(parents=True, exist_ok=True)
     path = inbox / STOP_FILENAME
+    # durable: a STOP that evaporates in a host crash leaves watch
+    # workers draining a fabric the operator believes is stopping
     atomic_publish(path, json.dumps(
-        {"v": 1, "requested_at": round(time.time(), 6)}))
+        {"v": 1, "requested_at": round(time.time(), 6)}),
+        durable=True)
     return path
 
 
@@ -450,7 +453,11 @@ def queue_status(directory: pathlib.Path, strategy: str = "tree",
             # discovery only — done-ness is judged below by the one
             # shared criterion (checkpoint_done), so --status can never
             # call a cell done that a worker would re-tune
-            note(d["cell"])
+            entry = note(d["cell"])
+            if isinstance(d.get("health"), dict):
+                # per-cell failure/retry/quarantine counts so a
+                # degrading campaign is visible before it finishes
+                entry["health"] = d["health"]
     board = LeaseBoard(directory)
     leases, now = [], time.time()
     for st in board.held():
@@ -475,7 +482,7 @@ def queue_status(directory: pathlib.Path, strategy: str = "tree",
     # can't tell a live drain from a stale leftover a newer watch
     # session is (correctly) ignoring
     stop_ts = _stop_requested_at(intake_dir(directory) / STOP_FILENAME)
-    return {
+    out = {
         "dir": str(directory),
         "strategy": strategy,
         "depth": {"pending": len(pending), "claimed": len(claimed),
@@ -485,3 +492,8 @@ def queue_status(directory: pathlib.Path, strategy: str = "tree",
         "cells": sorted(known.values(), key=lambda d: d["cell"]),
         "leases": leases,
     }
+    from repro.core.quarantine import Quarantine
+    q = Quarantine(directory)
+    if q.path.exists():
+        out["quarantine"] = q.summary()
+    return out

@@ -47,6 +47,43 @@ from repro.core.params import TunableConfig
 
 CACHE_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "trials"
 
+# ------------------------------------------------------- failure taxonomy
+# Every crashed trial is classified so the layers above can react
+# differently (ISSUE 6): deterministic failures stay memoized and scored
+# (the config is genuinely bad), transient ones are retryable, timeouts
+# come from the executor deadline, and worker-death is assigned post hoc
+# by the quarantine ledger (the evaluation never returned at all).
+FAILURE_DETERMINISTIC = "deterministic"
+FAILURE_TRANSIENT = "transient"
+FAILURE_TIMEOUT = "timeout"
+FAILURE_WORKER_DEATH = "worker-death"
+
+#: Environment faults that may succeed on retry.  TimeoutError and
+#: ConnectionError are OSError subclasses, so disk/NFS hiccups, host
+#: OOM and socket drops all land here; everything else (shape errors,
+#: HBM overflow, XLA lowering failures) is deterministic per program.
+_TRANSIENT_TYPES = (OSError, MemoryError)
+
+
+def classify_exception(e: BaseException) -> str:
+    """Map an evaluator exception to a failure class.  An exception that
+    already carries a ``.failure`` attribute (e.g. :class:`TrialError`
+    re-raised from a memoized entry) keeps its class."""
+    tagged = getattr(e, "failure", "")
+    if tagged:
+        return tagged
+    if isinstance(e, _TRANSIENT_TYPES):
+        return FAILURE_TRANSIENT
+    return FAILURE_DETERMINISTIC
+
+
+class TrialError(RuntimeError):
+    """An evaluator failure that carries its classification."""
+
+    def __init__(self, message: str, failure: str = FAILURE_DETERMINISTIC):
+        super().__init__(message)
+        self.failure = failure
+
 
 @dataclasses.dataclass
 class TrialResult:
@@ -59,6 +96,12 @@ class TrialResult:
     compile_s: float = 0.0
     cached: bool = False
     compiles: int = 0              # fresh XLA compiles this trial paid for
+    failure: str = ""              # taxonomy class when crashed ("" if not)
+    retries: int = 0               # transient retries this result absorbed
+
+    @property
+    def retryable(self) -> bool:
+        return self.crashed and self.failure == FAILURE_TRANSIENT
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -91,9 +134,12 @@ class CompileCache:
     under ``results/trials/compiles``.  Keys are opaque strings built
     from (cell, calibration point, scan/unroll variant, compile
     projection).  Values are small JSON dicts — either a serialized
-    :class:`costmodel.Roofline` or ``{"error": ...}`` for a program that
-    failed to build/compile (failures are deterministic per program, so
-    they are memoized exactly like successes).
+    :class:`costmodel.Roofline` or ``{"error": ..., "failure": ...}``
+    for a program that failed to build/compile.  Only *deterministic*
+    failures are memoized like successes; a transient fault (classified
+    via :func:`classify_exception` — e.g. an ``OSError`` from the disk
+    cache or a host OOM under a parallel sweep) is returned to its
+    waiters but never remembered, so the next lookup rebuilds.
 
     ``get_or_build`` is thread-safe with in-flight deduplication: when N
     executor threads ask for the same key, one runs the builder and the
@@ -177,15 +223,17 @@ class CompileCache:
             ev.wait()       # another thread is compiling this program
         try:
             val = builder()
-            # failures are memoized in-memory only: build errors are
-            # deterministic per program within a run, but persisting
-            # them would let one transient fault (e.g. host OOM under a
-            # parallel sweep) poison every config sharing the key across
-            # future processes
+            # memoization policy by failure class: successes go to both
+            # levels; deterministic build errors are memoized in-memory
+            # only (persisting them would outlive the run that observed
+            # them); transient faults are memoized NOWHERE — the caller
+            # sees this one failure, and the next lookup of the same key
+            # rebuilds instead of replaying a stale environment hiccup
             if self.use_disk and "error" not in val:
                 self._disk_put(key, val)
-            with self._lock:
-                self._mem_put(key, val)
+            if val.get("failure") != FAILURE_TRANSIENT:
+                with self._lock:
+                    self._mem_put(key, val)
             return val
         finally:
             with self._lock:
@@ -262,8 +310,13 @@ class RooflineEvaluator:
                                        wl.multi_pod)
                 return {"roofline": rl.as_dict(),
                         "compile_s": round(time.time() - t0, 2)}
-            except Exception as e:      # deterministic per program: memoize
+            except Exception as e:
+                # classify BEFORE memoizing: only deterministic program
+                # failures may be remembered (the cache skips transient
+                # entries), so an OSError from the disk cache is not
+                # permanently recorded as a crashed program
                 return {"error": f"{type(e).__name__}: {e}"[:500],
+                        "failure": classify_exception(e),
                         "compile_s": round(time.time() - t0, 2)}
 
         entry = self.compile_cache.get_or_build(key, build)
@@ -275,7 +328,9 @@ class RooflineEvaluator:
             with self._count_lock:
                 self.total_compiles += 1
         if "error" in entry:
-            raise RuntimeError(entry["error"])
+            raise TrialError(entry["error"],
+                             failure=entry.get("failure",
+                                               FAILURE_DETERMINISTIC))
         return costmodel.roofline_from_dict(entry["roofline"])
 
     def _trial_acct(self) -> Dict[str, Any]:
@@ -328,10 +383,15 @@ class RooflineEvaluator:
             fits = peak is None or peak <= self.hbm_limit
             res = TrialResult(cost_s=rl.total_s, crashed=not fits,
                               roofline=rl.as_dict(), peak_bytes=peak,
-                              fits_hbm=fits)
+                              fits_hbm=fits,
+                              failure="" if fits else FAILURE_DETERMINISTIC)
         except Exception as e:
+            # TrialError already carries the stored "TypeName: msg"
+            err = str(e) if isinstance(e, TrialError) \
+                else f"{type(e).__name__}: {e}"
             res = TrialResult(cost_s=float("inf"), crashed=True,
-                              error=f"{type(e).__name__}: {e}"[:500])
+                              error=err[:500],
+                              failure=classify_exception(e))
         res.compiles = acct["compiles"]
         res.compile_s = round(acct["compile_s"], 1)
         # "served from cache" requires the trial to have actually reached
@@ -371,7 +431,8 @@ class WallClockEvaluator:
             return TrialResult(cost_s=float(np.median(ts)))
         except Exception as e:
             return TrialResult(cost_s=float("inf"), crashed=True,
-                               error=f"{type(e).__name__}: {e}"[:500])
+                               error=f"{type(e).__name__}: {e}"[:500],
+                               failure=classify_exception(e))
 
 
 @dataclasses.dataclass

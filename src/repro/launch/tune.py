@@ -47,9 +47,19 @@ Online mode (core/schedule.py) turns a campaign/fabric into a tuning
   * ``--watch`` — fabric workers idle and keep re-scanning the intake
     once the board is drained, instead of exiting;
   * ``--status`` — the operator's queue view: pending/claimed/done
-    cells, intake submissions and the live lease board;
+    cells, intake submissions, the live lease board, and per-cell
+    failure/retry/quarantine counts (a degrading campaign is visible
+    before it finishes);
   * ``--stop`` — drop the STOP sentinel: ``--watch`` workers exit once
     everything admitted is done.
+
+Trial hardening (core/executor.py + core/quarantine.py) keeps faults
+from wasting the ≤10-run budget: ``--trial-timeout`` bounds every
+evaluation (a hang becomes a ``timeout`` failure instead of wedging
+the sweep), ``--max-retries`` re-runs transient faults with backoff,
+and the always-on quarantine ledger stops a worker-killing config from
+crash-looping the fabric (``--strike-threshold`` evaluations fleet-wide,
+then it is skipped everywhere).
 
 MUST set the placeholder device count before ANY jax-touching import.
 """
@@ -176,7 +186,9 @@ def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
                   fresh: bool = False, checkpoint_dir=None,
                   strategy: str = "tree", strategy_options=None,
                   evaluator=None, warm_start: bool = False,
-                  prioritize: str = "arch", intake: bool = True):
+                  prioritize: str = "arch", intake: bool = True,
+                  trial_timeout_s=None, max_retries: int = 0,
+                  strike_threshold=None):
     """Run a strategy over a batch of cells in one concurrent campaign;
     returns ``{cell_key: report}`` plus the campaign's throughput
     stats.  Non-tree strategies checkpoint under a per-strategy
@@ -192,6 +204,8 @@ def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
         cells, strategy=strategy, strategy_options=strategy_options,
         threshold=threshold, checkpoint_dir=ckpt, evaluator=evaluator,
         warm_start=warm_start, prioritize=prioritize, intake=intake,
+        trial_timeout_s=trial_timeout_s, max_retries=max_retries,
+        strike_threshold=strike_threshold,
         baseline_factory=lambda spec: _baseline(baseline_overrides))
     reports = camp.run()
     for rep in reports.values():
@@ -215,7 +229,10 @@ def run_worker(args, cells, options) -> int:
         started_at=_START_TS,
         ready_file=pathlib.Path(args.ready_file)
         if args.ready_file else None,
-        go_file=pathlib.Path(args.go_file) if args.go_file else None)
+        go_file=pathlib.Path(args.go_file) if args.go_file else None,
+        trial_timeout_s=args.trial_timeout,
+        max_retries=args.max_retries,
+        strike_threshold=args.strike_threshold)
     stats = worker.run()
     print(json.dumps(stats, indent=1))
     return 0
@@ -235,6 +252,9 @@ def run_fabric(args, cells, options) -> int:
         evaluator_spec=args.evaluator, ttl_s=args.worker_ttl,
         threshold=args.threshold, warm_start=args.warm_start,
         prioritize=args.prioritize, watch=args.watch,
+        trial_timeout_s=args.trial_timeout,
+        max_retries=args.max_retries,
+        strike_threshold=args.strike_threshold,
         extra_args=_worker_passthrough(args),
         log_dir=ckpt / "worker_logs")
     reports, stats = out["reports"], out["stats"]
@@ -285,7 +305,19 @@ def run_status(args, cells) -> int:
         state = "done" if d["done"] else (
             f"claimed by {d['claimed_by']}" if "claimed_by" in d
             else "pending")
-        print(f"  {d['cell']:<40} {state:<28} ({d['source']})")
+        line = f"  {d['cell']:<40} {state:<28} ({d['source']})"
+        health = d.get("health")
+        if health:
+            bits = [f"{n} {kind}" for kind, n in
+                    sorted((health.get("failures") or {}).items())]
+            if health.get("retries"):
+                bits.append(f"{health['retries']} retried")
+            if health.get("quarantined"):
+                bits.append(f"{health['quarantined']} quarantined")
+            if health.get("degraded"):
+                bits.append("DEGRADED")
+            line += "  [" + "; ".join(bits) + "]"
+        print(line)
     if status["leases"]:
         print("leases:")
         for lease in status["leases"]:
@@ -295,6 +327,16 @@ def run_status(args, cells) -> int:
                   f"{lease['ttl_s']}s [{flag}]")
     else:
         print("leases: (none held)")
+    quarantine = status.get("quarantine")
+    if quarantine:
+        print(f"quarantine:   {quarantine['intents']} intents / "
+              f"{quarantine['completions']} completions, "
+              f"{len(quarantine['quarantined'])} config(s) quarantined "
+              f"(threshold {quarantine['strike_threshold']})")
+        for key, n in quarantine["strikes"].items():
+            mark = " QUARANTINED" if key in quarantine["quarantined"] \
+                else ""
+            print(f"  config {key}: {n} strike(s){mark}")
     return 0
 
 
@@ -410,6 +452,24 @@ def main(argv=None) -> int:
     fab.add_argument("--go-file",
                      help="wait for this file before claiming cells "
                           "(benchmark start barrier)")
+    hard = ap.add_argument_group(
+        "trial hardening (core/executor.py + core/quarantine.py)")
+    hard.add_argument("--trial-timeout", type=float, default=None,
+                      metavar="SECONDS",
+                      help="per-trial evaluation deadline: a trial "
+                           "exceeding it is recorded as a timeout "
+                           "failure and abandoned (the sweep never "
+                           "wedges on a hanging compile); default: no "
+                           "deadline")
+    hard.add_argument("--max-retries", type=int, default=0,
+                      help="re-evaluate transient failures (OSError/"
+                           "MemoryError class faults) up to N times "
+                           "with exponential backoff + jitter "
+                           "(default 0: no retries)")
+    hard.add_argument("--strike-threshold", type=int, default=None,
+                      help="quarantine a config fleet-wide after this "
+                           "many strikes (orphaned evaluation intents "
+                           "from dead workers, or timeouts); default 3")
     args = ap.parse_args(argv)
 
     if args.sweep_knobs and args.strategy != "sensitivity":
@@ -428,7 +488,11 @@ def main(argv=None) -> int:
             ("--status", args.status), ("--worker", args.worker),
             ("--workers", args.workers),
             ("--coordinate", args.coordinate),
-            ("--warm-start", args.warm_start)) if on]
+            ("--warm-start", args.warm_start),
+            ("--trial-timeout", args.trial_timeout is not None),
+            ("--max-retries", bool(args.max_retries)),
+            ("--strike-threshold",
+             args.strike_threshold is not None)) if on]
         if args.add_cells and args.stop:
             ap.error("--add-cells and --stop are separate actions; "
                      "run them as two invocations")
@@ -446,7 +510,11 @@ def main(argv=None) -> int:
             ("--fresh", args.fresh), ("--watch", args.watch),
             ("--worker", args.worker), ("--workers", args.workers),
             ("--coordinate", args.coordinate),
-            ("--warm-start", args.warm_start)) if on]
+            ("--warm-start", args.warm_start),
+            ("--trial-timeout", args.trial_timeout is not None),
+            ("--max-retries", bool(args.max_retries)),
+            ("--strike-threshold",
+             args.strike_threshold is not None)) if on]
         if ignored:
             ap.error("--status is a read-only action; "
                      f"{', '.join(ignored)} would be ignored — "
@@ -487,7 +555,11 @@ def main(argv=None) -> int:
                                        strategy=args.strategy,
                                        strategy_options=options,
                                        warm_start=args.warm_start,
-                                       prioritize=args.prioritize)
+                                       prioritize=args.prioritize,
+                                       trial_timeout_s=args.trial_timeout,
+                                       max_retries=args.max_retries,
+                                       strike_threshold=
+                                       args.strike_threshold)
         print(report.strategy_markdown(reports,
                                        queue=stats.get("queue")))
         print(f"\n[{stats['strategy']}] {stats['cells']} cells in "

@@ -645,3 +645,135 @@ def test_fresh_rejected_outside_campaign_mode(capsys):
     with pytest.raises(SystemExit):
         tune.main(["--worker", "--cells", "smollm-135m:train_4k",
                    "--fresh"])
+
+
+# ------------------------------------------------- hardened campaigns
+def test_fault_free_hardened_campaign_bit_identical(tmp_path):
+    """Regression (acceptance): turning every hardening layer on costs
+    nothing on a fault-free campaign — reports, logs, budgets and
+    checkpoints stay bit-identical to the unhardened run, and the
+    stats payload carries no health block."""
+    from repro.core.quarantine import Quarantine
+    camp = Campaign(CELLS, evaluator=surface,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path, max_workers=4,
+                    trial_timeout_s=60.0, max_retries=2)
+    reports = camp.run()
+    ref = sequential_reference()
+    for key, rep in reports.items():
+        assert rep.__dict__ == ref[key].__dict__
+    assert "health" not in camp.last_stats
+    assert "degraded_cells" not in camp.last_stats
+    for spec in CELLS:
+        d = json.loads((tmp_path / f"{spec.key()}.json").read_text())
+        assert "health" not in d
+    # the quarantine ledger holds only clean intent/complete pairs
+    s = Quarantine(tmp_path).summary()
+    assert s["intents"] == s["completions"] > 0
+    assert s["strikes"] == {} and s["quarantined"] == []
+
+
+def test_quarantine_opt_out_writes_no_ledger(tmp_path):
+    camp = Campaign(CELLS[:1], evaluator=surface,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path, quarantine=False)
+    camp.run()
+    assert not (tmp_path / "quarantine.jsonl").exists()
+
+
+def test_hardening_requires_own_executor():
+    from repro.core.executor import SweepExecutor
+    with SweepExecutor(surface, max_workers=2) as ex:
+        with pytest.raises(ValueError, match="executor"):
+            Campaign(CELLS, evaluator=surface, executor=ex,
+                     checkpoint_dir=None, trial_timeout_s=1.0)
+
+
+def test_transient_faults_recovered_without_changing_decisions(tmp_path):
+    """Every evaluation fails once with an environment fault; with
+    retries the decisions are bit-identical to the fault-free run, the
+    accounting shows the recovery, and nothing is marked degraded."""
+    class FlakyOnce:
+        def __init__(self):
+            self.failed = set()
+            self.lock = threading.Lock()
+
+        def __call__(self, wl, rt):
+            key = (wl.key(), json.dumps(rt.as_dict(), sort_keys=True))
+            with self.lock:
+                first = key not in self.failed
+                self.failed.add(key)
+            if first:
+                raise OSError("environment hiccup")
+            return surface(wl, rt)
+
+    camp = Campaign(CELLS, evaluator=FlakyOnce(),
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path, max_workers=2,
+                    max_retries=2)
+    reports = camp.run()
+    ref = sequential_reference()
+    for key, rep in reports.items():
+        assert tuning_fingerprint(rep) == tuning_fingerprint(ref[key])
+    assert camp.last_stats["hardening"]["retries"] >= len(CELLS)
+    assert camp.last_stats["degraded_cells"] == []
+    for h in camp.last_stats["health"].values():
+        assert set(h) == {"retries"}     # recovered: no failures left
+
+
+def test_hang_bounded_and_degraded_reported(tmp_path):
+    """A wedged evaluation is abandoned at the deadline, recorded as a
+    timeout failure, and the cell completes degraded; untouched cells
+    stay bit-identical.  Checkpoints and markdown both surface it."""
+    import time as _time
+
+    def hangy(wl, rt):
+        if rt.microbatches == 2:
+            _time.sleep(0.5)
+        return surface(wl, rt)
+
+    camp = Campaign(CELLS, evaluator=hangy,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path, max_workers=2,
+                    trial_timeout_s=0.1)
+    reports = camp.run()
+    train_keys = sorted(c.key() for c in CELLS if "train" in c.shape)
+    health = camp.last_stats["health"]
+    for k in train_keys:
+        assert health[k]["failures"]["timeout"] >= 1
+        assert health[k]["degraded"]
+    assert camp.last_stats["degraded_cells"] == train_keys
+    assert camp.last_stats["hardening"]["timeouts"] >= 2
+    ref = sequential_reference()
+    for key in reports:
+        if key not in train_keys:
+            assert tuning_fingerprint(reports[key]) \
+                == tuning_fingerprint(ref[key])
+    d = json.loads((tmp_path / f"{train_keys[0]}.json").read_text())
+    assert d["health"]["degraded"]
+    md = report.campaign_markdown(reports, queue=camp.last_stats["queue"])
+    assert "degraded cells" in md and "DEGRADED" in md
+    assert "timeout" in md
+
+
+def test_quarantined_config_skipped_fleet_wide(tmp_path):
+    """A config at the strike threshold is never evaluated again — the
+    propose path scores it as a crash in every cell of the campaign."""
+    from repro.core.quarantine import Quarantine, config_key
+    bf16 = baseline_factory(None).replace(compute_dtype="bfloat16")
+    Quarantine(tmp_path).strike("a1", config_key(bf16), CELLS[0].key())
+    counting = CountingSurface()
+    camp = Campaign(CELLS[:2], evaluator=counting,
+                    baseline_factory=baseline_factory,
+                    checkpoint_dir=tmp_path, strike_threshold=1)
+    reports = camp.run()
+    evaluated = {json.dumps(c, sort_keys=True) for _, c in counting.calls}
+    assert json.dumps(bf16.as_dict(), sort_keys=True) not in evaluated
+    health = camp.last_stats["health"]
+    for c in CELLS[:2]:
+        assert health[c.key()]["quarantined"] >= 1
+        assert health[c.key()]["degraded"]
+    skipped = [e for e in reports[CELLS[0].key()].log
+               if (e["result"].get("error") or "")
+               .startswith("quarantined")]
+    assert skipped and skipped[0]["result"]["crashed"]

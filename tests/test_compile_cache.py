@@ -307,3 +307,88 @@ def test_cached_vs_uncached_costs_identical(tmp_path, kind):
     # analytic-only flips were free
     assert engine.total_compiles <= 4 * len(
         {rt.compile_key(wl.shp.kind, wl.cfg.family) for rt in sweep})
+
+
+# ------------------------------------------- failure-class memoization
+def test_cache_transient_entry_never_memoized(tmp_path):
+    """Regression: an environment hiccup during a build used to be
+    memoized exactly like a deterministic program failure, permanently
+    remembering the key as crashed.  Transient entries must be returned
+    to their waiters but never cached at either level."""
+    from repro.core.trial import FAILURE_DETERMINISTIC, FAILURE_TRANSIENT
+    cc = CompileCache(directory=tmp_path)
+    calls = []
+
+    def flaky_build():
+        calls.append(1)
+        return {"error": "OSError: NFS hiccup",
+                "failure": FAILURE_TRANSIENT}
+
+    assert cc.get_or_build("k", flaky_build)["failure"] \
+        == FAILURE_TRANSIENT
+    assert cc.get_or_build("k", flaky_build)["failure"] \
+        == FAILURE_TRANSIENT
+    assert len(calls) == 2                  # rebuilt, not replayed
+    assert not (tmp_path / "k.json").exists()
+    # deterministic build errors ARE memoized — in-memory only (they
+    # must not outlive the run that observed them)
+    det = []
+
+    def det_build():
+        det.append(1)
+        return {"error": "ValueError: bad shape",
+                "failure": FAILURE_DETERMINISTIC}
+
+    cc.get_or_build("d", det_build)
+    cc.get_or_build("d", det_build)
+    assert len(det) == 1
+    assert not (tmp_path / "d.json").exists()
+
+
+def test_transient_compile_fault_not_memoized_by_evaluator(
+        tmp_path, monkeypatch):
+    """Regression (satellite): one OSError during a calibration compile
+    crashes that trial as *transient*, and the next evaluation of the
+    same config rebuilds and succeeds instead of replaying the fault."""
+    from repro.core.trial import FAILURE_TRANSIENT
+    wl = ReducedWorkload("smollm-135m", "train")
+    ev = RooflineEvaluator(mesh_factory=_host_mesh_factory,
+                           compile_cache=CompileCache(directory=tmp_path))
+    real = ev._roofline_at
+    fails = []
+
+    def flaky(*a, **k):
+        if not fails:
+            fails.append(1)
+            raise OSError("disk cache hiccup")
+        return real(*a, **k)
+
+    monkeypatch.setattr(ev, "_roofline_at", flaky)
+    first = ev(wl, default_config())
+    assert first.crashed and first.failure == FAILURE_TRANSIENT
+    assert "disk cache hiccup" in first.error
+    second = ev(wl, default_config())
+    assert not second.crashed and second.compiles > 0
+
+
+def test_deterministic_compile_failure_stays_memoized(
+        tmp_path, monkeypatch):
+    """The complement: a program that deterministically fails to build
+    is remembered — repeat trials are scored from the memo for free."""
+    from repro.core.trial import FAILURE_DETERMINISTIC
+    wl = ReducedWorkload("smollm-135m", "train")
+    ev = RooflineEvaluator(mesh_factory=_host_mesh_factory,
+                           compile_cache=CompileCache(directory=tmp_path))
+    calls = []
+
+    def broken(*a, **k):
+        calls.append(1)
+        raise RuntimeError("bad lowering")
+
+    monkeypatch.setattr(ev, "_roofline_at", broken)
+    first = ev(wl, default_config())
+    second = ev(wl, default_config())
+    assert first.crashed and first.failure == FAILURE_DETERMINISTIC
+    assert second.crashed and "bad lowering" in second.error
+    assert len(calls) == 1                  # served from the memo
+    assert second.compiles == 0 and second.cached

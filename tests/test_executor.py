@@ -146,3 +146,147 @@ def test_tree_parallel_equals_sequential(crash):
     assert par.accepted == seq.accepted
     assert [(e["name"], e["accepted"]) for e in seq.log] \
         == [(e["name"], e["accepted"]) for e in par.log]
+
+
+# ----------------------------------------------------- hardening layer
+from repro.core.quarantine import Quarantine, config_key
+from repro.core.trial import (FAILURE_DETERMINISTIC, FAILURE_TIMEOUT,
+                              FAILURE_TRANSIENT, FAILURE_WORKER_DEATH)
+
+
+class FlakyEvaluator(CountingEvaluator):
+    """Raises OSError (the transient class) for the first ``fails``
+    calls per config, then defers to the deterministic surface."""
+
+    def __init__(self, fails=1, **kw):
+        super().__init__(**kw)
+        self.fails = fails
+        self.failed = {}
+
+    def __call__(self, wl, rt):
+        with self.lock:
+            blob = tuple(sorted(rt.as_dict().items()))
+            n = self.failed.get(blob, 0)
+            if n < self.fails:
+                self.failed[blob] = n + 1
+                self.calls.append(rt)
+                raise OSError(f"flaky ({n + 1}/{self.fails})")
+        return super().__call__(wl, rt)
+
+
+def test_deadline_times_out_wedged_trial():
+    ev = CountingEvaluator(delay=0.5)
+    with SweepExecutor(ev, max_workers=2, trial_timeout_s=0.05) as ex:
+        res = ex.submit(WL, default_config()).result()
+    assert res.crashed and res.cost_s == float("inf")
+    assert res.failure == FAILURE_TIMEOUT
+    assert "deadline" in res.error
+    assert ex.stats()["timeouts"] == 1
+
+
+def test_deadline_leaves_fast_trials_untouched():
+    ev = CountingEvaluator()
+    with SweepExecutor(ev, max_workers=2, trial_timeout_s=5.0) as ex:
+        res = ex.submit(WL, default_config()).result()
+    assert not res.crashed and res.cost_s == 107.0
+    assert ex.stats()["timeouts"] == 0
+
+
+def test_zombie_thread_reaped_after_it_unwedges():
+    def ev(wl, rt):
+        if rt.microbatches == 2:
+            time.sleep(0.2)
+        return TrialResult(cost_s=1.0)
+
+    with SweepExecutor(ev, max_workers=2, trial_timeout_s=0.05) as ex:
+        slow = ex.submit(WL, default_config().replace(microbatches=2))
+        assert slow.result().failure == FAILURE_TIMEOUT
+        assert ex.stats()["zombies"] == 1   # abandoned, not joined
+        time.sleep(0.3)                     # the wedged eval finishes
+        fast = ex.submit(WL, default_config()).result()  # reaps on submit
+        assert not fast.crashed
+        assert ex.stats()["zombies"] == 0
+
+
+def test_transient_failure_retried_to_success():
+    ev = FlakyEvaluator(fails=1)
+    with SweepExecutor(ev, max_workers=2, max_retries=2,
+                       retry_backoff_s=0.001) as ex:
+        res = ex.submit(WL, default_config()).result()
+    assert not res.crashed and res.cost_s == 107.0
+    assert res.retries == 1                 # accounting travels with it
+    assert ex.stats()["retries"] == 1
+    assert len(ev.calls) == 2
+
+
+def test_retry_exhaustion_keeps_transient_classification():
+    ev = FlakyEvaluator(fails=99)
+    with SweepExecutor(ev, max_workers=2, max_retries=2,
+                       retry_backoff_s=0.001) as ex:
+        res = ex.submit(WL, default_config()).result()
+    assert res.crashed and res.failure == FAILURE_TRANSIENT
+    assert res.retries == 2
+    assert len(ev.calls) == 3               # 1 attempt + 2 retries
+
+
+def test_deterministic_failure_never_retried():
+    ev = CountingEvaluator(raise_on={"microbatches": 2})
+    cfg = default_config().replace(microbatches=2)
+    with SweepExecutor(ev, max_workers=2, max_retries=3) as ex:
+        res = ex.submit(WL, cfg).result()
+    assert res.crashed and res.failure == FAILURE_DETERMINISTIC
+    assert res.retries == 0 and len(ev.calls) == 1
+    assert ex.stats()["retries"] == 0
+
+
+def test_fresh_submit_after_crash_reevaluates():
+    """A finished (crashed) future leaves the in-flight table, so a
+    later submit re-evaluates instead of dedup-ing onto the crash."""
+    ev = FlakyEvaluator(fails=1)
+    with SweepExecutor(ev, max_workers=2) as ex:    # no retries
+        bad = ex.submit(WL, default_config()).result()
+        good = ex.submit(WL, default_config()).result()
+    assert bad.crashed and bad.failure == FAILURE_TRANSIENT
+    assert not good.crashed and good.cost_s == 107.0
+
+
+def test_quarantine_brackets_every_evaluation(tmp_path):
+    q = Quarantine(tmp_path, worker="t0")
+    ev = CountingEvaluator()
+    with SweepExecutor(ev, max_workers=2, quarantine=q) as ex:
+        ex.submit(WL, default_config()).result()
+    recs = q.records()
+    assert [r["type"] for r in recs] == ["intent", "complete"]
+    assert recs[0]["key"] == config_key(default_config())
+    assert recs[0]["cell"] == WL.key()
+    assert recs[1]["crashed"] is False
+
+
+def test_quarantined_config_skipped_and_scored_as_crash(tmp_path):
+    q = Quarantine(tmp_path, strike_threshold=1)
+    cfg = default_config()
+    q.strike("att-1", config_key(cfg), WL.key())
+    ev = CountingEvaluator()
+    with SweepExecutor(ev, max_workers=2, quarantine=q) as ex:
+        res = ex.submit(WL, cfg).result()
+        other = ex.submit(WL, cfg.replace(microbatches=2)).result()
+    assert res.crashed and res.failure == FAILURE_WORKER_DEATH
+    assert res.error.startswith("quarantined")
+    assert not other.crashed                # only the struck config
+    assert ev.calls == [cfg.replace(microbatches=2)]
+    assert ex.stats()["quarantined"] == 1
+
+
+def test_timeout_strikes_toward_quarantine(tmp_path):
+    """A hang is as poisonous as a kill, just slower: K timeouts of one
+    config quarantine it, so the hang is paid at most K times."""
+    q = Quarantine(tmp_path, strike_threshold=1)
+    ev = CountingEvaluator(delay=0.3)
+    cfg = default_config()
+    with SweepExecutor(ev, max_workers=2, trial_timeout_s=0.05,
+                       quarantine=q) as ex:
+        first = ex.submit(WL, cfg).result()
+        second = ex.submit(WL, cfg).result()
+    assert first.failure == FAILURE_TIMEOUT
+    assert second.error.startswith("quarantined")
+    assert len(ev.calls) == 1               # evaluated exactly K=1 times

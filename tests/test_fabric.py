@@ -327,3 +327,96 @@ def test_checkpoint_done_checks_strategy(tmp_path):
     assert checkpoint_done(tmp_path, key, "tree")
     assert not checkpoint_done(tmp_path, key, "random")
     assert not checkpoint_done(tmp_path, "no-such-cell", "tree")
+
+
+# --------------------------------------------------- poison quarantine
+def test_worker_reaps_orphaned_intents_and_quarantines(tmp_path):
+    """A dead worker's in-flight evaluation left an orphaned intent on
+    the quarantine ledger; the next claimer of that cell strikes it on
+    activation, and at the threshold the config is skipped fleet-wide
+    (scored as a crash) instead of re-evaluated."""
+    from repro.core.quarantine import Quarantine, config_key
+    d = tmp_path / "fab"
+    d.mkdir(parents=True)
+    bf16 = baseline_factory(None).replace(compute_dtype="bfloat16")
+    dead = Quarantine(d, worker="dead-worker")
+    dead.begin(CELLS[0].key(), bf16)     # intent, never completed
+    counting = CountingSurface()
+    worker = FabricWorker(CELLS[:1], d, evaluator=counting,
+                          baseline_factory=baseline_factory,
+                          worker_id="b", strike_threshold=1)
+    stats = worker.run()
+    assert stats["cells_completed"] == [CELLS[0].key()]
+    evaluated = {json.dumps(c, sort_keys=True) for _, c in counting.calls}
+    assert json.dumps(bf16.as_dict(), sort_keys=True) not in evaluated
+    s = worker.quarantine.summary()
+    assert s["quarantined"] == [config_key(bf16)]
+    ck = json.loads((d / f"{CELLS[0].key()}.json").read_text())
+    assert ck["done"] and ck["health"]["degraded"]
+    assert ck["health"]["quarantined"] >= 1
+
+
+@pytest.mark.slow
+def test_poison_config_quarantined_across_worker_deaths(tmp_path):
+    """End-to-end with real SIGKILLs: a config that kills its worker is
+    evaluated exactly K times fleet-wide.  Worker 0 dies evaluating it;
+    worker 1 steals the expired lease, reaps the orphaned intent
+    (strike 1), re-proposes the config and dies too; worker 2 reaps
+    (strike 2 = K), quarantines it fleet-wide and completes the cell
+    degraded.  The co-scheduled control cell stays bit-identical to a
+    fault-free campaign."""
+    import os
+    import pathlib
+    from benchmarks.fabric_surface import surface_cost
+    from repro.core.fabric import spawn_worker
+    from repro.core.quarantine import Quarantine
+    from repro.core.strategy import get_strategy
+
+    K = 2
+    root = pathlib.Path(__file__).resolve().parents[1]
+    cells = [CellSpec("smollm-135m", "train_4k"),
+             CellSpec("smollm-135m", "prefill_32k")]
+    d = tmp_path / "fab"
+    d.mkdir()
+    ledger = tmp_path / "ledger.jsonl"
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join([str(root / "src"), str(root)]),
+               CHAOS_KILL_DELTA="remat_policy=full",
+               CHAOS_LEDGER=str(ledger))
+
+    def worker(i):
+        return spawn_worker(cells, d, strategy="tree",
+                            evaluator_spec="benchmarks.chaos_surface:"
+                                           "make_evaluator",
+                            ttl_s=1.0, worker_id=f"w{i}",
+                            strike_threshold=K,
+                            log_path=d / "logs" / f"w{i}.log", env=env)
+
+    rcs = [p.wait(timeout=120) for p in [worker(0), worker(1)]]
+    assert rcs == [-9, -9]               # both died evaluating the poison
+    held = LeaseBoard(d).held()
+    assert [st.cell for st in held] == [cells[0].key()]  # lease left held
+    finisher = worker(2)
+    assert finisher.wait(timeout=120) == 0
+    assert LeaseBoard(d).held() == []    # stolen, completed, released
+
+    records = [json.loads(s) for s in ledger.read_text().splitlines()]
+    poison_evals = [r for r in records
+                    if r["config"]["remat_policy"] == "full"]
+    assert len(poison_evals) == K        # the fleet-wide evaluation cap
+    summary = Quarantine(d, strike_threshold=K).summary()
+    assert len(summary["quarantined"]) == 1
+    assert summary["strikes"][summary["quarantined"][0]] == K
+    ck = json.loads((d / f"{cells[0].key()}.json").read_text())
+    assert ck["done"] and ck["health"]["degraded"]
+    assert ck["health"]["quarantined"] >= 1
+    assert ck["health"]["failures"]["worker-death"] >= 1
+    # the control cell never saw the chaos
+    ref = Campaign([cells[1]], evaluator=surface_cost,
+                   baseline_factory=baseline_factory,
+                   checkpoint_dir=None).run()
+    ck1 = json.loads((d / f"{cells[1].key()}.json").read_text())
+    assert "health" not in ck1
+    rep = get_strategy("tree").load_report(ck1["report"])
+    assert tuning_fingerprint(rep) \
+        == tuning_fingerprint(ref[cells[1].key()])

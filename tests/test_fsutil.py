@@ -1,0 +1,140 @@
+"""Shared filesystem idioms (core/fsutil.py): atomic publish, the
+durable (fsync) level, and the torn-tolerant JSONL append."""
+import json
+import os
+
+import pytest
+
+from repro.core.fsutil import append_jsonl, atomic_publish
+
+
+class FsyncRecorder:
+    """Injected-failure fake for os.fsync: records every call with
+    whether the fd was a directory, and optionally fails on demand."""
+
+    def __init__(self, monkeypatch, fail_on=None):
+        self.calls = []                    # "file" | "dir"
+        self.fail_on = fail_on
+        self._real = os.fsync
+        monkeypatch.setattr(os, "fsync", self)
+
+    def __call__(self, fd):
+        import stat
+        kind = "dir" if stat.S_ISDIR(os.fstat(fd).st_mode) else "file"
+        self.calls.append(kind)
+        if self.fail_on == kind:
+            raise OSError(f"injected fsync failure on {kind}")
+        self._real(fd)
+
+
+# ------------------------------------------------------ atomic publish
+def test_atomic_publish_replaces_content(tmp_path):
+    p = tmp_path / "board.json"
+    atomic_publish(p, "one")
+    atomic_publish(p, "two")
+    assert p.read_text() == "two"
+    # no tempfile debris left behind
+    assert os.listdir(tmp_path) == ["board.json"]
+
+
+def test_atomic_publish_failure_keeps_old_content(tmp_path, monkeypatch):
+    p = tmp_path / "board.json"
+    atomic_publish(p, "old")
+
+    def boom(src, dst):
+        raise OSError("injected replace failure")
+
+    monkeypatch.setattr(os, "replace", boom)
+    with pytest.raises(OSError, match="injected"):
+        atomic_publish(p, "new")
+    monkeypatch.undo()
+    assert p.read_text() == "old"          # target untouched
+    assert os.listdir(tmp_path) == ["board.json"]   # tempfile cleaned
+
+
+def test_default_publish_never_fsyncs(tmp_path, monkeypatch):
+    rec = FsyncRecorder(monkeypatch)
+    atomic_publish(tmp_path / "x", "data")
+    assert rec.calls == []
+
+
+def test_durable_publish_fsyncs_file_before_rename_then_dir(
+        tmp_path, monkeypatch):
+    events = []
+    real_replace = os.replace
+    rec = FsyncRecorder(monkeypatch)
+    monkeypatch.setattr(os, "fsync",
+                        lambda fd: (events.append("fsync"), rec(fd))[0])
+
+    def replace(src, dst):
+        events.append("replace")
+        real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", replace)
+    atomic_publish(tmp_path / "x", "data", durable=True)
+    # the ordering IS the durability contract: data on the platter
+    # before the rename makes it visible, directory entry after
+    assert rec.calls == ["file", "dir"]
+    assert events == ["fsync", "replace", "fsync"]
+    assert (tmp_path / "x").read_text() == "data"
+
+
+def test_durable_publish_survives_dir_fsync_failure(tmp_path, monkeypatch):
+    """Platforms that refuse directory fsync degrade gracefully."""
+    FsyncRecorder(monkeypatch, fail_on="dir")
+    atomic_publish(tmp_path / "x", "data", durable=True)
+    assert (tmp_path / "x").read_text() == "data"
+
+
+def test_durable_publish_file_fsync_failure_aborts(tmp_path, monkeypatch):
+    """If the *data* cannot be made durable the publish must not happen
+    at all — the old content stays, the tempfile is removed."""
+    p = tmp_path / "x"
+    atomic_publish(p, "old")
+    FsyncRecorder(monkeypatch, fail_on="file")
+    with pytest.raises(OSError, match="injected"):
+        atomic_publish(p, "new", durable=True)
+    monkeypatch.undo()
+    assert p.read_text() == "old"
+    assert os.listdir(tmp_path) == ["x"]
+
+
+# -------------------------------------------------------- append_jsonl
+def test_append_jsonl_round_trips_records(tmp_path):
+    p = tmp_path / "ledger.jsonl"
+    append_jsonl(p, {"b": 2, "a": 1})
+    append_jsonl(p, {"n": 2})
+    lines = p.read_text().splitlines()
+    assert [json.loads(s) for s in lines] == [{"a": 1, "b": 2}, {"n": 2}]
+    assert lines[0] == '{"a": 1, "b": 2}'   # sorted keys: stable diffs
+
+
+def test_append_jsonl_creates_parent_dirs(tmp_path):
+    p = tmp_path / "deep" / "er" / "ledger.jsonl"
+    append_jsonl(p, {"ok": True})
+    assert json.loads(p.read_text()) == {"ok": True}
+
+
+def test_append_jsonl_heals_torn_tail(tmp_path):
+    """A crashed writer's partial line must not corrupt the next
+    record: the append starts a fresh line, the torn tail stays
+    isolated as one unparseable line that readers skip."""
+    p = tmp_path / "ledger.jsonl"
+    append_jsonl(p, {"first": 1})
+    with open(p, "ab") as f:
+        f.write(b'{"torn": tr')             # crash mid-record, no newline
+    append_jsonl(p, {"second": 2})
+    lines = p.read_text().splitlines()
+    assert len(lines) == 3
+    assert json.loads(lines[0]) == {"first": 1}
+    with pytest.raises(ValueError):
+        json.loads(lines[1])                # the torn line, isolated
+    assert json.loads(lines[2]) == {"second": 2}
+
+
+def test_append_jsonl_durable_fsyncs(tmp_path, monkeypatch):
+    rec = FsyncRecorder(monkeypatch)
+    append_jsonl(tmp_path / "l.jsonl", {"a": 1})
+    assert rec.calls == []
+    append_jsonl(tmp_path / "l.jsonl", {"a": 2}, durable=True)
+    assert rec.calls == ["file"]

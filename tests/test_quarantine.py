@@ -1,0 +1,153 @@
+"""Poison-config quarantine: evaluation-intent ledger protocol,
+orphan reaping, the completion-reset strike rule, and fleet-wide
+visibility (core/quarantine.py)."""
+import json
+
+from repro.core.params import default_config
+from repro.core.quarantine import (DEFAULT_STRIKE_THRESHOLD, Quarantine,
+                                   config_key)
+
+CELL = "smollm-135m__train_4k__pod"
+
+
+def test_config_key_is_stable_and_distinct():
+    base = default_config()
+    assert config_key(base) == config_key(default_config())
+    assert config_key(base) != config_key(base.replace(microbatches=2))
+    assert len(config_key(base)) == 16
+
+
+def test_intent_complete_roundtrip(tmp_path):
+    q = Quarantine(tmp_path, worker="w0")
+    cfg = default_config()
+    token = q.begin(CELL, cfg)
+    q.complete(token, crashed=False)
+    recs = q.records()
+    assert [r["type"] for r in recs] == ["intent", "complete"]
+    assert recs[0]["key"] == recs[1]["key"] == config_key(cfg)
+    assert recs[0]["cell"] == CELL
+    assert recs[0]["worker"] == "w0" and recs[0]["pid"]
+    assert recs[0]["config"] == cfg.as_dict()   # full config for forensics
+    assert recs[1]["crashed"] is False
+    assert q.effective_strikes(config_key(cfg)) == 0
+
+
+def test_reap_orphans_strikes_only_dead_attempts(tmp_path):
+    q = Quarantine(tmp_path)
+    done, orphan = default_config(), default_config().replace(microbatches=2)
+    t1 = q.begin(CELL, done)
+    q.complete(t1, crashed=True)            # crashed but *returned*
+    q.begin(CELL, orphan)                   # worker died mid-trial
+    reaped = q.reap_orphans(CELL)
+    assert reaped == [config_key(orphan)]
+    assert q.effective_strikes(config_key(orphan)) == 1
+    assert q.effective_strikes(config_key(done)) == 0
+    # reaping again is a no-op: the orphan is already struck
+    assert q.reap_orphans(CELL) == []
+    assert q.effective_strikes(config_key(orphan)) == 1
+
+
+def test_reap_orphans_respects_cell_filter(tmp_path):
+    """A stealer reaps only the cell whose lease it claimed — another
+    worker may be legitimately mid-evaluation on a different cell."""
+    q = Quarantine(tmp_path)
+    q.begin(CELL, default_config())
+    q.begin("other__cell__pod", default_config().replace(microbatches=2))
+    assert q.reap_orphans(CELL) == [config_key(default_config())]
+    assert q.reap_orphans() \
+        == [config_key(default_config().replace(microbatches=2))]
+
+
+def test_strike_is_idempotent_per_attempt(tmp_path):
+    q = Quarantine(tmp_path)
+    key = config_key(default_config())
+    q.strike("att-1", key, CELL)
+    q.strike("att-1", key, CELL)            # racing stealers converge
+    q.strike("att-2", key, CELL)
+    assert sum(r["type"] == "strike" for r in q.records()) == 2
+    assert q.effective_strikes(key) == 2
+
+
+def test_successful_completion_resets_strikes(tmp_path):
+    """The completion-reset rule absolves collateral orphans: a benign
+    batch-mate struck when the poison config killed its worker is
+    cleared the moment it re-evaluates successfully."""
+    q = Quarantine(tmp_path)
+    cfg = default_config()
+    key = config_key(cfg)
+    q.strike("att-1", key, CELL)
+    assert q.effective_strikes(key) == 1
+    token = q.begin(CELL, cfg)
+    q.complete(token, crashed=False)        # succeeded on re-evaluation
+    assert q.effective_strikes(key) == 0
+    q.strike("att-2", key, CELL)            # later strikes count again
+    assert q.effective_strikes(key) == 1
+
+
+def test_crashed_completion_does_not_reset(tmp_path):
+    """Timeout strikes are written after a crashed completion — a
+    crashed return is evidence against the config, not absolution."""
+    q = Quarantine(tmp_path)
+    cfg = default_config()
+    key = config_key(cfg)
+    for i in range(2):
+        token = q.begin(CELL, cfg)
+        q.complete(token, crashed=True, note="timeout")
+        q.strike(token["attempt"], key, CELL, reason="deadline exceeded")
+    assert q.effective_strikes(key) == 2
+
+
+def test_threshold_quarantines_fleet_wide(tmp_path):
+    q = Quarantine(tmp_path, strike_threshold=2)
+    key = config_key(default_config())
+    q.strike("a1", key, CELL)
+    assert not q.is_quarantined(key)
+    q.strike("a2", key, CELL)
+    assert q.is_quarantined(key)
+    assert q.quarantined_keys() == {key}
+    # a second handle over the same directory (another worker) agrees
+    assert Quarantine(tmp_path, strike_threshold=2).is_quarantined(key)
+
+
+def test_default_threshold():
+    assert Quarantine("unused").strike_threshold \
+        == DEFAULT_STRIKE_THRESHOLD == 3
+
+
+def test_summary_rollup(tmp_path):
+    q = Quarantine(tmp_path, strike_threshold=1)
+    cfg = default_config()
+    token = q.begin(CELL, cfg)
+    q.complete(token, crashed=False)
+    q.begin(CELL, cfg.replace(microbatches=2))
+    q.reap_orphans(CELL)
+    s = q.summary()
+    assert s["records"] == 4 and s["intents"] == 2
+    assert s["completions"] == 1
+    assert s["strikes"] == {config_key(cfg.replace(microbatches=2)): 1}
+    assert s["quarantined"] == [config_key(cfg.replace(microbatches=2))]
+    assert s["strike_threshold"] == 1
+
+
+def test_reader_skips_garbage_lines(tmp_path):
+    """Torn tails and foreign lines must not poison the ledger."""
+    q = Quarantine(tmp_path)
+    q.strike("a1", "somekey", CELL)
+    with open(q.path, "ab") as f:
+        f.write(b'{"torn": tr')             # crash mid-append
+    q2 = Quarantine(tmp_path)
+    assert [r["type"] for r in q2.records()] == ["strike"]
+    q2.strike("a2", "somekey", CELL)        # healed: next append lands
+    assert [r["type"] for r in Quarantine(tmp_path).records()] \
+        == ["strike", "strike"]
+    assert Quarantine(tmp_path).effective_strikes("somekey") == 2
+
+
+def test_ledger_is_plain_jsonl(tmp_path):
+    """Operators can read it with jq: one sorted-key JSON object per
+    line, versioned."""
+    q = Quarantine(tmp_path)
+    q.begin(CELL, default_config())
+    for line in q.path.read_text().splitlines():
+        rec = json.loads(line)
+        assert rec["v"] == 1 and rec["ts"]
