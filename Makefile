@@ -1,5 +1,5 @@
 .PHONY: verify verify-fast bench-trials bench-campaign bench-fabric \
-	bench-online bench-chaos
+	bench-online bench-chaos bench-measured
 
 # tier-1: full suite, fail-fast (ROADMAP.md)
 verify:
@@ -31,3 +31,8 @@ bench-online:
 # retry, with bit-identity controls) -> BENCH_chaos.json
 bench-chaos:
 	PYTHONPATH=src python -m benchmarks.bench_chaos
+
+# measured-tier benchmark (roofline-only vs top-k re-rank, timing-cache
+# repeat freeness, kernel tile autotuning) -> BENCH_measured.json
+bench-measured:
+	PYTHONPATH=src python -m benchmarks.bench_measured

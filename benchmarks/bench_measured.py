@@ -1,0 +1,221 @@
+"""Measured-tier benchmark: roofline-only vs roofline + measured
+re-rank, plus the kernel-cell tile-sweep arm.
+
+Three synthetic arms over the PR-2 4-cell batch on the deterministic
+model/truth surface pair (benchmarks/measured_surface.py: the truth
+penalizes the model's favourite ``remat_policy=none`` train move), and
+one real arm timing interpret-mode Pallas kernels.  The truth surface
+penalizes the model's favourite last-stage move (``attn_block_q=256``),
+so every cell whose walk accepted it must be overturned:
+
+  * **model_only** — the historical campaign (``measure_top_k=0``);
+    the walk-decision oracle every re-rank arm is diffed against;
+  * **rerank** — ``measure_top_k=K``: walk fingerprints must be
+    bit-identical to model_only (the measured tier only *appends*),
+    each cell pays at most K real measured evaluations (ledger-counted
+    through the truth surface), every cell publishes a measured
+    winner, and measurement overturns the model ranking wherever the
+    top-K candidates disagree on the flip delta;
+  * **rerank_repeat** — fresh checkpoints, same disk timing cache:
+    zero real evaluations (every measured trial is a cache hit) and
+    the published winners are identical — repeat campaigns re-pay
+    nothing;
+  * **kernel_tiles** — real end-to-end tile autotuning
+    (``kernel:flash_attention:tiny`` + ``kernel:ssm_scan:tiny``
+    through the default dispatch evaluator, interpret-mode Pallas on
+    CPU): reports per-cell winning tiles and whether a non-default
+    tile configuration won at least one (arch, shape).
+
+Results land in results/benchmarks/BENCH_measured.json and a copy at
+the repo root (BENCH_measured.json) for CI tracking.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_measured
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+import pathlib
+import shutil
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+DEFAULT_CELLS = ("smollm-135m:train_4k,smollm-135m:prefill_32k,"
+                 "xlstm-1.3b:prefill_32k,xlstm-1.3b:decode_32k")
+KERNEL_CELLS = "kernel:flash_attention:tiny,kernel:ssm_scan:tiny"
+TOP_K = 2
+
+
+def _baseline(spec=None):
+    from repro.core.params import default_config
+    return default_config(shard_strategy="fsdp_tp", attn_impl="pallas")
+
+
+def _campaign(cells, ckpt, **kw):
+    from benchmarks.measured_surface import make_evaluator
+    from repro.core.campaign import Campaign
+    camp = Campaign(cells, strategy="tree", checkpoint_dir=ckpt,
+                    evaluator=make_evaluator(),
+                    baseline_factory=_baseline, **kw)
+    t0 = time.time()
+    reports = camp.run()
+    return camp, reports, round(time.time() - t0, 3)
+
+
+def _fingerprints(cells, reports):
+    from repro.core.campaign import tuning_fingerprint
+    return {c.key(): tuning_fingerprint(reports[c.key()])
+            for c in cells}
+
+
+def _ledger_counts(path):
+    counts = {}
+    if path.exists():
+        for line in path.read_text().splitlines():
+            cell = json.loads(line)["cell"]
+            counts[cell] = counts.get(cell, 0) + 1
+    return counts
+
+
+def run_model_only(cells, scratch):
+    _, reports, wall = _campaign(cells, scratch / "model_only")
+    evals = sum(r.n_trials for r in reports.values())
+    return {"wall_s": wall, "evaluations": evals,
+            "fingerprints": _fingerprints(cells, reports)}
+
+
+def run_rerank(cells, scratch, model_only, repeat=False):
+    from benchmarks.measured_surface import (CACHE_ENV, LEDGER_ENV,
+                                             make_measured_evaluator)
+    name = "rerank_repeat" if repeat else "rerank"
+    ledger = scratch / f"{name}.ledger"
+    os.environ[LEDGER_ENV] = str(ledger)
+    os.environ[CACHE_ENV] = str(scratch / "timings")  # shared across arms
+    try:
+        _, reports, wall = _campaign(
+            cells, scratch / name, measure_top_k=TOP_K,
+            measured_evaluator=make_measured_evaluator())
+    finally:
+        os.environ.pop(LEDGER_ENV, None)
+        os.environ.pop(CACHE_ENV, None)
+    counts = _ledger_counts(ledger)
+    measured = {c.key(): reports[c.key()].measured for c in cells}
+    overturned = sorted(k for k, m in measured.items()
+                        if m and m.get("overturned"))
+    return {
+        "wall_s": wall,
+        "walk_identical_to_model_only":
+            _fingerprints(cells, reports) == model_only["fingerprints"],
+        "measured_evaluations": counts,
+        "max_evaluations_per_cell": max(counts.values(), default=0),
+        "total_evaluations": sum(counts.values()),
+        "cells_with_winner": sorted(
+            k for k, m in measured.items()
+            if m and m.get("winner") is not None),
+        "overturned_cells": overturned,
+        "winners": {k: {"name": m.get("winner_name"),
+                        "model_cost_s": m["candidates"][0]["model_cost_s"]
+                        if m.get("candidates") else None,
+                        "measured_cost_s": m.get("winner_cost_s")}
+                    for k, m in measured.items() if m},
+    }
+
+
+def run_kernel_tiles(scratch):
+    from repro.core.campaign import Campaign, parse_cells
+    cells = parse_cells(KERNEL_CELLS)
+    camp = Campaign(cells, strategy="tree",
+                    checkpoint_dir=scratch / "kernels")
+    t0 = time.time()
+    reports = camp.run()
+    wall = round(time.time() - t0, 3)
+    out = {"wall_s": wall, "cells": {}}
+    nondefault = []
+    for c in cells:
+        rep = reports[c.key()]
+        final = {k: v for k, v in rep.final_config.items()
+                 if k.startswith("attn_block")}
+        base = {k: v for k, v in rep.log[0]["config"].items()
+                if k.startswith("attn_block")}
+        if final != base:
+            nondefault.append(c.key())
+        out["cells"][c.key()] = {
+            "trials": rep.n_trials,
+            "baseline_tiles": base, "final_tiles": final,
+            "baseline_cost_s": rep.baseline_cost,
+            "final_cost_s": rep.final_cost,
+            "speedup": rep.speedup,
+        }
+    out["nondefault_tile_winners"] = nondefault
+    return out
+
+
+# ------------------------------------------------------------------ main
+def main(cells_spec: str):
+    from repro.core.campaign import parse_cells
+    cells = parse_cells(cells_spec)
+    print(f"batch: {len(cells)} cells "
+          f"({', '.join(c.key() for c in cells)})")
+    scratch = ROOT / "results" / "bench_measured_scratch"
+    shutil.rmtree(scratch, ignore_errors=True)
+    scratch.mkdir(parents=True, exist_ok=True)
+
+    model_only = run_model_only(cells, scratch)
+    print(f"model_only: {model_only['evaluations']} evaluations, "
+          f"{model_only['wall_s']}s")
+
+    rerank = run_rerank(cells, scratch, model_only)
+    print(f"rerank: {rerank['total_evaluations']} measured evaluations "
+          f"(max {rerank['max_evaluations_per_cell']}/cell, bound "
+          f"{TOP_K}), overturned: {rerank['overturned_cells']}")
+
+    repeat = run_rerank(cells, scratch, model_only, repeat=True)
+    print(f"rerank_repeat: {repeat['total_evaluations']} real "
+          f"evaluations (timing cache), winners identical="
+          f"{repeat['winners'] == rerank['winners']}")
+
+    kernels = run_kernel_tiles(scratch)
+    print(f"kernel_tiles: {kernels['wall_s']}s, non-default winners: "
+          f"{kernels['nondefault_tile_winners']}")
+
+    out = {
+        "cells": [c.key() for c in cells],
+        "top_k": TOP_K,
+        "model_only": {k: v for k, v in model_only.items()
+                       if k != "fingerprints"},
+        "rerank": rerank,
+        "rerank_repeat": repeat,
+        "kernel_tiles": kernels,
+    }
+    res_dir = ROOT / "results" / "benchmarks"
+    res_dir.mkdir(parents=True, exist_ok=True)
+    (res_dir / "BENCH_measured.json").write_text(json.dumps(out, indent=1))
+    (ROOT / "BENCH_measured.json").write_text(json.dumps(out, indent=1))
+    shutil.rmtree(scratch, ignore_errors=True)
+    print(json.dumps(out, indent=1))
+    assert rerank["walk_identical_to_model_only"], \
+        "the measured tier changed walk decisions!"
+    assert rerank["max_evaluations_per_cell"] <= TOP_K, \
+        "a cell paid more than k measured evaluations!"
+    assert len(rerank["cells_with_winner"]) == len(cells), \
+        "a cell finished without a measured winner!"
+    assert rerank["overturned_cells"], \
+        "the truth surface disagreed but nothing was overturned!"
+    assert repeat["total_evaluations"] == 0, \
+        "repeat run re-paid measured evaluations despite the cache!"
+    assert repeat["winners"] == rerank["winners"], \
+        "cached re-rank published different winners!"
+    assert kernels["nondefault_tile_winners"], \
+        "no kernel cell found a non-default tile!"
+    print("\nbench_measured: all invariants hold")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default=DEFAULT_CELLS)
+    args = ap.parse_args()
+    main(args.cells)

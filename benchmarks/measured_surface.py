@@ -1,0 +1,83 @@
+"""Synthetic model-vs-truth surfaces for the measured-tier benchmark.
+
+The measured tier exists because the model's ranking can be wrong; this
+surface pair makes it wrong *on purpose*, deterministically:
+
+  * :func:`make_evaluator` — the model surface: exactly the fault-free
+    :func:`benchmarks.fabric_surface.surface_cost` (so walk decisions
+    stay bit-identical to every other benchmark on these cells);
+  * :func:`make_measured_evaluator` — the "ground truth" a real run
+    would measure: the same surface except the configs matching
+    ``MEASURED_FLIP_DELTA`` (default ``attn_block_q=256`` — the
+    model's favourite *last-stage* move, so a cell's top-2 candidates
+    are guaranteed to disagree on it) are *slower* by
+    ``MEASURED_FLIP_FACTOR`` (default 1.6).  Wherever the model's top
+    choice matches the flip delta and the runner-up does not,
+    measurement must overturn the ranking.
+
+Environment variables (the ``launch/tune.py --measured-evaluator``
+subprocess channel, mirroring benchmarks/chaos_surface.py):
+
+  * ``MEASURED_FLIP_DELTA`` — ``knob=value[,knob=value...]``: configs
+    matching every pair get the truth penalty;
+  * ``MEASURED_FLIP_FACTOR`` — the penalty multiplier (default 1.6);
+  * ``MEASURED_LEDGER`` — optional path; one ``{"cell", "config"}``
+    JSON line is appended per *real* truth evaluation (cache hits do
+    not append), so benchmarks count exactly how many measured
+    evaluations a campaign paid;
+  * ``MEASURED_CACHE_DIR`` — timing-cache directory for the returned
+    :class:`~repro.core.measure.CachedMeasure` (default: a fresh
+    in-memory-only cache, so bench arms control reuse explicitly).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+from benchmarks.chaos_surface import matches, parse_delta
+from benchmarks.fabric_surface import surface_cost
+
+FLIP_ENV = "MEASURED_FLIP_DELTA"
+FACTOR_ENV = "MEASURED_FLIP_FACTOR"
+LEDGER_ENV = "MEASURED_LEDGER"
+CACHE_ENV = "MEASURED_CACHE_DIR"
+
+DEFAULT_FLIP = "attn_block_q=256"
+
+
+def make_evaluator():
+    """The model surface (``--evaluator`` factory)."""
+    return surface_cost
+
+
+def truth_cost(wl, rt):
+    """The measured-truth surface: the model surface with the flip
+    configs penalized."""
+    res = surface_cost(wl, rt)
+    flip = parse_delta(os.environ.get(FLIP_ENV, DEFAULT_FLIP))
+    if flip and matches(rt, flip):
+        factor = float(os.environ.get(FACTOR_ENV, "1.6"))
+        res.cost_s = round(res.cost_s * factor, 6)
+    res.compiles, res.compile_s = 1, 0.01
+    return res
+
+
+def make_measured_evaluator():
+    """The truth surface behind a timing cache (``--measured-evaluator``
+    factory); ledger-counted so benchmarks can assert the k bound and
+    cache-hit freeness."""
+    from repro.core.measure import CachedMeasure, TimingCache
+
+    def evaluate(wl, rt):
+        ledger = os.environ.get(LEDGER_ENV)
+        if ledger:
+            with open(ledger, "a") as fh:
+                fh.write(json.dumps({"cell": wl.key(),
+                                     "config": rt.as_dict()}) + "\n")
+        return truth_cost(wl, rt)
+
+    cache_dir = os.environ.get(CACHE_ENV)
+    cache = TimingCache(pathlib.Path(cache_dir)) if cache_dir \
+        else TimingCache(use_disk=False)
+    return CachedMeasure(evaluate, cache, repeats=3)

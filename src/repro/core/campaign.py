@@ -111,13 +111,21 @@ def enumerate_cells(archs: Optional[Sequence[str]] = None,
 def parse_cells(text: str,
                 default_multi_pod: bool = False) -> List[CellSpec]:
     """Parse ``arch:shape[:pod|multipod]`` comma-separated cell specs;
-    specs without an explicit mesh suffix use ``default_multi_pod``."""
+    specs without an explicit mesh suffix use ``default_multi_pod``.
+    ``kernel:<name>:<shape>`` specs become
+    :class:`~repro.core.kernel_cell.KernelCell` s (Pallas tile-sweep
+    cells), so every cell entry point — ``--cells``, ``--add-cells``
+    intake, fabric worker command lines — accepts them."""
     cells = []
     for item in text.split(","):
         item = item.strip()
         if not item:
             continue
         parts = item.split(":")
+        if parts[0] == "kernel":
+            from repro.core.kernel_cell import parse_kernel_cell
+            cells.append(parse_kernel_cell(item))
+            continue
         if len(parts) not in (2, 3):
             raise ValueError(f"bad cell spec {item!r} "
                              "(want arch:shape[:pod|multipod])")
@@ -193,6 +201,17 @@ def cell_health(log) -> Dict:
     return out
 
 
+def _default_stages(spec: CellSpec) -> Optional[List[Stage]]:
+    """The campaign's default stages factory: kernel cells walk their
+    tile-sweep stage (core/kernel_cell.py); step cells return None so
+    the strategy keeps its own default tree — bit-identical to the
+    historical ``lambda spec: None``."""
+    if str(spec.arch).startswith("kernel-"):
+        from repro.core.kernel_cell import kernel_stages
+        return kernel_stages(spec)
+    return None
+
+
 # ------------------------------------------------------------- campaign
 class _CellRun:
     """One cell's in-progress walk: runner + cursor + replay ledger."""
@@ -248,6 +267,23 @@ class Campaign:
     appended — deliberate (the cumulative-history contract),
     deterministic given the history at activation, and replay-exact on
     resume because the checkpoint stores the seeds actually used.
+
+    **Measured tier** (core/measure.py) — with ``measure_top_k=k > 0``
+    each cell's finished walk is followed by a re-rank pass: its top-k
+    surviving configs (by model cost) are re-evaluated with
+    median-of-N *real* jitted timings on a dedicated single-worker
+    executor (same deadline/retry/quarantine hardening), and the
+    measured winner is published into the report's ``measured``
+    section, the checkpoint and the trial history
+    (``<strategy>+measured``).  The default ``0`` is a true no-op: no
+    measured evaluator is ever constructed and the walk's
+    logs/budgets/decisions are bit-identical to a model-only campaign
+    — the pass only *re-ranks after* the walk, it never feeds back
+    into it.  ``measured_evaluator`` overrides the measured tier's
+    default (kernel bench / reduced wall-clock proxy behind the disk
+    timing cache) — on real hardware pass a
+    :class:`~repro.core.trial.WallClockEvaluator` over the production
+    mesh.
     """
 
     def __init__(self, cells: Sequence[CellSpec], *,
@@ -272,7 +308,9 @@ class Campaign:
                  trial_timeout_s: Optional[float] = None,
                  max_retries: int = 0,
                  quarantine: Any = None,
-                 strike_threshold: Optional[int] = None):
+                 strike_threshold: Optional[int] = None,
+                 measure_top_k: int = 0,
+                 measured_evaluator: Optional[Callable] = None):
         if not cells and not intake:
             raise ValueError("campaign needs at least one cell "
                              "(or intake admission)")
@@ -288,15 +326,18 @@ class Campaign:
         if executor is not None:
             evaluator = executor.evaluator
         elif evaluator is None:
-            from repro.core.trial import RooflineEvaluator
-            evaluator = RooflineEvaluator()
+            # kernel-aware default: kernel cells time their jitted
+            # kernel, everything else passes through to the same
+            # RooflineEvaluator as before (bit-identical step decisions)
+            from repro.core.kernel_cell import DispatchEvaluator
+            evaluator = DispatchEvaluator()
         self.evaluator = evaluator
         self.executor = executor
         self.max_workers = max_workers
         self.baseline_factory = baseline_factory or (
             lambda spec: default_config(shard_strategy="fsdp_tp",
                                         attn_impl="pallas"))
-        self.stages_factory = stages_factory or (lambda spec: None)
+        self.stages_factory = stages_factory or _default_stages
         self.checkpoint_dir = pathlib.Path(checkpoint_dir) \
             if checkpoint_dir else None
         if history is None:              # default: cumulative campaigns
@@ -347,6 +388,12 @@ class Campaign:
             self.quarantine = quarantine
             if strike_threshold is not None:
                 self.quarantine.strike_threshold = strike_threshold
+        # --------------------------------------------- measured tier
+        self.measure_top_k = int(measure_top_k)
+        if self.measure_top_k < 0:
+            raise ValueError("measure_top_k must be >= 0")
+        self.measured_evaluator = measured_evaluator
+        self._measured_eval: Optional[Callable] = None
         self.last_stats: Dict = {}
 
     # --------------------------------------------------------- per cell
@@ -467,6 +514,14 @@ class Campaign:
             ckpt = self._read_checkpoint(spec)
         if not ckpt or not ckpt.get("done") or not ckpt.get("report"):
             return False
+        if self.measure_top_k and self.strategy.measurable:
+            # a finished walk that still owes its measured re-rank
+            # reads as not-done, so the fabric claims it and runs just
+            # the measure pass (the walk itself replays for free)
+            md = (ckpt.get("report") or {}).get("measured")
+            if not (isinstance(md, dict)
+                    and md.get("k") == self.measure_top_k):
+                return False
         baseline = self.baseline_factory(spec)
         runner = TrialRunner(spec.workload(), self.evaluator)
         cursor = self._make_cursor(spec, runner, baseline)
@@ -540,6 +595,98 @@ class Campaign:
         cr.cursor.absorb(results, indices)
         self._save_checkpoint(cr)
 
+    # ----------------------------------------------------- measured tier
+    def _resolve_measured_evaluator(self) -> Callable:
+        """The evaluator the re-rank pass times configs with: the
+        injected one, else the measured tier's default (kernel bench /
+        reduced wall-clock proxy behind the disk timing cache)."""
+        if self._measured_eval is None:
+            if self.measured_evaluator is not None:
+                self._measured_eval = self.measured_evaluator
+            else:
+                from repro.core.measure import default_measured_evaluator
+                self._measured_eval = default_measured_evaluator()
+        return self._measured_eval
+
+    def _measured_pending(self, report: Any) -> bool:
+        """Whether a finished walk still owes its measured re-rank."""
+        if not self.measure_top_k or not self.strategy.measurable:
+            return False
+        md = getattr(report, "measured", None)
+        return not (isinstance(md, dict)
+                    and md.get("k") == self.measure_top_k)
+
+    def _measure_batch(self, cr: _CellRun) -> Optional[List[Dict]]:
+        """The cell's measured-tier candidates (top-k surviving configs
+        of the finished walk, by model cost), or None when the pass is
+        off / already published / has nothing to measure — in the last
+        case an empty ``measured`` stamp is published so completion
+        probes (``cell_done``) converge."""
+        if not self._measured_pending(cr.report):
+            return None
+        from repro.core.measure import select_top_k
+        cands = select_top_k(getattr(cr.report, "log", None) or [],
+                             self.measure_top_k)
+        if not cands:
+            cr.report.measured = {
+                "k": self.measure_top_k, "evaluations": 0,
+                "candidates": [], "winner": None,
+                "note": "no surviving configs to measure"}
+            self._save_checkpoint(cr)
+            return None
+        return cands
+
+    def _absorb_measured(self, cr: _CellRun, cands: List[Dict],
+                         results: List[TrialResult]) -> None:
+        """Publish the measured re-rank: per-candidate model-vs-measured
+        costs, the measured winner, and whether measurement overturned
+        the model's own ranking choice (``candidates[0]``).  Every
+        measured evaluation is also emitted to the trial history under
+        ``<strategy>+measured``."""
+        sink = self.history.sink(f"{self.strategy.name}+measured") \
+            if self.history is not None else None
+        rows: List[Dict] = []
+        best: Optional[int] = None
+        for rank, (c, res) in enumerate(zip(cands, results)):
+            row = {"rank": rank, "name": c["name"],
+                   "config": c["config"].as_dict(),
+                   "model_cost_s": c["model_cost_s"],
+                   "cost_s": res.cost_s, "crashed": bool(res.crashed)}
+            if res.crashed:
+                row["failure"] = res.failure
+                row["error"] = res.error
+            if res.cached:
+                row["cached"] = True
+            if res.compiles:
+                row["compiles"] = res.compiles
+            if res.retries:
+                row["retries"] = int(res.retries)
+            rows.append(row)
+            if not res.crashed and (best is None
+                                    or res.cost_s
+                                    < results[best].cost_s):
+                best = rank
+            if sink is not None:
+                sink(cr.runner.workload, c["config"],
+                     f"measured:{c['name'] or rank}", res, {})
+        md: Dict[str, Any] = {
+            "k": self.measure_top_k,
+            "evaluations": len(rows),
+            "candidates": rows,
+            "model_choice": rows[0]["config"],
+        }
+        if best is not None:
+            md["winner"] = rows[best]["config"]
+            md["winner_name"] = rows[best]["name"]
+            md["winner_cost_s"] = rows[best]["cost_s"]
+            md["overturned"] = best != 0
+        else:
+            md["winner"] = None
+            md["note"] = ("every measured candidate crashed; "
+                          "the model ranking stands")
+        cr.report.measured = md
+        self._save_checkpoint(cr)
+
     # -------------------------------------------------------- activation
     def _activate(self, spec: CellSpec) -> _CellRun:
         """Build one cell's run state (cursor, checkpoint, warm-start)
@@ -597,16 +744,46 @@ class Campaign:
             trial_timeout_s=self.trial_timeout_s,
             max_retries=self.max_retries,
             quarantine=self.quarantine)
-        pending: Dict[str, Tuple[list, list]] = {}   # key -> (batch, futs)
+        # key -> ("walk" | "measure", batch, futs)
+        pending: Dict[str, Tuple[str, list, list]] = {}
+        m_exec: Optional[SweepExecutor] = None
+
+        def measured_executor() -> SweepExecutor:
+            """Lazy single-worker executor for measured trials: real
+            wall clocks must not time-share the host with each other
+            (or with a batch of concurrent model trials racing CPU),
+            and serializing bounds the extra cost at k evaluations per
+            cell.  Same deadline/retry/quarantine hardening as the
+            model executor."""
+            nonlocal m_exec
+            if m_exec is None:
+                m_exec = SweepExecutor(
+                    self._resolve_measured_evaluator(), max_workers=1,
+                    trial_timeout_s=self.trial_timeout_s,
+                    max_retries=self.max_retries,
+                    quarantine=self.quarantine)
+            return m_exec
+
         try:
             def kick(cr: _CellRun) -> None:
-                batch = self._advance(cr)
-                if batch is None:
+                """Advance one cell: next walk batch if the walk is
+                live, else the measured re-rank batch, else done."""
+                if cr.report is None:
+                    batch = self._advance(cr)
+                    if batch is not None:
+                        futs = [executor.submit(cr.runner.workload,
+                                                c.config)
+                                for c in batch]
+                        pending[cr.spec.key()] = ("walk", batch, futs)
+                        return
+                cands = self._measure_batch(cr)
+                if cands is None:
                     queue.mark_done(cr.spec.key())
                     return
-                futs = [executor.submit(cr.runner.workload, c.config)
-                        for c in batch]
-                pending[cr.spec.key()] = (batch, futs)
+                futs = [measured_executor().submit(cr.runner.workload,
+                                                   c["config"])
+                        for c in cands]
+                pending[cr.spec.key()] = ("measure", cands, futs)
 
             def fill() -> None:
                 """Admit live submissions, then start queued cells
@@ -620,9 +797,8 @@ class Campaign:
                         return
                     cr = self._activate(spec)
                     runs[spec.key()] = cr
-                    if cr.report is not None:    # done via checkpoint
-                        queue.mark_done(spec.key())
-                        continue
+                    # a checkpoint-done cell may still owe its measured
+                    # re-rank; kick() resolves both cases
                     kick(cr)
 
             def live_rank(key: str):
@@ -636,22 +812,27 @@ class Campaign:
 
             fill()
             while pending:
-                outstanding = {f for _, fs in pending.values()
+                outstanding = {f for _, _, fs in pending.values()
                                for f in fs if not f.done()}
                 if outstanding:
                     wait(outstanding, return_when=FIRST_COMPLETED)
-                ready = [k for k, (_, fs) in pending.items()
+                ready = [k for k, (_, _, fs) in pending.items()
                          if all(f.done() for f in fs)]
                 ready.sort(key=live_rank)
                 for key in ready:
-                    batch, futs = pending.pop(key)
+                    tag, batch, futs = pending.pop(key)
                     results = [f.result() for f in futs]
-                    self._absorb(runs[key], batch, results)
+                    if tag == "measure":
+                        self._absorb_measured(runs[key], batch, results)
+                    else:
+                        self._absorb(runs[key], batch, results)
                     kick(runs[key])
                 fill()
         finally:
             if own_executor:
                 executor.shutdown()
+            if m_exec is not None:
+                m_exec.shutdown()
 
         reports = {spec.key(): runs[spec.key()].report
                    for spec in queue.cells()}
@@ -672,6 +853,22 @@ class Campaign:
         if self.warm_start:
             self.last_stats["warmstarted_cells"] = sum(
                 1 for cr in runs.values() if cr.warmstart)
+        if self.measure_top_k:
+            meas = {k: getattr(cr.report, "measured", None)
+                    for k, cr in runs.items()}
+            meas = {k: m for k, m in meas.items()
+                    if isinstance(m, dict)}
+            self.last_stats["measured"] = {
+                "k": self.measure_top_k,
+                "cells": len(meas),
+                "evaluations": sum(m.get("evaluations", 0)
+                                   for m in meas.values()),
+                "cached": sum(1 for m in meas.values()
+                              for c in m.get("candidates", [])
+                              if c.get("cached")),
+                "overturned": sorted(
+                    k for k, m in meas.items() if m.get("overturned")),
+            }
         health = {k: cell_health(cr.runner.log) for k, cr in runs.items()}
         health = {k: h for k, h in health.items() if h}
         if health:                       # fault-free stats unchanged

@@ -363,10 +363,12 @@ class Heartbeat:
 # --------------------------------------------------------------- worker
 def load_evaluator(spec: Optional[str]) -> Callable:
     """Resolve an ``--evaluator module:factory`` dotted-path spec (the
-    factory is called with no arguments); default: RooflineEvaluator."""
+    factory is called with no arguments); default: the kernel-aware
+    :class:`~repro.core.kernel_cell.DispatchEvaluator` (bit-identical
+    to a bare RooflineEvaluator on step cells)."""
     if not spec:
-        from repro.core.trial import RooflineEvaluator
-        return RooflineEvaluator()
+        from repro.core.kernel_cell import DispatchEvaluator
+        return DispatchEvaluator()
     mod, sep, attr = spec.partition(":")
     if not sep or not attr:
         raise ValueError(f"evaluator spec {spec!r}: want module:factory")
@@ -400,9 +402,11 @@ class FabricWorker:
 
     Start any number of workers over the same ``directory`` — locally
     via :func:`run_coordinator`, or independently on other hosts
-    against a shared mount.  ``evaluator`` defaults to a fresh
-    :class:`~repro.core.trial.RooflineEvaluator` whose disk compile
-    cache is shared with every other worker.
+    against a shared mount.  ``evaluator`` defaults to the
+    kernel-aware :class:`~repro.core.kernel_cell.DispatchEvaluator`
+    (a RooflineEvaluator on step cells, the timing-cached kernel bench
+    on kernel cells) whose disk caches are shared with every other
+    worker.
 
     **Online mode** (core/schedule.py) — target cells are not frozen at
     startup: every scheduling pass re-scans the shared directory's
@@ -442,7 +446,9 @@ class FabricWorker:
                  go_file: Optional[pathlib.Path] = None,
                  trial_timeout_s: Optional[float] = None,
                  max_retries: int = 0,
-                 strike_threshold: Optional[int] = None):
+                 strike_threshold: Optional[int] = None,
+                 measure_top_k: int = 0,
+                 measured_evaluator: Optional[Callable] = None):
         if not cells and not watch:
             raise ValueError("fabric worker needs at least one cell "
                              "(or watch mode: claim intake submissions)")
@@ -453,8 +459,10 @@ class FabricWorker:
         self.strategy_options = dict(strategy_options or {})
         self.threshold = threshold
         if evaluator is None:
-            from repro.core.trial import RooflineEvaluator
-            evaluator = RooflineEvaluator()
+            # kernel-aware default, like Campaign's: step decisions
+            # stay bit-identical to a bare RooflineEvaluator
+            from repro.core.kernel_cell import DispatchEvaluator
+            evaluator = DispatchEvaluator()
         self.evaluator = evaluator
         self.baseline_factory = baseline_factory
         self.board = LeaseBoard(self.dir, worker_id=worker_id,
@@ -476,6 +484,11 @@ class FabricWorker:
         self.go_file = go_file
         self.trial_timeout_s = trial_timeout_s
         self.max_retries = int(max_retries)
+        # measured tier: the disk TimingCache inside the default
+        # measured evaluator is shared fleet-wide exactly like the
+        # compile cache, so a re-claimed cell's re-rank re-pays nothing
+        self.measure_top_k = int(measure_top_k)
+        self.measured_evaluator = measured_evaluator
         # one fleet-shared evaluation-intent ledger (core/quarantine.py)
         # over the campaign directory: every worker brackets trials with
         # intent/completion records and skips quarantined configs
@@ -497,6 +510,7 @@ class FabricWorker:
             warm_start=self.warm_start,
             warm_start_cells=self.warm_start_cells,
             warm_start_per_cell=self.warm_start_per_cell,
+            measure_top_k=self.measure_top_k,  # cell_done gates on it
             quarantine=False,            # probe never evaluates
             intake=True)    # probe only; also admits the no-seed case
 
@@ -517,6 +531,8 @@ class FabricWorker:
             max_workers=self.max_workers,
             trial_timeout_s=self.trial_timeout_s,
             max_retries=self.max_retries,
+            measure_top_k=self.measure_top_k,
+            measured_evaluator=self.measured_evaluator,
             quarantine=self.quarantine)
         with Heartbeat(lease) as hb:
             camp.run()
@@ -621,6 +637,8 @@ def worker_argv(cells: Sequence[CellSpec], directory: pathlib.Path, *,
                 trial_timeout_s: Optional[float] = None,
                 max_retries: int = 0,
                 strike_threshold: Optional[int] = None,
+                measure_top_k: int = 0,
+                measured_evaluator_spec: Optional[str] = None,
                 extra: Sequence[str] = ()) -> List[str]:
     """The ``launch/tune.py --worker`` command line for one worker."""
     argv = [sys.executable, "-m", "repro.launch.tune", "--worker",
@@ -640,6 +658,10 @@ def worker_argv(cells: Sequence[CellSpec], directory: pathlib.Path, *,
         argv += ["--max-retries", str(max_retries)]
     if strike_threshold is not None:
         argv += ["--strike-threshold", str(strike_threshold)]
+    if measure_top_k:
+        argv += ["--measure-top-k", str(measure_top_k)]
+    if measured_evaluator_spec:
+        argv += ["--measured-evaluator", measured_evaluator_spec]
     if prioritize != "arch":
         argv += ["--prioritize", prioritize]
     if watch:
@@ -688,6 +710,8 @@ def run_coordinator(cells: Sequence[CellSpec],
                     trial_timeout_s: Optional[float] = None,
                     max_retries: int = 0,
                     strike_threshold: Optional[int] = None,
+                    measure_top_k: int = 0,
+                    measured_evaluator_spec: Optional[str] = None,
                     extra_args: Sequence[str] = (),
                     log_dir: Optional[pathlib.Path] = None,
                     timeout_s: Optional[float] = None) -> Dict[str, Any]:
@@ -726,6 +750,8 @@ def run_coordinator(cells: Sequence[CellSpec],
             worker_id=f"w{i}-{uuid.uuid4().hex[:6]}",
             trial_timeout_s=trial_timeout_s, max_retries=max_retries,
             strike_threshold=strike_threshold,
+            measure_top_k=measure_top_k,
+            measured_evaluator_spec=measured_evaluator_spec,
             extra=extra_args, log_path=log))
     rcs = [p.wait(timeout=timeout_s) for p in procs]
     wall = time.time() - t0
@@ -749,6 +775,7 @@ def run_coordinator(cells: Sequence[CellSpec],
                      threshold=threshold,
                      evaluator=lambda wl, rt: None,  # probe never runs
                      checkpoint_dir=directory, warm_start=warm_start,
+                     measure_top_k=measure_top_k,
                      quarantine=False, intake=True)
     reports: Dict[str, Any] = {}
     incomplete = []

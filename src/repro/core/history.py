@@ -84,6 +84,12 @@ def active_knobs(kind: str, family: str) -> Tuple[str, ...]:
 
 def cell_signature(arch: str, shape: str, multi_pod: bool = False) -> Dict:
     """The features warm-start similarity is computed over."""
+    if arch.startswith("kernel-"):
+        # kernel cells (core/kernel_cell.py) have no arch config /
+        # SHAPES entry; their signature comes from the kernel registry
+        # so history prioritization and warm-start never crash on them
+        from repro.core.kernel_cell import kernel_signature
+        return kernel_signature(arch, shape, multi_pod)
     from repro.configs import get_config, get_shape
     kind = get_shape(shape).kind
     family = get_config(arch).family

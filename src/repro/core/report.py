@@ -80,6 +80,44 @@ def tuning_markdown(rep: TuningReport) -> str:
         delta = ", ".join(f"{k}={v}" for k, v in e["delta"].items()) or "-"
         out.append(f"| {i} | {e['name']} | {delta} | {_fmt_s(cost)} | "
                    f"{e.get('note','')} | {verdict} |")
+    md = getattr(rep, "measured", None)
+    if isinstance(md, dict):             # model-only reports unchanged
+        out += ["", measured_markdown(md)]
+    return "\n".join(out)
+
+
+def measured_markdown(md: Dict) -> str:
+    """The measured tier's re-rank table (``TuningReport.measured``,
+    core/measure.py): the model's top-K surviving configs, each with
+    its model-predicted and real median wall-clock cost, the measured
+    winner, and whether measurement overturned the model ranking."""
+    head = (f"**Measured re-rank** (top-{md.get('k')}, "
+            f"{md.get('evaluations', 0)} evaluation(s))")
+    rows = md.get("candidates") or []
+    if not rows:
+        return head + f": {md.get('note', 'no candidates')}"
+    out = [head, "",
+           "| rank (model) | candidate | model cost | measured | "
+           "verdict |",
+           "|---|---|---|---|---|"]
+    winner = md.get("winner")
+    for r in rows:
+        if r.get("crashed"):
+            verdict = f"CRASH ({r.get('failure', '?')})"
+        elif winner is not None and r.get("config") == winner:
+            verdict = "**winner**"
+            if md.get("overturned"):
+                verdict += " (overturned model choice)"
+        else:
+            verdict = "reject"
+        cached = " (cached)" if r.get("cached") else ""
+        out.append(
+            f"| {r.get('rank')} | {r.get('name') or '—'} | "
+            f"{_fmt_s(r.get('model_cost_s', float('nan')))} | "
+            f"{_fmt_s(r.get('cost_s', float('nan')))}{cached} | "
+            f"{verdict} |")
+    if md.get("note"):
+        out += ["", f"_{md['note']}_"]
     return "\n".join(out)
 
 
@@ -178,6 +216,17 @@ def campaign_markdown(reports: Dict[str, TuningReport],
               f"* geometric-mean speedup: x{gmean:.2f}",
               "",
               "Each cell: `x<speedup> (<trials used>)`."]
+    measured = {k: r.measured for k, r in reports.items()
+                if isinstance(getattr(r, "measured", None), dict)}
+    if measured:                         # model-only output unchanged
+        overturned = sorted(k for k, m in measured.items()
+                            if m.get("overturned"))
+        line = (f"* measured re-rank: {len(measured)} cell(s), "
+                f"{sum(m.get('evaluations', 0) for m in measured.values())}"
+                f" real evaluation(s), {len(overturned)} overturned")
+        if overturned:
+            line += " — " + ", ".join(f"`{c}`" for c in overturned)
+        lines.insert(-2, line)
     degraded = sorted(d["cell"] for d in (queue or {}).get("cells", [])
                       if (d.get("health") or {}).get("degraded"))
     if degraded:                         # fault-free output unchanged

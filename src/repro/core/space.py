@@ -40,6 +40,11 @@ class Knob:
     stage's spark_name); ``doc`` the annotated PARAM_DOCS line.
     Infrastructure knobs (``tunable=False``) are never swept or listed
     in DOMAINS/PARAM_DOCS but still carry a domain and a reach class.
+    ``seq_tile=True`` marks a Pallas sequence-tile knob: its effective
+    block is ``min(value, seq_len)`` and must divide the cell's
+    sequence length (``ParamSpace.validate(cfg, seq_len=...)`` turns a
+    non-dividing tile into a clean ``ValueError`` instead of a deep
+    Pallas grid assertion).
     """
     name: str
     domain: Tuple[Any, ...]
@@ -49,6 +54,7 @@ class Knob:
     sweep: Tuple[Any, ...] = ()
     reach_evidence: str = ""
     tunable: bool = True
+    seq_tile: bool = False
 
     def __post_init__(self):
         if self.reach not in REACH_CLASSES:
@@ -69,6 +75,20 @@ class Knob:
         if value not in self.domain:
             raise ValueError(f"{self.name}={value!r} not in domain "
                              f"{self.domain}")
+
+    def validate_tile(self, value: Any, seq_len: int) -> None:
+        """Check a sequence-tile value against a concrete sequence
+        length (kernels clamp the block to ``min(value, seq_len)``
+        before asserting divisibility — mirror that here so the error
+        is raised once, with the knob's name, before any Pallas call)."""
+        if not self.seq_tile:
+            return
+        eff = min(int(value), int(seq_len))
+        if eff <= 0 or seq_len % eff != 0:
+            raise ValueError(
+                f"{self.name}={value}: effective tile {eff} does not "
+                f"divide sequence length {seq_len} — pick a tile that "
+                f"divides the cell's sequence")
 
 
 class ParamSpace:
@@ -129,12 +149,26 @@ class ParamSpace:
     def defaults(self) -> Dict[str, Any]:
         return {k.name: k.default for k in self}
 
+    def seq_tile_knobs(self) -> Tuple[str, ...]:
+        """Pallas sequence-tile knobs (validated against the cell's
+        sequence lengths by evaluators that actually run kernels)."""
+        return tuple(k.name for k in self if k.seq_tile)
+
     # ------------------------------------------------------- validation
-    def validate(self, cfg: Any) -> None:
-        """Check every tunable field of a TunableConfig-like object."""
+    def validate(self, cfg: Any, seq_len: int = None) -> None:
+        """Check every tunable field of a TunableConfig-like object.
+
+        With ``seq_len`` the sequence-tile knobs are additionally
+        checked for divisibility against that concrete sequence length
+        (a non-dividing tile is a deterministic crash trial, not a deep
+        Pallas error).  Callers that never execute a kernel — the
+        roofline evaluator in particular — pass no ``seq_len`` and keep
+        their historical behaviour bit-identical."""
         for k in self:
             if k.tunable:
                 k.validate(getattr(cfg, k.name))
+            if seq_len is not None and k.seq_tile:
+                k.validate_tile(getattr(cfg, k.name), seq_len)
 
     def validate_delta(self, delta: Dict[str, Any]) -> None:
         """Check a partial assignment (e.g. a tree stage alternative)."""
@@ -203,7 +237,8 @@ SPACE = ParamSpace([
          doc="spark.shuffle.file.buffer (q tile)",
          sweep=(128, 256, 512),
          reach_evidence="Pallas kernel tile only; never in the "
-                        "calibration compiles (attn_impl forced to xla)"),
+                        "calibration compiles (attn_impl forced to xla)",
+         seq_tile=True),
     # the kv tile joined the sweep alongside the q tile: both are
     # analytic-only, so the whole sweep reuses one compile
     Knob("attn_block_kv", (128, 256, 512), "analytic",
@@ -211,7 +246,8 @@ SPACE = ParamSpace([
          doc="spark.shuffle.file.buffer (kv tile)",
          sweep=(128, 256, 512),
          reach_evidence="Pallas kernel tile only; never in the "
-                        "calibration compiles (attn_impl forced to xla)"),
+                        "calibration compiles (attn_impl forced to xla)",
+         seq_tile=True),
     # 9. spark.shuffle.consolidateFiles
     Knob("fuse_grad_collectives", (False, True), "compile",
          spark="spark.shuffle.consolidateFiles",

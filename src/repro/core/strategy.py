@@ -238,6 +238,12 @@ class StrategySpec:
     #                                          threshold, options) -> cursor
     load_report: Callable[[Dict], Any]       # checkpointed dict -> report
     description: str = ""
+    #: whether the measured tier (core/measure.py) can re-rank this
+    #: strategy's reports — requires a TuningReport-shaped report (a
+    #: trial log of candidate configs plus a ``measured`` slot).  The
+    #: sensitivity matrix reports knob impacts, not candidates, so the
+    #: campaign's ``measure_top_k`` pass skips it.
+    measurable: bool = True
 
 
 STRATEGIES: Dict[str, StrategySpec] = {}
@@ -331,7 +337,8 @@ register_strategy(StrategySpec(
 register_strategy(StrategySpec(
     "sensitivity", SensitivityCursor.strategy_version,
     _sensitivity_factory, _load_sensitivity_report,
-    "the Sec.-4 OFAT sensitivity matrix (Table 2)"))
+    "the Sec.-4 OFAT sensitivity matrix (Table 2)",
+    measurable=False))
 register_strategy(StrategySpec(
     "random", RandomCursor.strategy_version, _random_factory,
     _load_tuning_report,

@@ -91,6 +91,11 @@ class TuningReport:
     n_trials: int
     accepted: List[str]
     log: List[Dict]
+    #: measured-tier re-rank summary (core/measure.py), attached by the
+    #: campaign when ``measure_top_k > 0``; None for model-only walks —
+    #: and deliberately excluded from ``tuning_fingerprint``, so
+    #: model-tier decisions stay bit-identical with or without it
+    measured: Optional[Dict] = None
 
     @property
     def speedup(self) -> float:

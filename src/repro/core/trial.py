@@ -401,38 +401,82 @@ class RooflineEvaluator:
         return res
 
 
-class WallClockEvaluator:
-    """The paper's protocol: median of n repeats of the real step."""
+def _zeros_args(bundle) -> Tuple:
+    """Concrete zero-filled arguments matching a bundle's abstract
+    argument structs (the default when no ``make_args`` is supplied —
+    timing does not care about values, only shapes/dtypes/shardings)."""
+    import jax.numpy as jnp
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), bundle.args)
 
-    def __init__(self, mesh_factory: Callable, make_args: Callable,
+
+class WallClockEvaluator:
+    """The paper's protocol: median of n repeats of the real step.
+
+    Hardened to the same contract as :class:`RooflineEvaluator` (the
+    measured tier, core/measure.py, runs it under the deadline/retry
+    executor): exceptions are classified through
+    :func:`classify_exception` — a :class:`TrialError` raised by a
+    caching wrapper keeps its pre-tagged class — and every result
+    carries ``compiles``/``compile_s``/``cached`` accounting, so
+    measured crashes and costs land in checkpoints/history with the
+    full PR-6 taxonomy instead of a bare string.
+
+    ``make_args`` defaults to zero-filled concrete arguments derived
+    from the step bundle; ``mesh_factory`` defaults to the production
+    mesh (real hardware).  Tile knobs are validated against the cell's
+    sequence length up front, so a non-dividing ``attn_block_q/kv`` is
+    a clean deterministic-crash trial, not a Pallas grid assertion.
+    """
+
+    def __init__(self, mesh_factory: Optional[Callable] = None,
+                 make_args: Optional[Callable] = None,
                  repeats: int = 5):
+        if mesh_factory is None:
+            from repro.launch.mesh import make_production_mesh
+            mesh_factory = make_production_mesh
         self._mesh_factory = mesh_factory
         self._make_args = make_args     # (wl, rt, mesh) -> concrete args
         self.repeats = repeats
 
     def __call__(self, wl: Workload, rt: TunableConfig) -> TrialResult:
+        from repro.core.space import SPACE
         from repro.runtime.stepfn import build_step
+        t0 = time.time()
+        compile_s = 0.0
+        compiles = 0
         try:
+            SPACE.validate(rt, seq_len=wl.shp.seq_len)
             mesh = self._mesh_factory(multi_pod=wl.multi_pod)
             bundle = build_step(wl.cfg, wl.shp, rt, mesh)
-            args = self._make_args(wl, rt, mesh)
+            args = self._make_args(wl, rt, mesh) \
+                if self._make_args is not None else _zeros_args(bundle)
             with mesh:
+                c0 = time.time()
                 compiled = bundle.fn.lower(*args).compile()
+                compile_s = round(time.time() - c0, 2)
+                compiles = 1
                 ts = []
                 for _ in range(self.repeats):
-                    t0 = time.time()
+                    t1 = time.time()
                     out = compiled(*args)
                     jax.block_until_ready(out)
-                    ts.append(time.time() - t0)
+                    ts.append(time.time() - t1)
                     if rt.donate_buffers and bundle.kind == "train":
                         args = (out[0], out[1], args[2])
                     elif rt.donate_buffers and bundle.kind == "decode":
                         args = (args[0], out[1], args[2])
-            return TrialResult(cost_s=float(np.median(ts)))
+            return TrialResult(cost_s=float(np.median(ts)),
+                               compiles=compiles, compile_s=compile_s)
         except Exception as e:
+            # TrialError already carries the stored "TypeName: msg"
+            err = str(e) if isinstance(e, TrialError) \
+                else f"{type(e).__name__}: {e}"
             return TrialResult(cost_s=float("inf"), crashed=True,
-                               error=f"{type(e).__name__}: {e}"[:500],
-                               failure=classify_exception(e))
+                               error=err[:500],
+                               failure=classify_exception(e),
+                               compiles=compiles,
+                               compile_s=compile_s or
+                               round(time.time() - t0, 2))
 
 
 @dataclasses.dataclass

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+from repro.kernels.tiling import fit_block
 
 
 def _on_cpu() -> bool:
@@ -17,10 +18,16 @@ def _on_cpu() -> bool:
 
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
                     block_kv: int = 128):
-    """q/k/v: (B, S, H, hd) (kv already GQA-repeated) -> (B, S, H, hd)."""
+    """q/k/v: (B, S, H, hd) (kv already GQA-repeated) -> (B, S, H, hd).
+
+    Blocks are fitted to the largest divisor of S <= the request, so
+    ragged sequence lengths stay correct (kernels require block | S)."""
+    S = q.shape[1]
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    o = flash_attention_bhsd(qt, kt, vt, causal=causal, block_q=block_q,
-                             block_kv=block_kv, interpret=_on_cpu())
+    o = flash_attention_bhsd(qt, kt, vt, causal=causal,
+                             block_q=fit_block(block_q, S),
+                             block_kv=fit_block(block_kv, S),
+                             interpret=_on_cpu())
     return o.transpose(0, 2, 1, 3)

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_decode.flash_decode import flash_decode_bhsd
+from repro.kernels.tiling import fit_block
 
 
 def _on_cpu() -> bool:
@@ -25,6 +26,7 @@ def flash_decode(q, k_cache, v_cache, length, k_scale=None, v_scale=None,
     vs = v_scale.transpose(0, 2, 1, 3) if v_scale is not None else None
     o = flash_decode_bhsd(qt, kt, vt, ks, vs,
                           jnp.asarray([length], jnp.int32),
-                          block_kv=block_kv, n_rep=H // Hkv,
+                          block_kv=fit_block(block_kv, k_cache.shape[1]),
+                          n_rep=H // Hkv,
                           interpret=_on_cpu())
     return o.transpose(0, 2, 1, 3).astype(q.dtype)

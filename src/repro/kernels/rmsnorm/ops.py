@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.rmsnorm.rmsnorm import rmsnorm_2d
+from repro.kernels.tiling import fit_block
 
 
 def _on_cpu() -> bool:
@@ -11,8 +12,12 @@ def _on_cpu() -> bool:
 
 
 def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 256):
+    """Accepts (..., d); the row block is fitted to the largest divisor
+    of the flattened row count <= the request (the kernel's own
+    fallback halves, which lands on 1 for odd row counts)."""
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
-    y = rmsnorm_2d(x2, scale, eps=eps, block_rows=block_rows,
+    y = rmsnorm_2d(x2, scale, eps=eps,
+                   block_rows=fit_block(block_rows, x2.shape[0]),
                    interpret=_on_cpu())
     return y.reshape(shape)

@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.ssm_scan.ssm_scan import ssm_scan_grid
+from repro.kernels.tiling import fit_block
 
 
 def _on_cpu() -> bool:
@@ -11,11 +12,13 @@ def _on_cpu() -> bool:
 
 
 def ssm_scan(X, Bm, Cm, dt, la, *, chunk: int = 256):
-    """X: (B,S,H,P); Bm/Cm: (B,S,N); dt/la: (B,S,H) -> (Y, h_final)."""
+    """X: (B,S,H,P); Bm/Cm: (B,S,N); dt/la: (B,S,H) -> (Y, h_final).
+
+    The chunk is fitted to the largest divisor of S <= the request, so
+    ragged sequence lengths stay correct (the grid requires chunk | S)."""
     B, S, H, P = X.shape
     N = Bm.shape[-1]
-    chunk = min(chunk, S)
-    assert S % chunk == 0, (S, chunk)
+    chunk = fit_block(chunk, S)
     nc = S // chunk
     Xg = X.reshape(B, nc, chunk, H, P).transpose(0, 3, 1, 2, 4)
     Bg = Bm.reshape(B, nc, chunk, N)

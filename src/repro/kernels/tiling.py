@@ -1,0 +1,29 @@
+"""Shared tile fitting for the public kernel wrappers.
+
+The Pallas kernels require their block size to divide the gridded
+dimension (``flash_attention_bhsd``/``ssm_scan_grid`` assert it).  The
+public ops wrappers accept *any* shape — model-zoo callers pass ragged
+sequence lengths — so each wrapper fits the requested block to the
+largest divisor of the dimension that is not larger than the request.
+For the power-of-two shapes the models produce this is the identity
+(or the historical ``min(block, n)`` clamp); for ragged shapes it
+keeps the kernel correct instead of assert-crashing.
+
+The *tuner* is stricter on purpose: a tile knob that does not divide
+the cell's sequence is a clean deterministic-crash trial
+(``Knob.validate_tile``, core/space.py) — silent re-fitting during
+tuning would alias distinct knob values to one measured config.
+"""
+from __future__ import annotations
+
+
+def fit_block(block: int, n: int) -> int:
+    """Largest divisor of ``n`` that is ``<= min(block, n)`` (and >= 1).
+
+    Scans downward from the clamp; bounded by the clamp value itself,
+    which for every kernel tile in the knob space is <= 512.
+    """
+    b = max(1, min(int(block), int(n)))
+    while n % b:
+        b -= 1
+    return b

@@ -53,6 +53,13 @@ Online mode (core/schedule.py) turns a campaign/fabric into a tuning
   * ``--stop`` — drop the STOP sentinel: ``--watch`` workers exit once
     everything admitted is done.
 
+Measured tier (core/measure.py): ``--measure-top-k K`` re-evaluates
+each cell's top-K surviving configs with real median-of-N jitted step
+timings after the model-driven walk finishes, and publishes the
+measured winner next to the model's choice in the report/checkpoint.
+Kernel cells (``--cells kernel:flash_attention:tiny``) sweep Pallas
+tile knobs with the kernel itself as the trial (core/kernel_cell.py).
+
 Trial hardening (core/executor.py + core/quarantine.py) keeps faults
 from wasting the ≤10-run budget: ``--trial-timeout`` bounds every
 evaluation (a hang becomes a ``timeout`` failure instead of wedging
@@ -188,7 +195,8 @@ def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
                   evaluator=None, warm_start: bool = False,
                   prioritize: str = "arch", intake: bool = True,
                   trial_timeout_s=None, max_retries: int = 0,
-                  strike_threshold=None):
+                  strike_threshold=None, measure_top_k: int = 0,
+                  measured_evaluator=None):
     """Run a strategy over a batch of cells in one concurrent campaign;
     returns ``{cell_key: report}`` plus the campaign's throughput
     stats.  Non-tree strategies checkpoint under a per-strategy
@@ -206,12 +214,23 @@ def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
         warm_start=warm_start, prioritize=prioritize, intake=intake,
         trial_timeout_s=trial_timeout_s, max_retries=max_retries,
         strike_threshold=strike_threshold,
+        measure_top_k=measure_top_k,
+        measured_evaluator=measured_evaluator,
         baseline_factory=lambda spec: _baseline(baseline_overrides))
     reports = camp.run()
     for rep in reports.values():
         _save_cell_report(rep, strategy)
     _write_campaign_summary(ckpt, reports, camp.last_stats)
     return reports, camp.last_stats
+
+
+def _load_measured(args):
+    """Resolve --measured-evaluator (None -> the campaign's default
+    measured-tier dispatcher, built lazily only when K > 0)."""
+    if not args.measured_evaluator:
+        return None
+    from repro.core.fabric import load_evaluator
+    return load_evaluator(args.measured_evaluator)
 
 
 def run_worker(args, cells, options) -> int:
@@ -232,7 +251,10 @@ def run_worker(args, cells, options) -> int:
         go_file=pathlib.Path(args.go_file) if args.go_file else None,
         trial_timeout_s=args.trial_timeout,
         max_retries=args.max_retries,
-        strike_threshold=args.strike_threshold)
+        strike_threshold=args.strike_threshold,
+        measure_top_k=args.measure_top_k,
+        measured_evaluator=load_evaluator(args.measured_evaluator)
+        if args.measured_evaluator else None)
     stats = worker.run()
     print(json.dumps(stats, indent=1))
     return 0
@@ -255,6 +277,8 @@ def run_fabric(args, cells, options) -> int:
         trial_timeout_s=args.trial_timeout,
         max_retries=args.max_retries,
         strike_threshold=args.strike_threshold,
+        measure_top_k=args.measure_top_k,
+        measured_evaluator_spec=args.measured_evaluator,
         extra_args=_worker_passthrough(args),
         log_dir=ckpt / "worker_logs")
     reports, stats = out["reports"], out["stats"]
@@ -470,6 +494,20 @@ def main(argv=None) -> int:
                       help="quarantine a config fleet-wide after this "
                            "many strikes (orphaned evaluation intents "
                            "from dead workers, or timeouts); default 3")
+    meas = ap.add_argument_group("measured tier (core/measure.py)")
+    meas.add_argument("--measure-top-k", type=int, default=0,
+                      metavar="K",
+                      help="after each cell's model-driven walk, "
+                           "re-evaluate its top-K surviving configs "
+                           "with real median-of-N jitted step timings "
+                           "and publish the measured winner (default "
+                           "0: model-only, exactly the historical "
+                           "behavior)")
+    meas.add_argument("--measured-evaluator",
+                      help="module:factory dotted path for the "
+                           "measured-tier evaluator (default: reduced "
+                           "wall-clock proxy + kernel bench, behind "
+                           "the disk timing cache)")
     args = ap.parse_args(argv)
 
     if args.sweep_knobs and args.strategy != "sensitivity":
@@ -492,7 +530,10 @@ def main(argv=None) -> int:
             ("--trial-timeout", args.trial_timeout is not None),
             ("--max-retries", bool(args.max_retries)),
             ("--strike-threshold",
-             args.strike_threshold is not None)) if on]
+             args.strike_threshold is not None),
+            ("--measure-top-k", bool(args.measure_top_k)),
+            ("--measured-evaluator",
+             bool(args.measured_evaluator))) if on]
         if args.add_cells and args.stop:
             ap.error("--add-cells and --stop are separate actions; "
                      "run them as two invocations")
@@ -514,13 +555,20 @@ def main(argv=None) -> int:
             ("--trial-timeout", args.trial_timeout is not None),
             ("--max-retries", bool(args.max_retries)),
             ("--strike-threshold",
-             args.strike_threshold is not None)) if on]
+             args.strike_threshold is not None),
+            ("--measure-top-k", bool(args.measure_top_k)),
+            ("--measured-evaluator",
+             bool(args.measured_evaluator))) if on]
         if ignored:
             ap.error("--status is a read-only action; "
                      f"{', '.join(ignored)} would be ignored — "
                      "drop it or run it separately")
     options = _strategy_options(args.strategy, args.sweep_knobs,
                                 args.budget, args.seed)
+    if args.measure_top_k < 0:
+        ap.error("--measure-top-k must be >= 0")
+    if args.measured_evaluator and not args.measure_top_k:
+        ap.error("--measured-evaluator requires --measure-top-k > 0")
     fabric_mode = args.worker or args.coordinate or args.workers
     if args.fresh and not (args.all or args.cells):
         ap.error("--fresh only applies to campaign/fabric modes")
@@ -559,7 +607,10 @@ def main(argv=None) -> int:
                                        trial_timeout_s=args.trial_timeout,
                                        max_retries=args.max_retries,
                                        strike_threshold=
-                                       args.strike_threshold)
+                                       args.strike_threshold,
+                                       measure_top_k=args.measure_top_k,
+                                       measured_evaluator=
+                                       _load_measured(args))
         print(report.strategy_markdown(reports,
                                        queue=stats.get("queue")))
         print(f"\n[{stats['strategy']}] {stats['cells']} cells in "
@@ -570,6 +621,9 @@ def main(argv=None) -> int:
         return 0
     if not (args.arch and args.shape):
         ap.error("need --arch and --shape, or --cells/--all")
+    if args.measure_top_k:
+        ap.error("--measure-top-k applies to campaign/fabric modes "
+                 "(--cells/--all); single-cell mode is model-only")
     rep = tune_cell(args.arch, args.shape, args.multi_pod, args.threshold,
                     strategy=args.strategy, strategy_options=options)
     print(report.cell_markdown(rep))

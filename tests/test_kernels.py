@@ -97,3 +97,78 @@ def test_flash_attention_noncausal():
         v.transpose(0, 2, 1, 3), causal=False).transpose(0, 2, 1, 3)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------- ragged shapes (PR 7)
+# The public wrappers fit any requested block to the largest divisor of
+# the gridded dim (kernels/tiling.py) — sequence lengths that are NOT a
+# multiple of the tile must stay correct, not assert-crash.
+
+def test_fit_block():
+    from repro.kernels.tiling import fit_block
+    assert fit_block(128, 256) == 128      # divides: identity
+    assert fit_block(512, 256) == 256      # clamp to n
+    assert fit_block(128, 192) == 96       # largest divisor <= 128
+    assert fit_block(128, 97) == 97        # prime: clamp wins
+    assert fit_block(64, 97) == 1          # prime, block < n: degenerate
+    assert fit_block(0, 64) == 1
+
+
+@pytest.mark.parametrize("S", [192, 96, 300])
+@pytest.mark.parametrize("blocks", [(128, 128), (256, 64)])
+def test_flash_attention_ragged(S, blocks):
+    bq, bk = blocks
+    ks = jax.random.split(jax.random.PRNGKey(S), 3)
+    q, k, v = [jax.random.normal(kk, (1, S, 2, 64)) for kk in ks]
+    out = fa_ops.flash_attention(q, k, v, causal=True, block_q=bq,
+                                 block_kv=bk)
+    ref = fa_ref.attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("rows", [111, 5])
+def test_rmsnorm_ragged_rows(rows):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(rows))
+    x = jax.random.normal(k1, (rows, 64))
+    s = jax.random.normal(k2, (64,)) * 0.1 + 1.0
+    out = rms_ops.rmsnorm(x, s, block_rows=256)
+    ref = rms_ref.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("S,chunk", [(96, 64), (130, 32)])
+def test_ssm_scan_ragged(S, chunk):
+    B, H, P, N = 1, 2, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(S), 5)
+    X = jax.random.normal(ks[0], (B, S, H, P))
+    Bm = jax.random.normal(ks[1], (B, S, N)) * 0.5
+    Cm = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    la = -dt * jnp.exp(jax.random.normal(ks[4], (H,)) * 0.2)[None, None]
+    Y, h = ssm_ops.ssm_scan(X, Bm, Cm, dt, la, chunk=chunk)
+    Yr, hr = ssm_ref.ssm_scan_ref(X, Bm, Cm, dt, la)
+    np.testing.assert_allclose(np.asarray(Y), np.asarray(Yr),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_flash_decode_ragged_cache():
+    B, H, Hkv, S, hd, length = 1, 4, 2, 192, 64, 150
+    ks = jax.random.split(jax.random.PRNGKey(S), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    kc = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    vc = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    from repro.kernels.flash_decode import ops as fd, ref as fd_ref
+    out = fd.flash_decode(q, kc, vc, length, block_kv=128)  # fit -> 96
+    tr = lambda t: t.transpose(0, 2, 1, 3)
+    ref = fd_ref.decode_ref(tr(q), tr(kc), tr(vc), None, None,
+                            jnp.array([length])).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-2, rtol=2e-2)
