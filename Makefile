@@ -1,5 +1,5 @@
 .PHONY: verify verify-fast bench-trials bench-campaign bench-fabric \
-	bench-online bench-chaos bench-measured
+	bench-online bench-chaos bench-measured bench-serving
 
 # tier-1: full suite, fail-fast (ROADMAP.md)
 verify:
@@ -36,3 +36,9 @@ bench-chaos:
 # repeat freeness, kernel tile autotuning) -> BENCH_measured.json
 bench-measured:
 	PYTHONPATH=src python -m benchmarks.bench_measured
+
+# serving-loop benchmark (SLO guardrail on/off, bounded bad-config
+# exposure, promotion, repeat-campaign cache freeness)
+# -> BENCH_serving.json
+bench-serving:
+	PYTHONPATH=src python -m benchmarks.bench_serving

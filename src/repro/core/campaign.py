@@ -126,6 +126,10 @@ def parse_cells(text: str,
             from repro.core.kernel_cell import parse_kernel_cell
             cells.append(parse_kernel_cell(item))
             continue
+        if parts[0] == "serve":
+            from repro.serving.evaluator import parse_serve_cell
+            cells.append(parse_serve_cell(item))
+            continue
         if len(parts) not in (2, 3):
             raise ValueError(f"bad cell spec {item!r} "
                              "(want arch:shape[:pod|multipod])")
@@ -203,12 +207,16 @@ def cell_health(log) -> Dict:
 
 def _default_stages(spec: CellSpec) -> Optional[List[Stage]]:
     """The campaign's default stages factory: kernel cells walk their
-    tile-sweep stage (core/kernel_cell.py); step cells return None so
-    the strategy keeps its own default tree — bit-identical to the
-    historical ``lambda spec: None``."""
+    tile-sweep stage (core/kernel_cell.py), serve cells their serving
+    tree (serving/evaluator.py); step cells return None so the strategy
+    keeps its own default tree — bit-identical to the historical
+    ``lambda spec: None``."""
     if str(spec.arch).startswith("kernel-"):
         from repro.core.kernel_cell import kernel_stages
         return kernel_stages(spec)
+    if str(spec.arch).startswith("serve-"):
+        from repro.serving.evaluator import serve_stages
+        return serve_stages(spec)
     return None
 
 

@@ -448,7 +448,8 @@ class FabricWorker:
                  max_retries: int = 0,
                  strike_threshold: Optional[int] = None,
                  measure_top_k: int = 0,
-                 measured_evaluator: Optional[Callable] = None):
+                 measured_evaluator: Optional[Callable] = None,
+                 promote: bool = False):
         if not cells and not watch:
             raise ValueError("fabric worker needs at least one cell "
                              "(or watch mode: claim intake submissions)")
@@ -489,6 +490,11 @@ class FabricWorker:
         # compile cache, so a re-claimed cell's re-rank re-pays nothing
         self.measure_top_k = int(measure_top_k)
         self.measured_evaluator = measured_evaluator
+        # serving promotion (serving/canary.py): after each completed
+        # cell, publish its surviving winner to the shared directory's
+        # per-cell live-config board (the board itself enforces the
+        # never-regress rule, so concurrent workers stay safe)
+        self.promote = bool(promote)
         # one fleet-shared evaluation-intent ledger (core/quarantine.py)
         # over the campaign directory: every worker brackets trials with
         # intent/completion records and skips quarantined configs
@@ -535,7 +541,11 @@ class FabricWorker:
             measured_evaluator=self.measured_evaluator,
             quarantine=self.quarantine)
         with Heartbeat(lease) as hb:
-            camp.run()
+            reports = camp.run()
+        if self.promote and reports:
+            from repro.serving.canary import promote_winners
+            promote_winners(self.dir, reports,
+                            source=self.board.worker_id)
         stats = dict(camp.last_stats)
         stats["lease_lost"] = hb.lost
         return stats
@@ -639,6 +649,8 @@ def worker_argv(cells: Sequence[CellSpec], directory: pathlib.Path, *,
                 strike_threshold: Optional[int] = None,
                 measure_top_k: int = 0,
                 measured_evaluator_spec: Optional[str] = None,
+                slo_ttft: Optional[float] = None,
+                promote: bool = False,
                 extra: Sequence[str] = ()) -> List[str]:
     """The ``launch/tune.py --worker`` command line for one worker."""
     argv = [sys.executable, "-m", "repro.launch.tune", "--worker",
@@ -662,6 +674,10 @@ def worker_argv(cells: Sequence[CellSpec], directory: pathlib.Path, *,
         argv += ["--measure-top-k", str(measure_top_k)]
     if measured_evaluator_spec:
         argv += ["--measured-evaluator", measured_evaluator_spec]
+    if slo_ttft is not None:
+        argv += ["--slo-ttft", str(slo_ttft)]
+    if promote:
+        argv += ["--promote"]
     if prioritize != "arch":
         argv += ["--prioritize", prioritize]
     if watch:
@@ -712,6 +728,8 @@ def run_coordinator(cells: Sequence[CellSpec],
                     strike_threshold: Optional[int] = None,
                     measure_top_k: int = 0,
                     measured_evaluator_spec: Optional[str] = None,
+                    slo_ttft: Optional[float] = None,
+                    promote: bool = False,
                     extra_args: Sequence[str] = (),
                     log_dir: Optional[pathlib.Path] = None,
                     timeout_s: Optional[float] = None) -> Dict[str, Any]:
@@ -752,6 +770,7 @@ def run_coordinator(cells: Sequence[CellSpec],
             strike_threshold=strike_threshold,
             measure_top_k=measure_top_k,
             measured_evaluator_spec=measured_evaluator_spec,
+            slo_ttft=slo_ttft, promote=promote,
             extra=extra_args, log_path=log))
     rcs = [p.wait(timeout=timeout_s) for p in procs]
     wall = time.time() - t0

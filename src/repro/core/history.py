@@ -90,6 +90,11 @@ def cell_signature(arch: str, shape: str, multi_pod: bool = False) -> Dict:
         # so history prioritization and warm-start never crash on them
         from repro.core.kernel_cell import kernel_signature
         return kernel_signature(arch, shape, multi_pod)
+    if arch.startswith("serve-"):
+        # serve cells (serving/evaluator.py): trace name is the shape,
+        # the serving knob subset is the active-knob list
+        from repro.serving.evaluator import serve_signature
+        return serve_signature(arch, shape, multi_pod)
     from repro.configs import get_config, get_shape
     kind = get_shape(shape).kind
     family = get_config(arch).family

@@ -328,13 +328,18 @@ class KernelBenchEvaluator:
 
 
 class DispatchEvaluator:
-    """The campaign's kernel-aware default evaluator: kernel workloads
-    go to the (timing-cached) kernel bench, every other workload passes
-    through to the step evaluator unchanged — a pure-step campaign's
-    decisions are bit-identical to a bare RooflineEvaluator's."""
+    """The campaign's cell-kind-aware default evaluator: kernel
+    workloads go to the (timing-cached) kernel bench, serve workloads
+    to the (timing-cached) traffic-replay evaluator
+    (serving/evaluator.py, lazily built so pure-step campaigns never
+    import the serving stack), every other workload passes through to
+    the step evaluator unchanged — a pure-step campaign's decisions
+    are bit-identical to a bare RooflineEvaluator's."""
 
     def __init__(self, step: Optional[Callable] = None,
-                 kernel: Optional[Callable] = None):
+                 kernel: Optional[Callable] = None,
+                 serve: Optional[Callable] = None,
+                 slo_ttft: Optional[float] = None):
         if step is None:
             from repro.core.trial import RooflineEvaluator
             step = RooflineEvaluator()
@@ -343,10 +348,20 @@ class DispatchEvaluator:
             kernel = CachedMeasure(KernelBenchEvaluator())
         self.step = step
         self.kernel = kernel
+        self.serve = serve
+        self.slo_ttft = slo_ttft
+
+    def _serve_eval(self) -> Callable:
+        if self.serve is None:
+            from repro.serving.evaluator import make_serve_evaluator
+            self.serve = make_serve_evaluator(slo_ttft=self.slo_ttft)
+        return self.serve
 
     def __call__(self, wl: Workload, rt: TunableConfig) -> TrialResult:
         if is_kernel_workload(wl):
             return self.kernel(wl, rt)
+        if str(getattr(wl, "arch", "")).startswith("serve-"):
+            return self._serve_eval()(wl, rt)
         return self.step(wl, rt)
 
 

@@ -94,8 +94,13 @@ class CachedMeasure:
             else int(getattr(evaluator, "repeats", 0))
         self.tag = tag
 
+    def _key(self, wl: Workload, rt: TunableConfig) -> str:
+        """Cache-key hook: subclasses fold extra identity into the key
+        (the serve tier adds the trace's content hash)."""
+        return measure_key(wl, rt, self.repeats, self.tag)
+
     def __call__(self, wl: Workload, rt: TunableConfig) -> TrialResult:
-        key = measure_key(wl, rt, self.repeats, self.tag)
+        key = self._key(wl, rt)
         fresh: List[TrialResult] = []
 
         def build() -> Dict:
@@ -224,7 +229,17 @@ def default_measured_evaluator(cache_dir: Optional[pathlib.Path] = None,
     kern = KernelBenchEvaluator(repeats=repeats)
 
     def dispatch(wl: Workload, rt: TunableConfig) -> TrialResult:
-        return kern(wl, rt) if is_kernel_workload(wl) else step(wl, rt)
+        if is_kernel_workload(wl):
+            return kern(wl, rt)
+        if str(getattr(wl, "arch", "")).startswith("serve-"):
+            # serve cells are *already* measured (the trial cost is a
+            # trace replay): the re-rank pass replays the same trace,
+            # guard off, through its own lazily-built evaluator
+            from repro.serving.evaluator import ServeEvaluator
+            if not hasattr(dispatch, "_serve"):
+                dispatch._serve = ServeEvaluator()
+            return dispatch._serve(wl, rt)
+        return step(wl, rt)
 
     return CachedMeasure(dispatch, cache=TimingCache(cache_dir),
                          repeats=repeats)

@@ -88,6 +88,10 @@ class TunableConfig:
     # infrastructure (not tuned): unrolled layer stack for cost
     # calibration / cross-layer fusion experiments
     unroll_layers: bool = False
+    # serving knobs (tuned only by serve cells via their own stage tree;
+    # analytic reach, so compile keys and step campaigns are unaffected)
+    max_wave_size: int = 4
+    wave_admission: str = "greedy"
 
     def replace(self, **kw) -> "TunableConfig":
         return dataclasses.replace(self, **kw)

@@ -238,6 +238,46 @@ def campaign_markdown(reports: Dict[str, TuningReport],
     return "\n".join(lines)
 
 
+def serving_markdown(live: Dict[str, Optional[Dict]],
+                     history: List[Dict]) -> str:
+    """The serving promotion board (serving/canary.PromotionBoard):
+    one row per serve cell's live config, plus the promotion/demotion
+    history tail.  ``live`` maps cell key -> live-file dict (None =
+    nothing promoted yet)."""
+    lines = ["### Serving: promoted live configs",
+             "",
+             "| cell | live cost | promoted knobs | source |",
+             "|---|---|---|---|"]
+    for key in sorted(live):
+        rec = live[key]
+        if not rec:
+            lines.append(f"| {key} | — (nothing promoted) | — | — |")
+            continue
+        cfg = rec.get("config") or {}
+        knobs = ", ".join(
+            f"{k}={cfg[k]}" for k in ("max_wave_size", "wave_admission",
+                                      "kv_cache_dtype", "donate_buffers",
+                                      "compute_dtype") if k in cfg)
+        lines.append(f"| {key} | {_fmt_s(rec.get('cost_s', float('nan')))}"
+                     f" | {knobs or '—'} | {rec.get('source') or '—'} |")
+    promoted = sum(r.get("action") == "promoted" for r in history)
+    kept = sum(r.get("action") == "kept-incumbent" for r in history)
+    lines += ["",
+              f"* promotion events: {promoted} promoted, {kept} kept "
+              "the incumbent (the live file never regresses)"]
+    demoted = [r for r in history
+               if r.get("action") == "promoted" and r.get("demoted")]
+    if demoted:
+        lines += ["", "| demoted at | cell | old cost | new cost |",
+                  "|---|---|---|---|"]
+        for r in demoted[-10:]:
+            lines.append(
+                f"| {r.get('ts')} | {r.get('cell')} | "
+                f"{_fmt_s((r['demoted'] or {}).get('cost_s', float('nan')))}"
+                f" | {_fmt_s(r.get('cost_s', float('nan')))} |")
+    return "\n".join(lines)
+
+
 def cell_markdown(rep) -> str:
     """Render one cell's report, whatever strategy produced it."""
     if isinstance(rep, SensitivityReport):

@@ -288,4 +288,24 @@ SPACE = ParamSpace([
     # calibration / cross-layer fusion experiments
     Knob("unroll_layers", (False, True), "compile", tunable=False,
          reach_evidence="calibration-compile variant selector"),
+    # serving knobs (not tuned by step/kernel campaigns — only serve
+    # cells propose deltas on them via their own stage tree, so the
+    # classic DOMAINS/sweep/compile-key projections stay byte-identical).
+    # Wave size of the batched serving scheduler: how many requests one
+    # prefill+decode wave carries.
+    Knob("max_wave_size", (4, 2, 8), "analytic", tunable=False,
+         spark="spark.default.parallelism",
+         doc="spark.default.parallelism (serving wave size)",
+         reach_evidence="serving wave scheduler only "
+                        "(serving/scheduler.py BatchScheduler); never "
+                        "enters a step compile"),
+    # Wave admission policy: "greedy" serves whatever has arrived,
+    # "full" holds the wave until max_wave_size requests are queued
+    # (higher batch efficiency, unbounded queue delay on sparse traffic).
+    Knob("wave_admission", ("greedy", "full"), "analytic", tunable=False,
+         spark="spark.locality.wait",
+         doc="spark.locality.wait (serving wave admission)",
+         reach_evidence="serving wave admission only "
+                        "(serving/evaluator.py replay loop); never "
+                        "enters a step compile"),
 ])

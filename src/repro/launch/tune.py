@@ -60,6 +60,17 @@ measured winner next to the model's choice in the report/checkpoint.
 Kernel cells (``--cells kernel:flash_attention:tiny``) sweep Pallas
 tile knobs with the kernel itself as the trial (core/kernel_cell.py).
 
+Serving loop (serving/): ``--cells serve:<arch>:<trace>`` cells replay
+a seeded synthetic traffic trace (serving/traffic.py) through the wave
+scheduler as the trial, scored on TTFT / p95 queue delay / decode
+throughput.  ``--slo-ttft F`` arms the SLO guardrail: a candidate that
+regresses TTFT or queue delay past F x the incumbent's replay stats is
+aborted mid-trace as a deterministic crash (shadow slice first, running
+means after — serving/canary.py).  ``--promote`` publishes each serve
+cell's surviving winner to the campaign directory's per-cell live-config
+board (``<dir>/serving/live/``, atomic, never-regressing) with an
+append-only promotion/demotion history.
+
 Trial hardening (core/executor.py + core/quarantine.py) keeps faults
 from wasting the ≤10-run budget: ``--trial-timeout`` bounds every
 evaluation (a hang becomes a ``timeout`` failure instead of wedging
@@ -181,10 +192,26 @@ def fresh_campaign_dir(ckpt: pathlib.Path, cells) -> None:
             (ckpt / name).unlink()
 
 
+def _serving_board_markdown(ckpt: pathlib.Path) -> str:
+    """The promotion-board section of the campaign summary ('' when the
+    directory has no serving board yet)."""
+    from repro.serving.canary import PromotionBoard
+    board = PromotionBoard(ckpt)
+    live = {p.stem: board.live(p.stem)
+            for p in sorted(board.live_dir.glob("*.json"))}
+    history = board.history()
+    if not live and not history:
+        return ""
+    return report.serving_markdown(live, history)
+
+
 def _write_campaign_summary(ckpt: pathlib.Path, reports, stats) -> None:
     ckpt.mkdir(parents=True, exist_ok=True)
-    (ckpt / "campaign.md").write_text(
-        report.strategy_markdown(reports, queue=stats.get("queue")))
+    text = report.strategy_markdown(reports, queue=stats.get("queue"))
+    serving = _serving_board_markdown(ckpt)
+    if serving:
+        text = text.rstrip("\n") + "\n\n" + serving + "\n"
+    (ckpt / "campaign.md").write_text(text)
     (ckpt / "campaign_stats.json").write_text(
         json.dumps(stats, indent=1))
 
@@ -196,7 +223,8 @@ def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
                   prioritize: str = "arch", intake: bool = True,
                   trial_timeout_s=None, max_retries: int = 0,
                   strike_threshold=None, measure_top_k: int = 0,
-                  measured_evaluator=None):
+                  measured_evaluator=None, slo_ttft=None,
+                  promote: bool = False):
     """Run a strategy over a batch of cells in one concurrent campaign;
     returns ``{cell_key: report}`` plus the campaign's throughput
     stats.  Non-tree strategies checkpoint under a per-strategy
@@ -208,6 +236,11 @@ def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
     ckpt = campaign_dir(strategy, checkpoint_dir)
     if fresh:
         fresh_campaign_dir(ckpt, cells)
+    if evaluator is None and slo_ttft is not None:
+        # the default dispatch stack, with the serve tier's SLO guard
+        # armed — step/kernel cells are routed exactly as before
+        from repro.core.kernel_cell import DispatchEvaluator
+        evaluator = DispatchEvaluator(slo_ttft=slo_ttft)
     camp = Campaign(
         cells, strategy=strategy, strategy_options=strategy_options,
         threshold=threshold, checkpoint_dir=ckpt, evaluator=evaluator,
@@ -220,6 +253,9 @@ def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
     reports = camp.run()
     for rep in reports.values():
         _save_cell_report(rep, strategy)
+    if promote:
+        from repro.serving.canary import promote_winners
+        promote_winners(ckpt, reports, source=f"campaign:{strategy}")
     _write_campaign_summary(ckpt, reports, camp.last_stats)
     return reports, camp.last_stats
 
@@ -237,10 +273,18 @@ def run_worker(args, cells, options) -> int:
     """``--worker``: one fabric worker over a shared directory."""
     from repro.core.fabric import FabricWorker, load_evaluator
     ckpt = campaign_dir(args.strategy, args.dir)
+    if args.evaluator:
+        evaluator = load_evaluator(args.evaluator)
+    elif args.slo_ttft is not None:
+        # default dispatch stack with the serve tier's SLO guard armed
+        from repro.core.kernel_cell import DispatchEvaluator
+        evaluator = DispatchEvaluator(slo_ttft=args.slo_ttft)
+    else:
+        evaluator = load_evaluator(None)
     worker = FabricWorker(
         cells, ckpt, strategy=args.strategy, strategy_options=options,
         threshold=args.threshold,
-        evaluator=load_evaluator(args.evaluator),
+        evaluator=evaluator,
         baseline_factory=lambda spec: _baseline(),
         worker_id=args.worker_id, ttl_s=args.worker_ttl,
         warm_start=args.warm_start,
@@ -254,7 +298,8 @@ def run_worker(args, cells, options) -> int:
         strike_threshold=args.strike_threshold,
         measure_top_k=args.measure_top_k,
         measured_evaluator=load_evaluator(args.measured_evaluator)
-        if args.measured_evaluator else None)
+        if args.measured_evaluator else None,
+        promote=args.promote)
     stats = worker.run()
     print(json.dumps(stats, indent=1))
     return 0
@@ -279,6 +324,7 @@ def run_fabric(args, cells, options) -> int:
         strike_threshold=args.strike_threshold,
         measure_top_k=args.measure_top_k,
         measured_evaluator_spec=args.measured_evaluator,
+        slo_ttft=args.slo_ttft, promote=args.promote,
         extra_args=_worker_passthrough(args),
         log_dir=ckpt / "worker_logs")
     reports, stats = out["reports"], out["stats"]
@@ -508,6 +554,21 @@ def main(argv=None) -> int:
                            "measured-tier evaluator (default: reduced "
                            "wall-clock proxy + kernel bench, behind "
                            "the disk timing cache)")
+    serve = ap.add_argument_group("serving tuning loop (serving/)")
+    serve.add_argument("--slo-ttft", type=float, default=None,
+                       metavar="FACTOR",
+                       help="SLO guardrail for serve:<arch>:<trace> "
+                            "cells: abort (as a deterministic crash) "
+                            "any candidate whose TTFT or queue delay "
+                            "exceeds FACTOR x the incumbent's replay "
+                            "stats — shadow slice per-request first, "
+                            "running means after (default: guard off)")
+    serve.add_argument("--promote", action="store_true",
+                       help="after each serve cell completes, publish "
+                            "its surviving winner to the campaign "
+                            "directory's per-cell live-config board "
+                            "(atomic, never regresses the incumbent, "
+                            "demotions recorded)")
     args = ap.parse_args(argv)
 
     if args.sweep_knobs and args.strategy != "sensitivity":
@@ -533,7 +594,9 @@ def main(argv=None) -> int:
              args.strike_threshold is not None),
             ("--measure-top-k", bool(args.measure_top_k)),
             ("--measured-evaluator",
-             bool(args.measured_evaluator))) if on]
+             bool(args.measured_evaluator)),
+            ("--slo-ttft", args.slo_ttft is not None),
+            ("--promote", args.promote)) if on]
         if args.add_cells and args.stop:
             ap.error("--add-cells and --stop are separate actions; "
                      "run them as two invocations")
@@ -558,7 +621,9 @@ def main(argv=None) -> int:
              args.strike_threshold is not None),
             ("--measure-top-k", bool(args.measure_top_k)),
             ("--measured-evaluator",
-             bool(args.measured_evaluator))) if on]
+             bool(args.measured_evaluator)),
+            ("--slo-ttft", args.slo_ttft is not None),
+            ("--promote", args.promote)) if on]
         if ignored:
             ap.error("--status is a read-only action; "
                      f"{', '.join(ignored)} would be ignored — "
@@ -570,6 +635,17 @@ def main(argv=None) -> int:
     if args.measured_evaluator and not args.measure_top_k:
         ap.error("--measured-evaluator requires --measure-top-k > 0")
     fabric_mode = args.worker or args.coordinate or args.workers
+    if args.slo_ttft is not None and args.slo_ttft <= 0:
+        ap.error("--slo-ttft is a multiplier over the incumbent's "
+                 "replay stats; it must be > 0 (e.g. 3.0)")
+    if args.slo_ttft is not None and args.evaluator:
+        ap.error("--evaluator replaces the dispatch stack that carries "
+                 "the SLO guard; drop --slo-ttft or arm the guard "
+                 "inside the custom evaluator factory")
+    if (args.slo_ttft is not None or args.promote) \
+            and not (args.all or args.cells or fabric_mode):
+        ap.error("--slo-ttft/--promote apply to campaign/fabric modes "
+                 "over serve:<arch>:<trace> cells")
     if args.fresh and not (args.all or args.cells):
         ap.error("--fresh only applies to campaign/fabric modes")
     if args.worker and args.fresh:
@@ -610,7 +686,9 @@ def main(argv=None) -> int:
                                        args.strike_threshold,
                                        measure_top_k=args.measure_top_k,
                                        measured_evaluator=
-                                       _load_measured(args))
+                                       _load_measured(args),
+                                       slo_ttft=args.slo_ttft,
+                                       promote=args.promote)
         print(report.strategy_markdown(reports,
                                        queue=stats.get("queue")))
         print(f"\n[{stats['strategy']}] {stats['cells']} cells in "

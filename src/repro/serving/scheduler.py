@@ -33,7 +33,9 @@ class Request:
     tokens: np.ndarray               # (prompt_len,) int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
-    t_submit: float = 0.0
+    # None = "stamp at submit"; an explicit value (virtual-clock replay,
+    # serving/evaluator.py) is preserved even when it is exactly 0.0
+    t_submit: Optional[float] = None
     # outputs
     generated: List[int] = dataclasses.field(default_factory=list)
     t_first_token: Optional[float] = None
@@ -41,8 +43,11 @@ class Request:
 
     @property
     def ttft_s(self) -> Optional[float]:
-        return (self.t_first_token - self.t_submit
-                if self.t_first_token else None)
+        # explicit None checks: a first token at timestamp 0.0 (virtual
+        # clocks start there) is a served token, not an unserved request
+        if self.t_first_token is None or self.t_submit is None:
+            return None
+        return self.t_first_token - self.t_submit
 
 
 @dataclasses.dataclass
@@ -54,19 +59,32 @@ class ServeMetrics:
     ttft_s: List[float] = dataclasses.field(default_factory=list)
 
     def summary(self) -> Dict[str, float]:
+        # every ratio is guarded: a drained-empty scheduler (zero
+        # completed requests, zero wall time) summarizes to zeros
+        # instead of dividing by zero
+        if self.ttft_s:
+            ordered = sorted(self.ttft_s)
+            mean_ttft = sum(ordered) / len(ordered)
+            p95_ttft = ordered[min(len(ordered) - 1,
+                                   int(0.95 * len(ordered)))]
+        else:
+            mean_ttft = p95_ttft = 0.0
         return {
             "requests": self.requests,
-            "decode_tok_per_s": self.decode_tokens / max(self.wall_s, 1e-9),
+            "decode_tok_per_s": (self.decode_tokens / self.wall_s
+                                 if self.wall_s > 0 else 0.0),
             "prefill_tokens": self.prefill_tokens,
-            "mean_ttft_s": (sum(self.ttft_s) / len(self.ttft_s)
-                            if self.ttft_s else 0.0),
+            "mean_ttft_s": mean_ttft,
+            "p95_ttft_s": p95_ttft,
         }
 
 
 class BatchScheduler:
     def __init__(self, cfg: ArchConfig, rt: TunableConfig, params,
                  wave_size: int = 4, max_seq: int = 128,
-                 max_wait_s: float = 0.0):
+                 max_wait_s: float = 0.0,
+                 pad_to: Optional[int] = None,
+                 pad_wave: bool = False):
         self.cfg = cfg
         self.rt = rt
         self.params = params
@@ -74,19 +92,34 @@ class BatchScheduler:
         self.wave_size = wave_size
         self.max_seq = max_seq
         self.max_wait_s = max_wait_s
+        # pad_to fixes the padded prompt length across waves (one
+        # prefill compile per config during trace replay); None keeps
+        # the historical per-wave max.  pad_wave additionally pads the
+        # batch dimension to wave_size with filler lanes (excluded from
+        # all metrics), fixing the compile geometry entirely.
+        self.pad_to = pad_to
+        self.pad_wave = pad_wave
         self.queue: Deque[Request] = collections.deque()
         self.metrics = ServeMetrics()
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill_fn(p, b, rt, max_seq=max_seq))
+        # donate the cache operand, mirroring stepfn.build_decode_step:
+        # donate_buffers is a tunable and must reach the decode path here
+        # exactly as it does in the step-function tier
+        self._decode_donate = (1,) if rt.donate_buffers else ()
         self._decode = jax.jit(
-            lambda p, c, t: self.model.decode_fn(p, c, t, rt))
+            lambda p, c, t: self.model.decode_fn(p, c, t, rt),
+            donate_argnums=self._decode_donate)
 
     def submit(self, req: Request):
-        req.t_submit = req.t_submit or time.time()
+        if req.t_submit is None:     # preserve explicit virtual clocks,
+            req.t_submit = time.time()   # including a legitimate 0.0
         self.queue.append(req)
 
     # ------------------------------------------------------------ waves
     def _admit_wave(self) -> List[Request]:
+        if not self.queue and self.max_wait_s <= 0:
+            return []
         deadline = time.time() + self.max_wait_s
         while (len(self.queue) < self.wave_size
                and time.time() < deadline):
@@ -99,7 +132,10 @@ class BatchScheduler:
     def _pad_prompts(self, wave: List[Request]):
         # left-pad to a common length so last prompt token aligns
         L = max(len(r.tokens) for r in wave)
-        toks = np.zeros((len(wave), L), np.int32)
+        if self.pad_to is not None:
+            L = max(L, int(self.pad_to))
+        B = max(len(wave), self.wave_size) if self.pad_wave else len(wave)
+        toks = np.zeros((B, L), np.int32)
         for i, r in enumerate(wave):
             toks[i, L - len(r.tokens):] = r.tokens
         return jnp.asarray(toks)
@@ -114,10 +150,11 @@ class BatchScheduler:
         if self.cfg.family == "encdec":
             S = tokens.shape[1]
             batch["frames"] = jnp.zeros(
-                (len(wave), max(1, S // self.cfg.enc_seq_ratio),
+                (tokens.shape[0], max(1, S // self.cfg.enc_seq_ratio),
                  self.cfg.d_model), jnp.dtype(self.rt.compute_dtype))
         logits, cache = self._prefill(self.params, batch)
-        self.metrics.prefill_tokens += int(tokens.size)
+        # filler lanes (pad_wave) never count toward metrics
+        self.metrics.prefill_tokens += int(len(wave) * tokens.shape[1])
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         now = time.time()
         for i, r in enumerate(wave):
@@ -144,8 +181,10 @@ class BatchScheduler:
                     r.t_done = time.time()
         now = time.time()
         for r in wave:
-            r.t_done = r.t_done or now
-            self.metrics.ttft_s.append(r.ttft_s or 0.0)
+            if r.t_done is None:
+                r.t_done = now
+            ttft = r.ttft_s
+            self.metrics.ttft_s.append(ttft if ttft is not None else 0.0)
         self.metrics.requests += len(wave)
         self.metrics.wall_s += now - t0
         return wave
@@ -153,5 +192,8 @@ class BatchScheduler:
     def run_until_drained(self) -> List[Request]:
         out = []
         while self.queue:
-            out.extend(self.run_wave())
+            wave = self.run_wave()
+            if not wave:         # guard: an empty admission must not
+                break            # spin the drain loop forever
+            out.extend(wave)
         return out

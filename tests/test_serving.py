@@ -1,5 +1,7 @@
 """Batched serving scheduler: wave admission, EOS/budget retirement,
-metrics, variable-length prompts."""
+metrics, variable-length prompts, padded replay geometry, and the
+tunables (kv_cache_dtype / donate_buffers) that must reach the
+prefill/decode path."""
 import numpy as np
 import pytest
 
@@ -8,7 +10,8 @@ import jax
 from repro.configs import get_reduced
 from repro.core.params import default_config
 from repro.models.model import build_model
-from repro.serving.scheduler import BatchScheduler, Request
+from repro.serving.scheduler import (BatchScheduler, Request,
+                                     ServeMetrics)
 
 
 @pytest.fixture(scope="module")
@@ -70,3 +73,91 @@ def test_eos_retires_lane_early():
                       max_new_tokens=10, eos_id=eos))
     r2 = s2.run_until_drained()[0]
     assert len(r2.generated) == 1
+
+
+# ---------------------------------------------------- edge cases (ISSUE 8)
+def test_drained_empty_queue_returns_empty(sched):
+    assert sched.run_until_drained() == []
+
+
+def test_empty_metrics_summary_is_all_zeros():
+    m = ServeMetrics().summary()
+    assert m["requests"] == 0
+    assert m["decode_tok_per_s"] == 0.0
+    assert m["mean_ttft_s"] == 0.0
+    assert m["p95_ttft_s"] == 0.0
+
+
+def test_admit_wave_empty_queue_no_wait(sched):
+    # max_wait_s=0 + empty queue must return immediately, not poll
+    assert sched._admit_wave() == []
+
+
+def test_explicit_t_submit_zero_is_preserved(sched):
+    # virtual-clock replays submit requests with t_submit=0.0; the
+    # scheduler must not clobber that falsy-but-legitimate timestamp
+    r = _req(30, 6, max_new=2)
+    r.t_submit = 0.0
+    sched.submit(r)
+    done = sched.run_until_drained()
+    got = [x for x in done if x.rid == 30][0]
+    assert got.t_submit == 0.0
+    assert got.ttft_s is not None and got.ttft_s > 1.0  # wall - 0.0
+
+
+def test_ttft_none_until_first_token():
+    r = _req(31, 4)
+    assert r.ttft_s is None          # not yet submitted or served
+    r.t_submit = 0.0
+    assert r.ttft_s is None          # submitted, nothing served yet
+
+
+def test_wave_admission_respects_wave_size(sched):
+    for i in range(40, 45):
+        sched.submit(_req(i, 6, max_new=2))
+    wave = sched.run_wave()
+    assert len(wave) == sched.wave_size
+    sched.run_until_drained()
+
+
+def test_pad_to_and_pad_wave_fix_geometry():
+    cfg = get_reduced("smollm-135m")
+    rt = default_config()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    s = BatchScheduler(cfg, rt, params, wave_size=3, max_seq=64,
+                       pad_to=32, pad_wave=True)
+    s.submit(_req(1, 5, max_new=2))
+    toks = s._pad_prompts([s.queue[0]])
+    # one request still pads to the full (wave_size, pad_to) geometry:
+    # every wave of the replay compiles exactly one prefill program
+    assert toks.shape == (3, 32)
+    done = s.run_until_drained()
+    assert [r.rid for r in done] == [1]
+    # filler lanes never count toward metrics
+    assert s.metrics.requests == 1
+    assert s.metrics.prefill_tokens == 32
+
+
+def test_kv_cache_dtype_reaches_decode_path():
+    cfg = get_reduced("smollm-135m")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+
+    def cache_dtypes(rt):
+        s = BatchScheduler(cfg, rt, params, wave_size=1, max_seq=64)
+        _, cache = s._prefill(params, {"tokens": np.ones((1, 8),
+                                                         np.int32)})
+        return {str(x.dtype) for x in jax.tree_util.tree_leaves(cache)}
+
+    assert "int8" in cache_dtypes(default_config(kv_cache_dtype="int8"))
+    assert "int8" not in cache_dtypes(default_config())
+
+
+def test_donate_buffers_reaches_decode_jit():
+    cfg = get_reduced("smollm-135m")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    on = BatchScheduler(cfg, default_config(donate_buffers=True),
+                        params, wave_size=1, max_seq=64)
+    off = BatchScheduler(cfg, default_config(donate_buffers=False),
+                         params, wave_size=1, max_seq=64)
+    assert on._decode_donate == (1,)    # the cache operand is donated
+    assert off._decode_donate == ()

@@ -1,0 +1,126 @@
+"""Traffic traces (serving/traffic.py): deterministic generation,
+byte-stable serialization, cross-process identity.
+
+The serving tuner's correctness rests on every trial of every config
+seeing bit-identical traffic — these tests pin that contract: same
+seed -> same bytes -> same trace key, on this process and on a fresh
+interpreter.
+"""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.serving.traffic import (TRACE_SPECS, Tenant, Trace,
+                                   TraceSpec, generate, get_trace,
+                                   request_tokens, trace_names)
+
+_TENANTS = (Tenant("chat", 0.7, (4, 12), (3, 6)),
+            Tenant("batch", 0.3, (12, 24), (2, 4)))
+
+
+def _spec(pattern="poisson", seed=99, n=12):
+    return TraceSpec(name=f"t_{pattern}", pattern=pattern,
+                     n_requests=n, mean_rate=0.5, seed=seed,
+                     tenants=_TENANTS)
+
+
+# ----------------------------------------------------------- determinism
+def test_same_seed_same_bytes():
+    a, b = generate(_spec()), generate(_spec())
+    assert a.to_json() == b.to_json()
+    assert a.key() == b.key()
+
+
+def test_different_seed_different_bytes():
+    assert generate(_spec(seed=1)).key() != generate(_spec(seed=2)).key()
+
+
+@pytest.mark.parametrize("pattern", ["poisson", "bursty", "diurnal"])
+def test_patterns_generate_valid_traces(pattern):
+    tr = generate(_spec(pattern))
+    assert len(tr.requests) == 12
+    arrivals = [r.arrival_s for r in tr.requests]
+    assert arrivals == sorted(arrivals)
+    assert all(a > 0 for a in arrivals)
+    lo = {t.name: t for t in _TENANTS}
+    for r in tr.requests:
+        ten = lo[r.tenant]
+        assert ten.prompt_len[0] <= r.prompt_len <= ten.prompt_len[1]
+        assert ten.max_new[0] <= r.max_new_tokens <= ten.max_new[1]
+
+
+def test_unknown_pattern_rejected():
+    with pytest.raises(ValueError, match="unknown arrival pattern"):
+        generate(_spec("lunar"))
+
+
+def test_empty_tenant_mix_rejected():
+    with pytest.raises(ValueError, match="empty tenant mix"):
+        generate(TraceSpec(name="t", pattern="poisson", n_requests=1,
+                           mean_rate=1.0, seed=0, tenants=()))
+
+
+def test_request_tokens_deterministic_and_bounded():
+    tr = generate(_spec())
+    for r in tr.requests[:4]:
+        toks = request_tokens(r)
+        assert toks.shape == (r.prompt_len,)
+        assert toks.dtype == np.int32
+        assert toks.min() >= 1          # 0 is the left-pad value
+        assert toks.max() < 500
+        assert np.array_equal(toks, request_tokens(r))
+
+
+# --------------------------------------------------------- serialization
+def test_json_roundtrip_preserves_key(tmp_path):
+    tr = generate(_spec("bursty"))
+    again = Trace.from_json(tr.to_json())
+    assert again.key() == tr.key()
+    assert again.requests == tr.requests
+    path = tmp_path / "traces" / "t.json"
+    tr.save(path)                        # creates the parent, atomic
+    assert Trace.load(path).key() == tr.key()
+
+
+def test_version_mismatch_rejected():
+    doc = json.loads(generate(_spec()).to_json())
+    doc["version"] = "trace-v0"
+    with pytest.raises(ValueError, match="unsupported trace version"):
+        Trace.from_json(json.dumps(doc))
+
+
+def test_registry_traces_expand_and_memoize():
+    assert set(trace_names()) == set(TRACE_SPECS)
+    for name in trace_names():
+        tr = get_trace(name)
+        assert tr is get_trace(name)     # expanded once per process
+        assert len(tr.requests) == TRACE_SPECS[name].n_requests
+        assert tr.max_prompt_len() > 0
+    with pytest.raises(ValueError, match="unknown trace"):
+        get_trace("nope")
+
+
+# -------------------------------------------------------- cross-process
+@pytest.mark.slow
+def test_trace_bytes_identical_across_processes():
+    """A fresh interpreter serializes every registered trace to the
+    same bytes — the property that lets fabric workers on different
+    hosts agree on cached trial costs."""
+    code = ("import hashlib, json\n"
+            "from repro.serving.traffic import get_trace, trace_names\n"
+            "print(json.dumps({n: [get_trace(n).key(),\n"
+            "    hashlib.sha1(get_trace(n).to_json().encode())"
+            ".hexdigest()]\n"
+            "    for n in trace_names()}))\n")
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, check=True)
+    theirs = json.loads(out.stdout.strip().splitlines()[-1])
+    import hashlib
+    for name in trace_names():
+        tr = get_trace(name)
+        assert theirs[name] == [
+            tr.key(),
+            hashlib.sha1(tr.to_json().encode()).hexdigest()]
