@@ -1,5 +1,6 @@
 .PHONY: verify verify-fast bench-trials bench-campaign bench-fabric \
-	bench-online bench-chaos bench-measured bench-serving
+	bench-online bench-chaos bench-measured bench-serving \
+	bench-telemetry
 
 # tier-1: full suite, fail-fast (ROADMAP.md)
 verify:
@@ -42,3 +43,8 @@ bench-measured:
 # -> BENCH_serving.json
 bench-serving:
 	PYTHONPATH=src python -m benchmarks.bench_serving
+
+# telemetry benchmark (event overhead < 2% wall, trace/ledger
+# consistency, bit-identity with tracing off) -> BENCH_telemetry.json
+bench-telemetry:
+	PYTHONPATH=src:. python -m benchmarks.bench_telemetry

@@ -1,0 +1,246 @@
+"""Telemetry benchmark: event overhead and trace/ledger consistency.
+
+Two questions about the observability layer (core/telemetry.py), both
+answered on the fabric surface — 2 subprocess workers over a shared
+directory on the deterministic synthetic surface
+(benchmarks/fabric_surface.py) with a fixed per-trial latency, the
+exact setup of benchmarks/bench_fabric.py:
+
+  * **overhead** — the same 2-worker campaign with tracing off vs on.
+    Workers start behind a ready/go file barrier so wall covers fabric
+    work, not interpreter cold start; each arm runs ``REPEATS`` times
+    and the minimum wall is compared (the minimum is the
+    least-noise-contaminated sample of a fixed workload).  Telemetry
+    must cost **< 2% wall**, and decisions must stay bit-identical to
+    the single-process campaign in *both* arms.
+  * **consistency** — the traced arm also carries the evaluation
+    ledger (``FABRIC_SURFACE_LEDGER``: one line per evaluation the
+    surface actually ran).  The Chrome-trace export's ``trial``
+    duration-slice count must equal the ledger's line count — every
+    paid trial shows up on the timeline, no more, no fewer — and
+    ``metrics.json`` must agree.
+
+Results land in results/benchmarks/BENCH_telemetry.json and a copy at
+the repo root (BENCH_telemetry.json) for CI tracking.
+
+Run:  PYTHONPATH=src:. python -m benchmarks.bench_telemetry
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+import pathlib
+import shutil
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+DEFAULT_CELLS = ("smollm-135m:train_4k,smollm-135m:prefill_32k,"
+                 "xlstm-1.3b:prefill_32k,xlstm-1.3b:decode_32k")
+TRIAL_LATENCY_S = 0.5
+N_WORKERS = 2
+REPEATS = 2
+EVALUATOR_SPEC = "benchmarks.fabric_surface:make_evaluator"
+MAX_OVERHEAD_PCT = 2.0
+
+
+def _baseline(spec=None):
+    from repro.core.params import default_config
+    return default_config(shard_strategy="fsdp_tp", attn_impl="pallas")
+
+
+def _env(sleep_s=0.0, ledger=None):
+    from benchmarks.fabric_surface import LEDGER_ENV, SLEEP_ENV
+    env = os.environ.copy()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(ROOT / "src"), str(ROOT)]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    env[SLEEP_ENV] = str(sleep_s)
+    if ledger:
+        env[LEDGER_ENV] = str(ledger)
+    else:
+        env.pop(LEDGER_ENV, None)
+    return env
+
+
+def _wait_files(paths, timeout_s=120.0):
+    deadline = time.time() + timeout_s
+    while time.time() < deadline:
+        if all(p.exists() for p in paths):
+            return
+        time.sleep(0.05)
+    missing = [str(p) for p in paths if not p.exists()]
+    raise TimeoutError(f"barrier files never appeared: {missing}")
+
+
+def _reference_reports(cells):
+    """Single-process campaign on the same surface — the decision
+    oracle both arms must reproduce bit-for-bit."""
+    from benchmarks.fabric_surface import surface_cost
+    from repro.core.campaign import Campaign
+    return Campaign(cells, evaluator=surface_cost,
+                    baseline_factory=_baseline,
+                    checkpoint_dir=None).run()
+
+
+def _fabric_reports(directory, cells):
+    from repro.core.strategy import get_strategy
+    spec = get_strategy("tree")
+    out = {}
+    for c in cells:
+        d = json.loads((directory / f"{c.key()}.json").read_text())
+        assert d.get("done"), f"{c.key()} incomplete"
+        out[c.key()] = spec.load_report(d["report"])
+    return out
+
+
+def _identical(reports, ref):
+    from repro.core.campaign import tuning_fingerprint
+    return all(tuning_fingerprint(reports[k]) == tuning_fingerprint(ref[k])
+               for k in ref)
+
+
+def run_fleet(cells, d, trace, ledger=None):
+    """One barrier-synchronized 2-worker run; returns measured wall."""
+    from repro.core.fabric import LeaseBoard, spawn_worker
+    barrier = d / "barrier"
+    go = barrier / "go"
+    procs, readies = [], []
+    for i in range(N_WORKERS):
+        ready = barrier / f"ready-{i}"
+        readies.append(ready)
+        procs.append(spawn_worker(
+            cells, d, strategy="tree", evaluator_spec=EVALUATOR_SPEC,
+            ttl_s=30.0, worker_id=f"w{i}", ready_file=ready, go_file=go,
+            trace=trace, log_path=d / "logs" / f"worker-{i}.log",
+            env=_env(sleep_s=TRIAL_LATENCY_S, ledger=ledger)))
+    _wait_files(readies)
+    t0 = time.time()
+    go.parent.mkdir(parents=True, exist_ok=True)
+    go.touch()
+    rcs = [p.wait(timeout=300) for p in procs]
+    wall = time.time() - t0
+    assert not any(rcs), f"worker rcs {rcs}"
+    assert LeaseBoard(d).held() == [], "lease left held"
+    return wall
+
+
+def run_overhead_arms(cells, scratch):
+    """REPEATS runs per arm (off/on), minimum wall each; the first
+    traced run keeps its evidence for the consistency arm."""
+    walls = {"off": [], "on": []}
+    for r in range(REPEATS):
+        d = scratch / f"off-{r}"
+        walls["off"].append(run_fleet(cells, d, trace=False))
+        assert not (d / "events.jsonl").exists(), \
+            "telemetry-off run wrote an event file"
+        traced = scratch / f"on-{r}"
+        walls["on"].append(run_fleet(cells, traced, trace=True,
+                                     ledger=traced / "ledger.jsonl"))
+    off, on = min(walls["off"]), min(walls["on"])
+    return {
+        "repeats": REPEATS,
+        "wall_off_s": [round(w, 3) for w in walls["off"]],
+        "wall_on_s": [round(w, 3) for w in walls["on"]],
+        "min_wall_off_s": round(off, 3),
+        "min_wall_on_s": round(on, 3),
+        "overhead_pct": round((on - off) / off * 100.0, 2),
+    }
+
+
+def run_consistency_checks(cells, traced, ref):
+    """Evidence checks on one traced run's directory."""
+    from repro.core import telemetry
+    records = telemetry.read_events(traced)
+    assert records, "traced run recorded no events"
+    trial_events = [r for r in records if r["kind"] == "trial"]
+    ledger_lines = [line for line in
+                    (traced / "ledger.jsonl").read_text().splitlines()
+                    if line.strip()]
+    trace_path = traced / "trace.json"
+    n_exported = telemetry.export_chrome_trace(traced, trace_path)
+    trace = json.loads(trace_path.read_text())
+    slices = [e for e in trace["traceEvents"]
+              if e.get("ph") == "X" and e.get("cat") == "trial"]
+    # workers publish metrics.json at every cell boundary and at exit;
+    # re-fold here so the assertion sees the complete stream, not
+    # whichever worker's exit-time publish happened to land last
+    assert (traced / telemetry.METRICS_NAME).exists(), \
+        "traced run published no metrics.json"
+    metrics = telemetry.publish_metrics(traced)
+    reports = _fabric_reports(traced, cells)
+    return {
+        "events": len(records),
+        "event_kinds": sorted({r["kind"] for r in records}),
+        "trial_events": len(trial_events),
+        "ledger_evaluations": len(ledger_lines),
+        "trace_trial_slices": len(slices),
+        "trace_events_exported": n_exported,
+        "metrics_trials": metrics["counters"]["trials"],
+        "workers_on_trace": metrics["gauges"]["workers"],
+        "identical_to_single_process": _identical(reports, ref),
+    }
+
+
+def main(cells_spec: str):
+    from repro.core.campaign import parse_cells
+    cells = parse_cells(cells_spec)
+    print(f"batch: {len(cells)} cells "
+          f"({', '.join(c.key() for c in cells)})")
+    scratch = ROOT / "results" / "bench_telemetry_scratch"
+    shutil.rmtree(scratch, ignore_errors=True)
+
+    ref = _reference_reports(cells)
+    overhead = run_overhead_arms(cells, scratch)
+    print(f"overhead: off {overhead['min_wall_off_s']}s, "
+          f"on {overhead['min_wall_on_s']}s "
+          f"-> {overhead['overhead_pct']}%")
+
+    consistency = run_consistency_checks(cells, scratch / "on-0", ref)
+    # the untraced arms decide identically too (they share the oracle)
+    identical_off = _identical(_fabric_reports(scratch / "off-0", cells),
+                               ref)
+    print(f"consistency: {consistency['trial_events']} trial events, "
+          f"{consistency['ledger_evaluations']} ledger evaluations, "
+          f"{consistency['trace_trial_slices']} trace slices, "
+          f"identical={consistency['identical_to_single_process']}")
+
+    out = {
+        "cells": [c.key() for c in cells],
+        "workers": N_WORKERS,
+        "trial_latency_s": TRIAL_LATENCY_S,
+        "evaluator": EVALUATOR_SPEC,
+        "max_overhead_pct": MAX_OVERHEAD_PCT,
+        "overhead": overhead,
+        "consistency": consistency,
+        "identical_without_trace": identical_off,
+    }
+    res_dir = ROOT / "results" / "benchmarks"
+    res_dir.mkdir(parents=True, exist_ok=True)
+    (res_dir / "BENCH_telemetry.json").write_text(
+        json.dumps(out, indent=1))
+    (ROOT / "BENCH_telemetry.json").write_text(json.dumps(out, indent=1))
+    shutil.rmtree(scratch, ignore_errors=True)
+    print(json.dumps(out, indent=1))
+    assert consistency["identical_to_single_process"] and identical_off, \
+        "telemetry changed tuning decisions!"
+    assert overhead["overhead_pct"] < MAX_OVERHEAD_PCT, \
+        f"telemetry overhead {overhead['overhead_pct']}% >= " \
+        f"{MAX_OVERHEAD_PCT}% wall"
+    assert consistency["trace_trial_slices"] \
+        == consistency["ledger_evaluations"], \
+        "trace slice count != evaluation-ledger trial count"
+    assert consistency["trial_events"] == consistency["metrics_trials"], \
+        "metrics.json disagrees with the event stream"
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default=DEFAULT_CELLS,
+                    help="comma-separated arch:shape[:pod|multipod]")
+    a = ap.parse_args()
+    main(a.cells)

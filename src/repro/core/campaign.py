@@ -56,6 +56,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs import SHAPES, get_config, get_shape, list_archs, \
     shape_applicable
+from repro.core import telemetry as _telemetry
 from repro.core.executor import SweepExecutor
 from repro.core.fsutil import atomic_publish
 from repro.core.history import (HISTORY_FILENAME, TrialHistory,
@@ -318,7 +319,8 @@ class Campaign:
                  quarantine: Any = None,
                  strike_threshold: Optional[int] = None,
                  measure_top_k: int = 0,
-                 measured_evaluator: Optional[Callable] = None):
+                 measured_evaluator: Optional[Callable] = None,
+                 telemetry: Any = None):
         if not cells and not intake:
             raise ValueError("campaign needs at least one cell "
                              "(or intake admission)")
@@ -402,6 +404,13 @@ class Campaign:
             raise ValueError("measure_top_k must be >= 0")
         self.measured_evaluator = measured_evaluator
         self._measured_eval: Optional[Callable] = None
+        # ------------------------------------------------- telemetry
+        # Observability only (core/telemetry.py): the bus is handed to
+        # the executors and fed cell lifecycle events, but nothing it
+        # records feeds back into decisions — campaigns are
+        # bit-identical with telemetry on or off (tests/test_telemetry).
+        self.telemetry = (telemetry if telemetry is not None
+                          else _telemetry.current())
         self.last_stats: Dict = {}
 
     # --------------------------------------------------------- per cell
@@ -694,6 +703,12 @@ class Campaign:
                           "the model ranking stands")
         cr.report.measured = md
         self._save_checkpoint(cr)
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "measure.rerank", cell=cr.spec.key(),
+                evaluations=len(rows),
+                overturned=bool(md.get("overturned")),
+                winner_cost_s=md.get("winner_cost_s"))
 
     # -------------------------------------------------------- activation
     def _activate(self, spec: CellSpec) -> _CellRun:
@@ -716,6 +731,11 @@ class Campaign:
                       self._signature(spec, baseline, cursor))
         cr.warmstart = warmstart
         self._apply_checkpoint(cr, ckpt)
+        if self.telemetry.enabled:
+            self.telemetry.emit("cell.activate", cell=spec.key(),
+                                strategy=self.strategy.name,
+                                warmstart=len(cr.warmstart),
+                                replayed=cr.replayed or len(cr.replay))
         return cr
 
     # -------------------------------------------------------------- run
@@ -751,7 +771,8 @@ class Campaign:
             self.evaluator, self.max_workers,
             trial_timeout_s=self.trial_timeout_s,
             max_retries=self.max_retries,
-            quarantine=self.quarantine)
+            quarantine=self.quarantine,
+            telemetry=self.telemetry)
         # key -> ("walk" | "measure", batch, futs)
         pending: Dict[str, Tuple[str, list, list]] = {}
         m_exec: Optional[SweepExecutor] = None
@@ -769,7 +790,8 @@ class Campaign:
                     self._resolve_measured_evaluator(), max_workers=1,
                     trial_timeout_s=self.trial_timeout_s,
                     max_retries=self.max_retries,
-                    quarantine=self.quarantine)
+                    quarantine=self.quarantine,
+                    telemetry=self.telemetry)
             return m_exec
 
         try:
@@ -787,6 +809,11 @@ class Campaign:
                 cands = self._measure_batch(cr)
                 if cands is None:
                     queue.mark_done(cr.spec.key())
+                    if self.telemetry.enabled:
+                        self.telemetry.emit(
+                            "cell.done", cell=cr.spec.key(),
+                            trials=cr.runner.n_trials,
+                            replayed=cr.replayed)
                     return
                 futs = [measured_executor().submit(cr.runner.workload,
                                                    c["config"])

@@ -47,6 +47,7 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
+from repro.core import telemetry as _telemetry
 from repro.core.params import TunableConfig
 from repro.core.trial import (FAILURE_TIMEOUT, FAILURE_WORKER_DEATH,
                               TrialResult, Workload, classify_exception)
@@ -85,24 +86,37 @@ class SweepExecutor:
                  trial_timeout_s: Optional[float] = None,
                  max_retries: int = 0,
                  retry_backoff_s: float = 0.05,
-                 quarantine=None):
+                 quarantine=None,
+                 telemetry=None):
         self.evaluator = evaluator
         self.max_workers = max_workers or default_workers()
         self.trial_timeout_s = trial_timeout_s
         self.max_retries = max_retries
         self.retry_backoff_s = retry_backoff_s
         self.quarantine = quarantine
+        self.telemetry = (telemetry if telemetry is not None
+                          else _telemetry.current())
         self._pool = ThreadPoolExecutor(
             max_workers=self.max_workers,
             thread_name_prefix="sweep")
         self._lock = threading.Lock()
         self._inflight: Dict[Tuple, Future] = {}
         self._zombies: List[threading.Thread] = []
+        # Counters are read by stats() as one consistent snapshot and
+        # mutated from pool threads; every increment MUST go through
+        # _count() (or an explicit `with self._lock` block) — the
+        # concurrent-stress test in tests/test_executor.py enforces
+        # exact totals under contention.
         self.n_evals = 0            # distinct evaluations actually run
         self.n_submitted = 0        # submissions incl. deduplicated ones
         self.n_retries = 0          # transient re-evaluations paid for
         self.n_timeouts = 0         # evaluations abandoned at the deadline
         self.n_quarantined = 0      # candidates skipped as quarantined
+
+    def _count(self, name: str, n: int = 1) -> None:
+        """Thread-safe counter increment (pool threads race on these)."""
+        with self._lock:
+            setattr(self, name, getattr(self, name) + n)
 
     # ------------------------------------------------------------ core
     def submit(self, wl: Workload, rt: TunableConfig) -> Future:
@@ -129,15 +143,41 @@ class SweepExecutor:
                 self._inflight.pop(key, None)
 
     def _evaluate(self, wl: Workload, rt: TunableConfig) -> TrialResult:
+        """One candidate, wrapped in a telemetry trial span.  The span
+        observes the result after the fact — decisions are made by
+        _evaluate_raw alone, so runs are bit-identical with telemetry
+        on or off."""
+        t = self.telemetry
+        if not t.enabled:
+            return self._evaluate_raw(wl, rt)
+        from repro.core.quarantine import config_key
+        with t.span("trial", cell=wl.key(), config=config_key(rt)) as sp:
+            res = self._evaluate_raw(wl, rt)
+            note = {"crashed": res.crashed, "retries": res.retries}
+            if res.cost_s == res.cost_s and res.cost_s != float("inf"):
+                note["cost_s"] = round(res.cost_s, 6)
+            if res.failure:
+                note["failure"] = res.failure
+            if res.cached:
+                note["cached"] = True
+            if res.compile_s:
+                note["compile_s"] = round(res.compile_s, 6)
+            sp.note(**note)
+            return res
+
+    def _evaluate_raw(self, wl: Workload, rt: TunableConfig) -> TrialResult:
         """One candidate through the full hardening stack: quarantine
         guard, then attempt + bounded transient retries."""
+        t = self.telemetry
         q = self.quarantine
         if q is not None:
             from repro.core.quarantine import config_key
             ck = config_key(rt)
             if q.is_quarantined(ck):
-                with self._lock:
-                    self.n_quarantined += 1
+                self._count("n_quarantined")
+                if t.enabled:
+                    t.emit("quarantine.skip", cell=wl.key(), config=ck,
+                           strikes=q.effective_strikes(ck))
                 return TrialResult(
                     cost_s=float("inf"), crashed=True,
                     failure=FAILURE_WORKER_DEATH,
@@ -149,9 +189,12 @@ class SweepExecutor:
         attempt = 0
         while res.retryable and attempt < self.max_retries:
             attempt += 1
-            with self._lock:
-                self.n_retries += 1
-            time.sleep(self._backoff(wl, rt, attempt))
+            self._count("n_retries")
+            backoff = self._backoff(wl, rt, attempt)
+            if t.enabled:
+                t.emit("retry", cell=wl.key(), attempt=attempt,
+                       backoff_s=round(backoff, 4), failure=res.failure)
+            time.sleep(backoff)
             res = self._attempt(wl, rt)
         res.retries = attempt
         return res
@@ -209,6 +252,10 @@ class SweepExecutor:
         with self._lock:
             self._zombies.append(t)
             self.n_timeouts += 1
+        tel = self.telemetry
+        if tel.enabled:
+            tel.emit("timeout", cell=wl.key(),
+                     deadline_s=self.trial_timeout_s)
         return TrialResult(
             cost_s=float("inf"), crashed=True, failure=FAILURE_TIMEOUT,
             error=f"trial exceeded deadline of {self.trial_timeout_s}s "

@@ -52,12 +52,16 @@ semantics of the shared directory: atomic ``O_CREAT | O_EXCL`` create
 (lease claims and steal locks — needs NFSv4+ if the mount is NFS; v2/v3
 O_EXCL is not atomic), atomic same-directory ``rename`` (checkpoints,
 compile-cache entries, heartbeats), and single-``write`` ``O_APPEND``
-appends (the trial history and the quarantine ledger — local
-filesystems only; NFS may interleave bytes across hosts, which the
-torn-tolerant readers survive by *dropping* the damaged lines —
-acceptable for the history, where a lost line only weakens warm-start
-retrieval, but NOT for ``quarantine.jsonl``, where a dropped intent
-gives a worker-killing config a free extra evaluation).  Durability is
+appends (the trial history, the quarantine ledger and the telemetry
+event stream ``events.jsonl`` — local filesystems only; NFS may
+interleave bytes across hosts, which the torn-tolerant readers survive
+by *dropping* the damaged lines — acceptable for the history, where a
+lost line only weakens warm-start retrieval, and for ``events.jsonl``,
+where telemetry is observability and a dropped event only thins the
+timeline/metrics, but NOT for ``quarantine.jsonl``, where a dropped
+intent gives a worker-killing config a free extra evaluation — the
+events file is accordingly written *non*-durable, no per-line fsync,
+since its lines are never correctness signals).  Durability is
 a fourth, quarantine-specific need: intent records must survive the
 very worker crash they are recording, so the ledger (and the lease
 heartbeats + STOP sentinels) is written with ``durable=True``
@@ -86,6 +90,7 @@ import time
 import uuid
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from repro.core import telemetry as _telemetry
 from repro.core.campaign import (CHECKPOINT_VERSION, Campaign, CellSpec)
 from repro.core.executor import SweepExecutor
 from repro.core.fsutil import atomic_publish
@@ -149,6 +154,9 @@ class LeaseBoard:
         self.worker_id = worker_id or \
             f"{socket.gethostname()}-{os.getpid()}-{uuid.uuid4().hex[:6]}"
         self.ttl_s = ttl_s
+        # observability only — the FabricWorker points this at its bus;
+        # claim/steal/lost decisions never read it
+        self.telemetry = _telemetry.NULL
 
     def _path(self, cell: str) -> pathlib.Path:
         return self.dir / f"{cell}.lease"
@@ -238,6 +246,7 @@ class LeaseBoard:
         """Claim a cell; None if a live worker holds it.  Expired
         leases (crashed workers) are stolen."""
         path = self._path(cell)
+        stole = False
         for _ in range(4):               # bounded retries under races
             now = time.time()
             state = LeaseState(cell=cell, worker=self.worker_id,
@@ -246,11 +255,16 @@ class LeaseBoard:
                                acquired_at=now, heartbeat_at=now,
                                ttl_s=self.ttl_s)
             if self._write_new(path, state):
+                tel = self.telemetry
+                if tel.enabled:
+                    tel.emit("lease.steal" if stole else "lease.claim",
+                             cell=cell, ttl_s=self.ttl_s)
                 return Lease(self, state)
             held = self.read(cell)
             if held is not None and not held.expired():
                 return None              # a live worker owns the cell
-            self._bury_expired(cell)     # steal: verified, then retry
+            if self._bury_expired(cell):  # steal: verified, then retry
+                stole = True
         return None
 
     def _refresh(self, lease: Lease) -> bool:
@@ -268,6 +282,10 @@ class LeaseBoard:
             held = self.read(cell)
             if held is None or held.worker != self.worker_id \
                     or held.expired():
+                tel = self.telemetry
+                if tel.enabled:
+                    tel.emit("lease.lost", cell=cell,
+                             holder=held.worker if held else None)
                 raise LeaseLost(
                     f"lease for {cell}: "
                     + ("expired before refresh" if held is not None
@@ -291,6 +309,9 @@ class LeaseBoard:
                 os.unlink(self._path(lease.state.cell))
             except FileNotFoundError:
                 pass
+            tel = self.telemetry
+            if tel.enabled:
+                tel.emit("lease.release", cell=lease.state.cell)
 
     def held(self) -> List[LeaseState]:
         """Every lease currently on the board (including expired ones)."""
@@ -449,7 +470,8 @@ class FabricWorker:
                  strike_threshold: Optional[int] = None,
                  measure_top_k: int = 0,
                  measured_evaluator: Optional[Callable] = None,
-                 promote: bool = False):
+                 promote: bool = False,
+                 trace: bool = False):
         if not cells and not watch:
             raise ValueError("fabric worker needs at least one cell "
                              "(or watch mode: claim intake submissions)")
@@ -468,6 +490,18 @@ class FabricWorker:
         self.baseline_factory = baseline_factory
         self.board = LeaseBoard(self.dir, worker_id=worker_id,
                                 ttl_s=ttl_s)
+        # telemetry (core/telemetry.py): with trace=True this worker
+        # appends span events to the shared <dir>/events.jsonl — and
+        # installs the bus process-globally so the deep layers
+        # (CompileCache, TimingCache, SLOGuard, Quarantine) emit too.
+        # Observability only: decisions are bit-identical either way.
+        if trace:
+            self.telemetry = _telemetry.install(_telemetry.Telemetry(
+                self.dir, worker=self.board.worker_id))
+        else:
+            self.telemetry = _telemetry.current()
+        self.board.telemetry = self.telemetry
+        self.log = _telemetry.get_logger(self.board.worker_id)
         self.poll_s = poll_s
         self.warm_start = warm_start
         self.warm_start_cells = warm_start_cells
@@ -539,7 +573,8 @@ class FabricWorker:
             max_retries=self.max_retries,
             measure_top_k=self.measure_top_k,
             measured_evaluator=self.measured_evaluator,
-            quarantine=self.quarantine)
+            quarantine=self.quarantine,
+            telemetry=self.telemetry)
         with Heartbeat(lease) as hb:
             reports = camp.run()
         if self.promote and reports:
@@ -569,6 +604,11 @@ class FabricWorker:
             while not self.go_file.exists():
                 time.sleep(0.05)
         t0 = time.time()
+        if self.telemetry.enabled:
+            self.telemetry.emit("worker.start", watch=self.watch,
+                                cells=len(self.cells))
+        self.log.info(f"worker up: {len(self.cells)} target cell(s)"
+                      f"{', watch' if self.watch else ''}")
         queue = CellQueue(self.cells, prioritizer=self.prioritize,
                           history=self.history, directory=self.dir)
         completed: List[str] = []
@@ -602,22 +642,43 @@ class FabricWorker:
                 try:
                     if self._done(spec):
                         continue         # raced: finished by another worker
+                    self.log.info(f"claimed {spec.key()}")
                     stats = self._run_cell(spec, lease)
                     completed.append(spec.key())
                     evaluated += stats.get("evaluated_trials", 0)
                     replayed += stats.get("replayed_trials", 0)
                     lease_losses += bool(stats.get("lease_lost"))
+                    if stats.get("lease_lost"):
+                        self.log.warn(f"lease lost on {spec.key()} "
+                                      "(heartbeat went stale)")
+                    self.log.info(
+                        f"completed {spec.key()}: "
+                        f"{stats.get('evaluated_trials', 0)} evaluated, "
+                        f"{stats.get('replayed_trials', 0)} replayed")
                     progress = True
                 finally:
                     lease.release()
                 queue.mark_done(spec.key())
+                if self.telemetry.enabled:
+                    # refresh the live metrics snapshot after each cell
+                    # (atomic last-writer-wins over the shared events)
+                    _telemetry.publish_metrics(self.dir)
                 break                    # re-rank: priority may have moved
             if not progress:
                 # every remaining cell is leased by a live worker — wait
                 # for them (or for their leases to expire) and re-scan
+                self.log.debug("board contended/drained: waiting "
+                               f"{self.poll_s}s")
                 time.sleep(self.poll_s)
                 waited_s += self.poll_s
         snap = queue.snapshot()
+        if self.telemetry.enabled:
+            self.telemetry.emit("worker.stop", cells=len(completed),
+                                evaluated=evaluated, replayed=replayed,
+                                wall_s=round(time.time() - t0, 2))
+            _telemetry.publish_metrics(self.dir)
+        self.log.info(f"worker done: {len(completed)} cell(s), "
+                      f"{evaluated} trials evaluated")
         return {
             "worker": self.board.worker_id,
             "cells_completed": completed,
@@ -651,6 +712,7 @@ def worker_argv(cells: Sequence[CellSpec], directory: pathlib.Path, *,
                 measured_evaluator_spec: Optional[str] = None,
                 slo_ttft: Optional[float] = None,
                 promote: bool = False,
+                trace: bool = False,
                 extra: Sequence[str] = ()) -> List[str]:
     """The ``launch/tune.py --worker`` command line for one worker."""
     argv = [sys.executable, "-m", "repro.launch.tune", "--worker",
@@ -678,6 +740,8 @@ def worker_argv(cells: Sequence[CellSpec], directory: pathlib.Path, *,
         argv += ["--slo-ttft", str(slo_ttft)]
     if promote:
         argv += ["--promote"]
+    if trace:
+        argv += ["--trace"]
     if prioritize != "arch":
         argv += ["--prioritize", prioritize]
     if watch:
@@ -730,6 +794,7 @@ def run_coordinator(cells: Sequence[CellSpec],
                     measured_evaluator_spec: Optional[str] = None,
                     slo_ttft: Optional[float] = None,
                     promote: bool = False,
+                    trace: bool = False,
                     extra_args: Sequence[str] = (),
                     log_dir: Optional[pathlib.Path] = None,
                     timeout_s: Optional[float] = None) -> Dict[str, Any]:
@@ -770,7 +835,7 @@ def run_coordinator(cells: Sequence[CellSpec],
             strike_threshold=strike_threshold,
             measure_top_k=measure_top_k,
             measured_evaluator_spec=measured_evaluator_spec,
-            slo_ttft=slo_ttft, promote=promote,
+            slo_ttft=slo_ttft, promote=promote, trace=trace,
             extra=extra_args, log_path=log))
     rcs = [p.wait(timeout=timeout_s) for p in procs]
     wall = time.time() - t0

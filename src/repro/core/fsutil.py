@@ -23,7 +23,9 @@ Two durability levels:
 
 ``append_jsonl`` is the single copy of the history-style torn-tolerant
 O_APPEND record append (one line per record, self-healing after a torn
-tail) shared by core/history.py and core/quarantine.py.
+tail) shared by core/history.py, core/quarantine.py and the telemetry
+event stream ``events.jsonl`` (core/telemetry.py — non-durable by
+design: a lost event line costs observability, never correctness).
 """
 from __future__ import annotations
 

@@ -57,6 +57,8 @@ class TimingCache(CompileCache):
     (opaque per-cell strings, JSON values, atomic publish) but over the
     full-config measure key."""
 
+    CACHE_KIND = "timing_cache"      # separate hit-rate in metrics.json
+
     def __init__(self, directory: Optional[pathlib.Path] = None,
                  mem_entries: int = 512, use_disk: bool = True):
         super().__init__(directory or TIMING_DIR, mem_entries, use_disk)
@@ -104,7 +106,9 @@ class CachedMeasure:
         fresh: List[TrialResult] = []
 
         def build() -> Dict:
-            res = self.evaluator(wl, rt)
+            from repro.core import telemetry as _telemetry
+            with _telemetry.current().span("measure", cell=wl.key()):
+                res = self.evaluator(wl, rt)
             fresh.append(res)
             if res.crashed:
                 return {"error": res.error, "failure": res.failure,

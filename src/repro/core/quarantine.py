@@ -43,6 +43,7 @@ import time
 import uuid
 from typing import Dict, List, Optional, Set
 
+from repro.core import telemetry as _telemetry
 from repro.core.fsutil import append_jsonl
 from repro.core.params import TunableConfig
 
@@ -138,6 +139,12 @@ class Quarantine:
                 return
         self._append({"type": "strike", "attempt": attempt, "key": key,
                       "cell": cell, "reason": reason})
+        tel = _telemetry.current()
+        if tel.enabled:
+            tel.emit("quarantine.strike", config=key, cell=cell,
+                     reason=reason,
+                     strikes=self.effective_strikes(key),
+                     threshold=self.strike_threshold)
 
     def reap_orphans(self, cell: Optional[str] = None) -> List[str]:
         """Strike every orphaned intent (no completion, no strike) —

@@ -278,6 +278,67 @@ def serving_markdown(live: Dict[str, Optional[Dict]],
     return "\n".join(lines)
 
 
+def telemetry_markdown(metrics: Dict) -> str:
+    """The campaign's "where the time went" section, rendered from the
+    telemetry aggregator's published ``metrics.json``
+    (core/telemetry.fold_metrics).  Appended to the campaign summary
+    only when the directory carries telemetry — untraced output is
+    unchanged."""
+    counters = metrics.get("counters") or {}
+    gauges = metrics.get("gauges") or {}
+    attr = metrics.get("attribution") or {}
+    hit = gauges.get("cache_hit_rate")
+    lines = [
+        "### Telemetry: where the time went",
+        "",
+        f"* events: {metrics.get('events', 0)} over "
+        f"{attr.get('wall_s', 0.0)}s wall, "
+        f"{gauges.get('workers', 0)} worker(s), "
+        f"{gauges.get('trials_per_s', 0.0)} trials/s",
+        f"* compile-cache hit rate: "
+        f"{'—' if hit is None else format(hit, '.0%')}; per-trial "
+        f"rates: {gauges.get('retry_rate', 0)} retry, "
+        f"{gauges.get('timeout_rate', 0)} timeout, "
+        f"{gauges.get('quarantine_rate', 0)} quarantine, "
+        f"{gauges.get('crash_rate', 0)} crash",
+        f"* fleet: {counters.get('lease_claims', 0)} lease claim(s), "
+        f"{counters.get('lease_steals', 0)} steal(s), "
+        f"{counters.get('quarantine_strikes', 0)} strike(s), "
+        f"{counters.get('slo_aborts', 0)} SLO abort(s)",
+        "",
+        "| where | seconds |",
+        "|---|---|",
+        f"| trials (total) | {attr.get('trial_s', 0.0)} |",
+        f"| — compiles | {attr.get('compile_s', 0.0)} |",
+        f"| — evaluation (net of compile) | {attr.get('eval_s', 0.0)} |",
+        f"| measured tier | {attr.get('measure_s', 0.0)} |",
+        f"| idle (worker-seconds) | {attr.get('idle_s', 0.0)} |",
+    ]
+    per_worker = metrics.get("per_worker") or {}
+    if per_worker:
+        lines += ["", "| worker | trials | busy | utilization |",
+                  "|---|---|---|---|"]
+        for w in sorted(per_worker):
+            d = per_worker[w]
+            lines.append(f"| {w} | {d.get('trials', 0)} | "
+                         f"{d.get('busy_s', 0.0)}s | "
+                         f"{format(d.get('utilization', 0.0), '.0%')} |")
+    per_cell = metrics.get("per_cell") or {}
+    if per_cell:
+        lines += ["", "| cell | trials | best cost | "
+                      "first improvement after |",
+                  "|---|---|---|---|"]
+        for c in sorted(per_cell):
+            d = per_cell[c]
+            best = d.get("best_cost_s")
+            fi = d.get("first_improvement_s")
+            lines.append(
+                f"| {c} | {d.get('trials', 0)} | "
+                f"{'—' if best is None else _fmt_s(best)} | "
+                f"{'—' if fi is None else format(fi) + 's'} |")
+    return "\n".join(lines)
+
+
 def cell_markdown(rep) -> str:
     """Render one cell's report, whatever strategy produced it."""
     if isinstance(rep, SensitivityReport):

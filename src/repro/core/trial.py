@@ -43,6 +43,7 @@ import numpy as np
 from repro.configs import get_config, get_shape
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import costmodel
+from repro.core import telemetry as _telemetry
 from repro.core.params import TunableConfig
 
 CACHE_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "trials"
@@ -156,6 +157,12 @@ class CompileCache:
     mid-write) treats it as a miss and rebuilds, repairing the entry.
     """
 
+    #: telemetry event prefix — subclasses with their own semantics
+    #: (the measured tier's TimingCache) override, so the metrics
+    #: aggregator can report compile-cache and timing-cache hit rates
+    #: separately
+    CACHE_KIND = "cache"
+
     def __init__(self, directory: Optional[pathlib.Path] = None,
                  mem_entries: int = 512, use_disk: bool = True):
         self.dir = pathlib.Path(directory) if directory else \
@@ -208,11 +215,14 @@ class CompileCache:
                        prefix=f".{key}.")
 
     def get_or_build(self, key: str, builder: Callable[[], Dict]) -> Dict:
+        tel = _telemetry.current()
         while True:
             val = self._lookup(key)
             if val is not None:
                 with self._lock:
                     self.hits += 1
+                if tel.enabled:
+                    tel.emit(f"{self.CACHE_KIND}.hit", key=key)
                 return val
             with self._lock:
                 ev = self._inflight.get(key)
@@ -221,6 +231,8 @@ class CompileCache:
                     self.misses += 1
                     break
             ev.wait()       # another thread is compiling this program
+        if tel.enabled:
+            tel.emit(f"{self.CACHE_KIND}.miss", key=key)
         try:
             val = builder()
             # memoization policy by failure class: successes go to both
@@ -304,20 +316,23 @@ class RooflineEvaluator:
 
         def build() -> Dict:
             built.append(True)
-            t0 = time.time()
-            try:
-                rl = self._roofline_at(point_cfg, wl.shp, rt_variant, mesh,
-                                       wl.multi_pod)
-                return {"roofline": rl.as_dict(),
-                        "compile_s": round(time.time() - t0, 2)}
-            except Exception as e:
-                # classify BEFORE memoizing: only deterministic program
-                # failures may be remembered (the cache skips transient
-                # entries), so an OSError from the disk cache is not
-                # permanently recorded as a crashed program
-                return {"error": f"{type(e).__name__}: {e}"[:500],
-                        "failure": classify_exception(e),
-                        "compile_s": round(time.time() - t0, 2)}
+            with _telemetry.current().span("compile", cell=wl.key(),
+                                           key=key) as sp:
+                t0 = time.time()
+                try:
+                    rl = self._roofline_at(point_cfg, wl.shp, rt_variant,
+                                           mesh, wl.multi_pod)
+                    return {"roofline": rl.as_dict(),
+                            "compile_s": round(time.time() - t0, 2)}
+                except Exception as e:
+                    # classify BEFORE memoizing: only deterministic program
+                    # failures may be remembered (the cache skips transient
+                    # entries), so an OSError from the disk cache is not
+                    # permanently recorded as a crashed program
+                    sp.note(error=True)
+                    return {"error": f"{type(e).__name__}: {e}"[:500],
+                            "failure": classify_exception(e),
+                            "compile_s": round(time.time() - t0, 2)}
 
         entry = self.compile_cache.get_or_build(key, build)
         acct = self._trial_acct()

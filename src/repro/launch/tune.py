@@ -71,6 +71,16 @@ cell's surviving winner to the campaign directory's per-cell live-config
 board (``<dir>/serving/live/``, atomic, never-regressing) with an
 append-only promotion/demotion history.
 
+Observability (core/telemetry.py): ``--trace`` records every trial,
+compile, cache lookup, lease claim/steal, retry, strike and SLO abort
+as structured span events in the campaign directory's ``events.jsonl``
+and publishes live aggregate ``metrics.json`` — decisions are
+bit-identical with tracing on or off.  ``--trace-out trace.json``
+exports the recorded events as Chrome-trace/Perfetto JSON (workers as
+tracks, trials as slices).  ``--status --json`` emits the queue view
+plus live metrics as one machine-readable JSON object; ``REPRO_LOG``
+(debug|info|warn) sets fleet log verbosity.
+
 Trial hardening (core/executor.py + core/quarantine.py) keeps faults
 from wasting the ≤10-run budget: ``--trial-timeout`` bounds every
 evaluation (a hang becomes a ``timeout`` failure instead of wedging
@@ -206,11 +216,16 @@ def _serving_board_markdown(ckpt: pathlib.Path) -> str:
 
 
 def _write_campaign_summary(ckpt: pathlib.Path, reports, stats) -> None:
+    from repro.core import telemetry as _telemetry
     ckpt.mkdir(parents=True, exist_ok=True)
     text = report.strategy_markdown(reports, queue=stats.get("queue"))
     serving = _serving_board_markdown(ckpt)
     if serving:
         text = text.rstrip("\n") + "\n\n" + serving + "\n"
+    metrics = _telemetry.load_metrics(ckpt)
+    if metrics:                          # untraced output unchanged
+        text = text.rstrip("\n") + "\n\n" \
+            + report.telemetry_markdown(metrics) + "\n"
     (ckpt / "campaign.md").write_text(text)
     (ckpt / "campaign_stats.json").write_text(
         json.dumps(stats, indent=1))
@@ -224,7 +239,7 @@ def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
                   trial_timeout_s=None, max_retries: int = 0,
                   strike_threshold=None, measure_top_k: int = 0,
                   measured_evaluator=None, slo_ttft=None,
-                  promote: bool = False):
+                  promote: bool = False, trace: bool = False):
     """Run a strategy over a batch of cells in one concurrent campaign;
     returns ``{cell_key: report}`` plus the campaign's throughput
     stats.  Non-tree strategies checkpoint under a per-strategy
@@ -236,6 +251,12 @@ def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
     ckpt = campaign_dir(strategy, checkpoint_dir)
     if fresh:
         fresh_campaign_dir(ckpt, cells)
+    if trace:
+        # observability only — the campaign's decisions are
+        # bit-identical with tracing on or off (tests/test_telemetry)
+        from repro.core import telemetry as _telemetry
+        ckpt.mkdir(parents=True, exist_ok=True)
+        _telemetry.install(_telemetry.Telemetry(ckpt))
     if evaluator is None and slo_ttft is not None:
         # the default dispatch stack, with the serve tier's SLO guard
         # armed — step/kernel cells are routed exactly as before
@@ -251,6 +272,9 @@ def tune_campaign(cells, threshold: float = 0.05, baseline_overrides=None,
         measured_evaluator=measured_evaluator,
         baseline_factory=lambda spec: _baseline(baseline_overrides))
     reports = camp.run()
+    if trace:
+        from repro.core import telemetry as _telemetry
+        _telemetry.publish_metrics(ckpt)
     for rep in reports.values():
         _save_cell_report(rep, strategy)
     if promote:
@@ -299,7 +323,7 @@ def run_worker(args, cells, options) -> int:
         measure_top_k=args.measure_top_k,
         measured_evaluator=load_evaluator(args.measured_evaluator)
         if args.measured_evaluator else None,
-        promote=args.promote)
+        promote=args.promote, trace=args.trace)
     stats = worker.run()
     print(json.dumps(stats, indent=1))
     return 0
@@ -325,9 +349,14 @@ def run_fabric(args, cells, options) -> int:
         measure_top_k=args.measure_top_k,
         measured_evaluator_spec=args.measured_evaluator,
         slo_ttft=args.slo_ttft, promote=args.promote,
+        trace=args.trace,
         extra_args=_worker_passthrough(args),
         log_dir=ckpt / "worker_logs")
     reports, stats = out["reports"], out["stats"]
+    if args.trace:
+        # final coordinator-side fold over every worker's events
+        from repro.core import telemetry as _telemetry
+        _telemetry.publish_metrics(ckpt)
     for rep in reports.values():
         _save_cell_report(rep, args.strategy)
     _write_campaign_summary(ckpt, reports, stats)
@@ -358,9 +387,18 @@ def run_status(args, cells) -> int:
     """``--status``: the operator's queue view — pending/claimed/done
     depth, per-cell state (intake submissions included) and the live
     lease board (held/expired leases, no lease-file spelunking)."""
+    from repro.core import telemetry as _telemetry
     from repro.core.schedule import queue_status
     ckpt = campaign_dir(args.strategy, args.dir)
     status = queue_status(ckpt, strategy=args.strategy, cells=cells)
+    # live metrics: folded from the event stream right now, not the
+    # last published metrics.json snapshot
+    events = _telemetry.read_events(ckpt)
+    metrics = _telemetry.fold_metrics(events) if events else None
+    if args.json:
+        print(json.dumps({"v": 1, "queue": status, "metrics": metrics},
+                         indent=1, sort_keys=True))
+        return 0
     depth = status["depth"]
     print(f"campaign dir: {status['dir']}")
     print(f"strategy:     {status['strategy']}")
@@ -407,6 +445,37 @@ def run_status(args, cells) -> int:
             mark = " QUARANTINED" if key in quarantine["quarantined"] \
                 else ""
             print(f"  config {key}: {n} strike(s){mark}")
+    if metrics:
+        g = metrics["gauges"]
+        a = metrics["attribution"]
+        c = metrics["counters"]
+        hit = g.get("cache_hit_rate")
+        print(f"telemetry:    {metrics['events']} events / "
+              f"{a['wall_s']}s wall — {g['trials_per_s']} trials/s, "
+              f"cache hit {'—' if hit is None else format(hit, '.0%')}, "
+              f"{c['lease_steals']} steal(s), "
+              f"{c['quarantine_strikes']} strike(s), "
+              f"{c['slo_aborts']} SLO abort(s)")
+        for w, d in metrics["per_worker"].items():
+            print(f"  {w:<40} {d['trials']} trial(s), busy "
+                  f"{d['busy_s']}s ({format(d['utilization'], '.0%')})")
+    return 0
+
+
+def run_trace_out(args) -> int:
+    """``--trace-out``: fold the campaign directory's recorded event
+    stream into Chrome-trace/Perfetto JSON (workers as process tracks,
+    trials/compiles as duration slices, steals/strikes/aborts as
+    instants), then exit."""
+    from repro.core import telemetry as _telemetry
+    ckpt = campaign_dir(args.strategy, args.dir)
+    n = _telemetry.export_chrome_trace(ckpt, args.trace_out)
+    src = ckpt / _telemetry.EVENTS_NAME
+    if not n:
+        print(f"no events recorded in {src} (run with --trace); "
+              f"wrote an empty trace to {args.trace_out}")
+        return 1
+    print(f"wrote {n} trace event(s) from {src} -> {args.trace_out}")
     return 0
 
 
@@ -569,6 +638,23 @@ def main(argv=None) -> int:
                             "directory's per-cell live-config board "
                             "(atomic, never regresses the incumbent, "
                             "demotions recorded)")
+    obs = ap.add_argument_group("observability (core/telemetry.py)")
+    obs.add_argument("--trace", action="store_true",
+                     help="record structured telemetry while tuning: "
+                          "every trial/compile/cache/lease/strike "
+                          "appends a span event to the campaign "
+                          "directory's events.jsonl and live metrics "
+                          "are published as metrics.json; decisions "
+                          "are bit-identical with tracing on or off")
+    obs.add_argument("--trace-out", metavar="PATH",
+                     help="export the campaign directory's recorded "
+                          "events as Chrome-trace/Perfetto JSON to "
+                          "PATH (open in ui.perfetto.dev), then exit "
+                          "(standalone action, like --status)")
+    obs.add_argument("--json", action="store_true",
+                     help="with --status: print the queue view plus "
+                          "live telemetry metrics as one JSON object "
+                          "on stdout (machine-readable)")
     args = ap.parse_args(argv)
 
     if args.sweep_knobs and args.strategy != "sensitivity":
@@ -596,7 +682,10 @@ def main(argv=None) -> int:
             ("--measured-evaluator",
              bool(args.measured_evaluator)),
             ("--slo-ttft", args.slo_ttft is not None),
-            ("--promote", args.promote)) if on]
+            ("--promote", args.promote),
+            ("--trace", args.trace),
+            ("--trace-out", bool(args.trace_out)),
+            ("--json", args.json)) if on]
         if args.add_cells and args.stop:
             ap.error("--add-cells and --stop are separate actions; "
                      "run them as two invocations")
@@ -606,6 +695,25 @@ def main(argv=None) -> int:
                      f"{', '.join(ignored)} would be ignored — "
                      "drop it or run it separately")
         return run_add_cells(args) if args.add_cells else run_stop(args)
+    if args.json and not args.status:
+        ap.error("--json is the machine-readable form of --status; "
+                 "add --status or drop --json")
+    if args.trace_out:
+        # standalone export over an existing campaign directory: any
+        # tuning-mode flag would be silently ignored — reject it
+        ignored = [flag for flag, on in (
+            ("--arch", args.arch), ("--shape", args.shape),
+            ("--cells", args.cells), ("--all", args.all),
+            ("--fresh", args.fresh), ("--watch", args.watch),
+            ("--status", args.status), ("--worker", args.worker),
+            ("--workers", args.workers),
+            ("--coordinate", args.coordinate),
+            ("--trace", args.trace)) if on]
+        if ignored:
+            ap.error("--trace-out is a standalone export; "
+                     f"{', '.join(ignored)} would be ignored — "
+                     "drop it or run it separately")
+        return run_trace_out(args)
     if args.status:
         # read-only action: --cells/--all scope the view, but a fabric
         # or fresh flag would be silently ignored — reject it
@@ -623,7 +731,8 @@ def main(argv=None) -> int:
             ("--measured-evaluator",
              bool(args.measured_evaluator)),
             ("--slo-ttft", args.slo_ttft is not None),
-            ("--promote", args.promote)) if on]
+            ("--promote", args.promote),
+            ("--trace", args.trace)) if on]
         if ignored:
             ap.error("--status is a read-only action; "
                      f"{', '.join(ignored)} would be ignored — "
@@ -635,6 +744,10 @@ def main(argv=None) -> int:
     if args.measured_evaluator and not args.measure_top_k:
         ap.error("--measured-evaluator requires --measure-top-k > 0")
     fabric_mode = args.worker or args.coordinate or args.workers
+    if args.trace and not (args.all or args.cells or fabric_mode):
+        ap.error("--trace records telemetry into the campaign "
+                 "directory; it applies to campaign/fabric modes "
+                 "(--cells/--all/--worker/--workers)")
     if args.slo_ttft is not None and args.slo_ttft <= 0:
         ap.error("--slo-ttft is a multiplier over the incumbent's "
                  "replay stats; it must be > 0 (e.g. 3.0)")
@@ -688,7 +801,8 @@ def main(argv=None) -> int:
                                        measured_evaluator=
                                        _load_measured(args),
                                        slo_ttft=args.slo_ttft,
-                                       promote=args.promote)
+                                       promote=args.promote,
+                                       trace=args.trace)
         print(report.strategy_markdown(reports,
                                        queue=stats.get("queue")))
         print(f"\n[{stats['strategy']}] {stats['cells']} cells in "

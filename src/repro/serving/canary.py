@@ -32,6 +32,7 @@ import pathlib
 import time
 from typing import Any, Dict, List, Optional
 
+from repro.core import telemetry as _telemetry
 from repro.core.fsutil import append_jsonl, atomic_publish
 from repro.core.trial import FAILURE_DETERMINISTIC, TrialError
 
@@ -78,19 +79,32 @@ class SLOGuard:
         # queue delay is a virtual-clock quantity — deterministic per
         # (config, trace) — so it is checked per-request everywhere
         if qdelay_s > self.qdelay_limit:
-            raise SLOViolation(
-                f"slo-violation: queue delay {qdelay_s:.3f}s exceeds "
-                f"{self.qdelay_limit:.3f}s ({self.factor:g}x incumbent) "
-                f"after {served}/{total} requests"
-                f"{' (shadow slice)' if in_shadow else ''}")
+            self._abort("qdelay", qdelay_s, served, total, in_shadow,
+                        f"slo-violation: queue delay {qdelay_s:.3f}s "
+                        f"exceeds {self.qdelay_limit:.3f}s "
+                        f"({self.factor:g}x incumbent) "
+                        f"after {served}/{total} requests"
+                        f"{' (shadow slice)' if in_shadow else ''}")
         ttft_signal = ttft_s if in_shadow else self._sum_ttft / self._n
         if ttft_signal > self.ttft_limit:
             kind = "TTFT" if in_shadow else "mean TTFT"
-            raise SLOViolation(
-                f"slo-violation: {kind} {ttft_signal:.3f}s exceeds "
-                f"{self.ttft_limit:.3f}s ({self.factor:g}x incumbent) "
-                f"after {served}/{total} requests"
-                f"{' (shadow slice)' if in_shadow else ''}")
+            self._abort("ttft", ttft_signal, served, total, in_shadow,
+                        f"slo-violation: {kind} {ttft_signal:.3f}s "
+                        f"exceeds {self.ttft_limit:.3f}s "
+                        f"({self.factor:g}x incumbent) "
+                        f"after {served}/{total} requests"
+                        f"{' (shadow slice)' if in_shadow else ''}")
+
+    def _abort(self, signal: str, value: float, served: int, total: int,
+               in_shadow: bool, message: str) -> None:
+        """Emit the SLO-abort telemetry event, then raise.  The event is
+        observability only — the decision (abort, scored deterministic
+        crash) is the exception, identical with telemetry on or off."""
+        tel = _telemetry.current()
+        if tel.enabled:
+            tel.emit("slo.abort", signal=signal, value=round(value, 4),
+                     served=served, total=total, shadow=in_shadow)
+        raise SLOViolation(message)
 
 
 # -------------------------------------------------------------- promotion

@@ -277,6 +277,41 @@ def test_quarantined_config_skipped_and_scored_as_crash(tmp_path):
     assert ex.stats()["quarantined"] == 1
 
 
+def test_stats_counters_exact_under_concurrent_stress():
+    """Regression (counter thread-safety): every accounting counter is
+    incremented under ``self._lock`` (``SweepExecutor._count``), so
+    hammering submit from many client threads must yield *exact*
+    totals — an approximately-right count is a lost-increment race."""
+    n_threads, per_thread, n_cfgs = 8, 25, 8
+    ev = FlakyEvaluator(fails=1)     # first eval per config: transient
+    base = default_config()
+    cfgs = [base.replace(microbatches=m) for m in range(1, n_cfgs + 1)]
+    with SweepExecutor(ev, max_workers=8, max_retries=1,
+                       retry_backoff_s=0.0) as ex:
+        barrier = threading.Barrier(n_threads)
+
+        def hammer(t):
+            barrier.wait()               # maximize submit contention
+            for i in range(per_thread):
+                ex.submit(WL, cfgs[(t + i) % n_cfgs]).result()
+
+        threads = [threading.Thread(target=hammer, args=(t,))
+                   for t in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        stats = ex.stats()
+    assert stats["submitted"] == n_threads * per_thread
+    assert stats["submitted"] == stats["evals"] + stats["deduped"]
+    # each distinct config's *first* evaluation pays exactly one
+    # transient retry; later evaluations of it succeed outright
+    assert stats["retries"] == n_cfgs
+    # the evaluator saw one call per evaluation plus one per retry
+    assert len(ev.calls) == stats["evals"] + stats["retries"]
+    assert stats["timeouts"] == 0 and stats["quarantined"] == 0
+
+
 def test_timeout_strikes_toward_quarantine(tmp_path):
     """A hang is as poisonous as a kill, just slower: K timeouts of one
     config quarantine it, so the hang is paid at most K times."""

@@ -171,6 +171,128 @@ def test_cell_markdown_dispatches_on_report_type():
     assert report.cell_markdown(tuned_report()) == TUNING_GOLDEN
 
 
+QUEUE_HEALTH_GOLDEN = """\
+### Queue: 2 cells admitted (1 via intake), prioritize=arch
+
+| cell | admitted | priority | state | health |
+|---|---|---|---|---|
+| a__s__pod | seed | 1.25 | done | 2 timeout; 1 retried; \
+1 quarantined; DEGRADED |
+| b__s__pod | intake | — | pending | — |\
+"""
+
+
+def test_queue_markdown_health_column_golden():
+    queue = {"admitted": 2, "from_intake": 1, "prioritize": "arch",
+             "cells": [
+                 {"cell": "a__s__pod", "source": "seed", "score": 1.25,
+                  "state": "done",
+                  "health": {"failures": {"timeout": 2}, "retries": 1,
+                             "quarantined": 1, "degraded": True}},
+                 {"cell": "b__s__pod", "source": "intake",
+                  "score": None, "state": "pending"}]}
+    assert report.queue_markdown(queue) == QUEUE_HEALTH_GOLDEN
+
+
+SERVING_GOLDEN = """\
+### Serving: promoted live configs
+
+| cell | live cost | promoted knobs | source |
+|---|---|---|---|
+| serve-glm__burst__pod | 500.00 ms | max_wave_size=8, \
+kv_cache_dtype=bf16 | campaign:tree |
+| serve-x__t__pod | — (nothing promoted) | — | — |
+
+* promotion events: 1 promoted, 1 kept the incumbent (the live file \
+never regresses)
+
+| demoted at | cell | old cost | new cost |
+|---|---|---|---|
+| 100.0 | serve-glm__burst__pod | 750.00 ms | 500.00 ms |\
+"""
+
+
+def test_serving_markdown_golden():
+    live = {"serve-glm__burst__pod": {
+                "config": {"max_wave_size": 8, "kv_cache_dtype": "bf16"},
+                "cost_s": 0.5, "source": "campaign:tree"},
+            "serve-x__t__pod": None}
+    history = [
+        {"action": "promoted", "cell": "serve-glm__burst__pod",
+         "ts": 100.0, "cost_s": 0.5,
+         "demoted": {"config": {}, "cost_s": 0.75, "promoted_ts": 50.0}},
+        {"action": "kept-incumbent"}]
+    assert report.serving_markdown(live, history) == SERVING_GOLDEN
+
+
+TELEMETRY_GOLDEN = """\
+### Telemetry: where the time went
+
+* events: 42 over 20.0s wall, 2 worker(s), 1.5 trials/s
+* compile-cache hit rate: 50%; per-trial rates: 0.1 retry, 0.0 \
+timeout, 0.0 quarantine, 0.05 crash
+* fleet: 2 lease claim(s), 1 steal(s), 1 strike(s), 0 SLO abort(s)
+
+| where | seconds |
+|---|---|
+| trials (total) | 18.0 |
+| — compiles | 6.0 |
+| — evaluation (net of compile) | 12.0 |
+| measured tier | 2.0 |
+| idle (worker-seconds) | 22.0 |
+
+| worker | trials | busy | utilization |
+|---|---|---|---|
+| w0 | 16 | 10.0s | 50% |
+| w1 | 14 | 8.0s | 40% |
+
+| cell | trials | best cost | first improvement after |
+|---|---|---|---|
+| a__s__pod | 10 | 1.250 s | 3.5s |\
+"""
+
+
+def telemetry_metrics():
+    return {
+        "events": 42,
+        "counters": {"lease_claims": 2, "lease_steals": 1,
+                     "quarantine_strikes": 1, "slo_aborts": 0},
+        "gauges": {"workers": 2, "trials_per_s": 1.5,
+                   "cache_hit_rate": 0.5, "retry_rate": 0.1,
+                   "timeout_rate": 0.0, "quarantine_rate": 0.0,
+                   "crash_rate": 0.05},
+        "attribution": {"wall_s": 20.0, "trial_s": 18.0,
+                        "compile_s": 6.0, "eval_s": 12.0,
+                        "measure_s": 2.0, "idle_s": 22.0},
+        "per_worker": {"w0": {"trials": 16, "busy_s": 10.0,
+                              "utilization": 0.5},
+                       "w1": {"trials": 14, "busy_s": 8.0,
+                              "utilization": 0.4}},
+        "per_cell": {"a__s__pod": {"trials": 10, "best_cost_s": 1.25,
+                                   "baseline_cost_s": 2.0,
+                                   "first_improvement_s": 3.5}},
+    }
+
+
+def test_telemetry_markdown_golden():
+    assert report.telemetry_markdown(telemetry_metrics()) \
+        == TELEMETRY_GOLDEN
+
+
+def test_telemetry_markdown_sparse_metrics():
+    """No cache lookups (hit rate unknown), no workers/cells folded
+    yet: every field degrades to a placeholder, nothing raises."""
+    md = report.telemetry_markdown(
+        {"events": 0, "counters": {}, "gauges": {"cache_hit_rate": None},
+         "attribution": {}, "per_worker": {}, "per_cell": {}})
+    assert "compile-cache hit rate: —" in md
+    assert "| worker |" not in md and "| cell |" not in md
+    md2 = report.telemetry_markdown(telemetry_metrics() | {
+        "per_cell": {"c": {"trials": 1, "best_cost_s": None,
+                           "first_improvement_s": None}}})
+    assert "| c | 1 | — | — |" in md2
+
+
 def test_fmt_s_edges():
     assert report._fmt_s(float("nan")) == "crash"
     assert report._fmt_s(float("inf")) == "crash"

@@ -1,0 +1,351 @@
+"""Campaign telemetry (core/telemetry.py): the event bus, spans,
+metrics folding, Chrome-trace export and the leveled fleet logger.
+
+The load-bearing invariant: **telemetry observes, never decides.**  A
+campaign with tracing enabled must be bit-identical (logs, budgets,
+final configs) to the same campaign without it, and a disabled bus
+must be a zero-allocation no-op that never creates a file.
+"""
+import io
+import json
+import threading
+
+import pytest
+
+from repro.core import telemetry
+from repro.core.campaign import Campaign, CellSpec, tuning_fingerprint
+from repro.core.executor import SweepExecutor
+from repro.core.params import default_config
+from repro.core.trial import TrialResult, Workload
+
+WL = Workload("smollm-135m", "train_4k")
+
+
+def surface(wl, rt):
+    """Deterministic cost surface with one crash region."""
+    if rt.remat_policy == "full" and wl.arch == "glm4-9b":
+        return TrialResult(cost_s=float("inf"), crashed=True)
+    c = 100.0 + 3.0 * len(wl.arch)
+    if rt.compute_dtype == "bfloat16":
+        c *= 0.7
+    if rt.remat_policy == "none":
+        c *= 0.85
+    return TrialResult(cost_s=round(c, 6))
+
+
+def rec(kind, ts, **kw):
+    base = {"v": 1, "kind": kind, "ts": ts,
+            "worker": kw.pop("worker", "w0"), "pid": 1, "thread": "main"}
+    base.update(kw)
+    return base
+
+
+# ---------------------------------------------------------- event bus
+def test_disabled_bus_is_noop(tmp_path):
+    t = telemetry.Telemetry(tmp_path, enabled=False)
+    t.emit("trial", cell="c")
+    assert t.span("trial") is telemetry._NULL_SPAN   # no allocation
+    with t.span("trial") as sp:
+        sp.note(cost_s=1.0)
+    assert not (tmp_path / telemetry.EVENTS_NAME).exists()
+    assert telemetry.read_events(tmp_path) == []
+    # a directory-less bus is disabled no matter what was asked for
+    assert not telemetry.Telemetry(None, enabled=True).enabled
+
+
+def test_emit_schema_fields(tmp_path):
+    t = telemetry.Telemetry(tmp_path, worker="w7")
+    t.emit("retry", cell="c", attempt=2)
+    (r,) = telemetry.read_events(tmp_path)
+    assert r["v"] == telemetry.SCHEMA_VERSION
+    assert r["kind"] == "retry" and r["cell"] == "c" and r["attempt"] == 2
+    assert r["worker"] == "w7"
+    assert isinstance(r["ts"], float) and isinstance(r["pid"], int)
+    assert r["thread"] == threading.current_thread().name
+
+
+def test_span_duration_and_parent_linkage(tmp_path):
+    t = telemetry.Telemetry(tmp_path, worker="w0")
+    with t.span("trial", cell="c") as outer:
+        with t.span("compile", key="k"):
+            pass
+        t.emit("cache.miss", key="k")
+    records = telemetry.read_events(tmp_path)
+    by_kind = {r["kind"]: r for r in records}
+    trial, compile_, miss = (by_kind["trial"], by_kind["compile"],
+                             by_kind["cache.miss"])
+    assert trial["span"] == outer.id and "parent" not in trial
+    assert compile_["parent"] == trial["span"]
+    assert miss["parent"] == trial["span"]
+    assert trial["dur_s"] >= compile_["dur_s"] >= 0.0
+    # the span's ts is its *start*: it precedes the nested compile's
+    assert trial["ts"] <= compile_["ts"]
+
+
+def test_span_note_attaches_fields(tmp_path):
+    t = telemetry.Telemetry(tmp_path)
+    with t.span("trial", cell="c") as sp:
+        sp.note(cost_s=1.5, crashed=False)
+    (r,) = telemetry.read_events(tmp_path)
+    assert r["cost_s"] == 1.5 and r["crashed"] is False
+
+
+def test_emit_never_raises_into_the_caller(tmp_path):
+    blocker = tmp_path / "blocker"
+    blocker.write_text("")               # a *file* where a dir must go
+    t = telemetry.Telemetry(blocker)     # events path is unwritable
+    t.emit("trial", cell="c")            # OSError swallowed
+    with t.span("trial"):
+        pass
+
+
+def test_read_events_skips_torn_and_garbage_lines(tmp_path):
+    path = tmp_path / telemetry.EVENTS_NAME
+    good = json.dumps(rec("trial", 1.0))
+    path.write_text(good + "\n" + "{torn-lin" + "\nnot json\n"
+                    + json.dumps(["not", "a", "dict"]) + "\n"
+                    + good + "\n")
+    records = telemetry.read_events(tmp_path)
+    assert len(records) == 2
+    assert all(r["kind"] == "trial" for r in records)
+    assert telemetry.read_events(tmp_path / "nope") == []
+
+
+def test_install_current_uninstall():
+    assert telemetry.current() is telemetry.NULL
+    t = telemetry.Telemetry(None, enabled=False)
+    try:
+        assert telemetry.install(t) is t
+        assert telemetry.current() is t
+    finally:
+        telemetry.uninstall()
+    assert telemetry.current() is telemetry.NULL
+
+
+# ----------------------------------------------------- executor events
+def test_executor_emits_trial_spans(tmp_path):
+    t = telemetry.Telemetry(tmp_path, worker="w0")
+    base = default_config()
+    with SweepExecutor(surface, max_workers=2, telemetry=t) as ex:
+        ex.submit(WL, base).result()
+        ex.submit(WL, base.replace(compute_dtype="bfloat16")).result()
+    trials = [r for r in telemetry.read_events(tmp_path)
+              if r["kind"] == "trial"]
+    assert len(trials) == 2
+    assert all(r["cell"] == WL.key() and "span" in r and "config" in r
+               and r["dur_s"] >= 0.0 for r in trials)
+    costs = sorted(r["cost_s"] for r in trials)
+    assert costs == sorted((surface(WL, base).cost_s,
+                            surface(WL, base.replace(
+                                compute_dtype="bfloat16")).cost_s))
+
+
+def test_crashed_trial_event_has_no_infinite_cost(tmp_path):
+    """JSON cannot carry inf: a crashed trial's event records
+    crashed=True and *omits* cost_s instead of emitting Infinity."""
+    t = telemetry.Telemetry(tmp_path)
+    crash = Workload("glm4-9b", "train_4k")
+    cfg = default_config().replace(remat_policy="full")
+    with SweepExecutor(surface, max_workers=2, telemetry=t) as ex:
+        res = ex.submit(crash, cfg).result()
+    assert res.crashed
+    (r,) = [r for r in telemetry.read_events(tmp_path)
+            if r["kind"] == "trial"]
+    assert r["crashed"] is True and "cost_s" not in r
+    json.dumps(r, allow_nan=False)       # strict-JSON consumers survive
+
+
+def test_executor_retry_events(tmp_path):
+    calls = []
+
+    def flaky(wl, rt):
+        calls.append(rt)
+        if len(calls) == 1:
+            raise OSError("transient")
+        return TrialResult(cost_s=1.0)
+
+    t = telemetry.Telemetry(tmp_path)
+    with SweepExecutor(flaky, max_workers=2, max_retries=2,
+                       retry_backoff_s=0.001, telemetry=t) as ex:
+        res = ex.submit(WL, default_config()).result()
+    assert not res.crashed and res.retries == 1
+    kinds = [r["kind"] for r in telemetry.read_events(tmp_path)]
+    assert kinds.count("retry") == 1 and kinds.count("trial") == 1
+
+
+# -------------------------------------------------------- metrics fold
+def synthetic_records():
+    return [
+        rec("trial", 0.0, dur_s=1.0, cell="c", cost_s=2.0),
+        rec("trial", 1.0, dur_s=1.0, cell="c", cost_s=1.0),
+        rec("trial", 2.0, dur_s=1.0, cell="c", crashed=True,
+            worker="w1"),
+        rec("compile", 0.2, dur_s=0.5),
+        rec("cache.hit", 2.5), rec("cache.miss", 2.6),
+        rec("retry", 2.7), rec("lease.claim", 0.0),
+        rec("lease.steal", 2.8), rec("quarantine.strike", 2.9),
+    ]
+
+
+def test_fold_metrics_counters_gauges_attribution():
+    m = telemetry.fold_metrics(synthetic_records())
+    c, g, a = m["counters"], m["gauges"], m["attribution"]
+    assert m["events"] == 10
+    assert c["trials"] == 3 and c["crashes"] == 1
+    assert c["cache_hits"] == 1 and c["cache_misses"] == 1
+    assert c["retries"] == 1 and c["lease_steals"] == 1
+    assert c["quarantine_strikes"] == 1
+    assert g["cache_hit_rate"] == 0.5
+    assert g["workers"] == 2
+    assert g["crash_rate"] == pytest.approx(1 / 3, abs=1e-3)
+    assert m["window"]["wall_s"] == 3.0
+    assert g["trials_per_s"] == 1.0
+    assert a["trial_s"] == 3.0 and a["compile_s"] == 0.5
+    assert a["eval_s"] == 2.5
+    assert m["histograms"]["trial_dur_s"]["le_1s"] == 3
+
+
+def test_fold_metrics_per_cell_first_improvement():
+    m = telemetry.fold_metrics(synthetic_records())
+    cell = m["per_cell"]["c"]
+    assert cell["trials"] == 3
+    assert cell["baseline_cost_s"] == 2.0
+    assert cell["best_cost_s"] == 1.0
+    # the improving trial (cost 1.0 < baseline 2.0) *finished* at
+    # ts+dur = 2.0, and the cell's first event was at 0.0
+    assert cell["first_improvement_s"] == 2.0
+
+
+def test_fold_metrics_per_worker_utilization():
+    m = telemetry.fold_metrics(synthetic_records())
+    assert m["per_worker"]["w0"]["trials"] == 2
+    assert m["per_worker"]["w0"]["busy_s"] == 2.0
+    assert m["per_worker"]["w0"]["utilization"] \
+        == pytest.approx(2.0 / 3.0, abs=1e-3)
+    assert m["per_worker"]["w1"]["trials"] == 1
+
+
+def test_fold_metrics_empty_and_no_lookups():
+    m = telemetry.fold_metrics([])
+    assert m["events"] == 0 and m["counters"]["trials"] == 0
+    assert m["gauges"]["cache_hit_rate"] is None   # 0/0 is unknown
+    assert m["window"]["wall_s"] == 0.0
+
+
+def test_publish_and_load_metrics(tmp_path):
+    assert telemetry.publish_metrics(tmp_path) is None   # no events
+    assert not (tmp_path / telemetry.METRICS_NAME).exists()
+    t = telemetry.Telemetry(tmp_path)
+    t.emit("trial", ts=1.0, dur_s=0.5, cell="c", cost_s=1.0)
+    published = telemetry.publish_metrics(tmp_path)
+    assert published["counters"]["trials"] == 1
+    assert telemetry.load_metrics(tmp_path) == published
+
+
+# ------------------------------------------------------- chrome trace
+def test_chrome_trace_tracks_slices_instants():
+    trace = telemetry.chrome_trace(synthetic_records())
+    events = trace["traceEvents"]
+    json.dumps(trace, allow_nan=False)   # valid strict JSON
+    meta = [e for e in events if e["ph"] == "M"]
+    assert {e["args"]["name"] for e in meta
+            if e["name"] == "process_name"} == {"w0", "w1"}
+    slices = [e for e in events if e["ph"] == "X"]
+    assert sum(e["cat"] == "trial" for e in slices) == 3
+    assert all(e["dur"] > 0 for e in slices)
+    instants = [e for e in events if e["ph"] == "i"]
+    assert {e["cat"] for e in instants} >= {"cache.hit", "retry",
+                                            "lease.steal"}
+    assert all(e["s"] == "t" for e in instants)
+    # timestamps are µs relative to the earliest event
+    assert min(e["ts"] for e in events if e["ph"] != "M") == 0.0
+
+
+def test_export_chrome_trace(tmp_path):
+    t = telemetry.Telemetry(tmp_path)
+    t.emit("trial", ts=1.0, dur_s=0.5, cell="c", cost_s=1.0)
+    t.emit("lease.claim", ts=0.5, cell="c")
+    out = tmp_path / "out" / "trace.json"
+    n = telemetry.export_chrome_trace(tmp_path, out)
+    assert n == 2
+    trace = json.loads(out.read_text())
+    assert any(e.get("ph") == "X" for e in trace["traceEvents"])
+
+
+# ---------------------------------------------- the bit-identity law
+CELLS = [CellSpec("smollm-135m", "train_4k"),
+         CellSpec("glm4-9b", "train_4k")]
+
+
+def _run_campaign(ckpt, telemetry_bus=None):
+    camp = Campaign(CELLS, threshold=0.05, evaluator=surface,
+                    baseline_factory=lambda spec: default_config(
+                        shard_strategy="fsdp_tp", attn_impl="pallas"),
+                    checkpoint_dir=ckpt, max_workers=2,
+                    telemetry=telemetry_bus)
+    return camp.run()
+
+
+def test_campaign_bit_identical_with_telemetry_on_or_off(tmp_path):
+    """The hard invariant: tracing must not perturb a single decision.
+    Full report equality — logs, trial counts, budgets, final configs —
+    not just the fingerprint."""
+    plain = _run_campaign(tmp_path / "plain")
+    bus = telemetry.install(telemetry.Telemetry(tmp_path / "traced",
+                                                worker="w0"))
+    try:
+        traced = _run_campaign(tmp_path / "traced", telemetry_bus=bus)
+    finally:
+        telemetry.uninstall()
+    assert list(traced) == list(plain)
+    for key in plain:
+        assert traced[key].__dict__ == plain[key].__dict__
+        assert tuning_fingerprint(traced[key]) \
+            == tuning_fingerprint(plain[key])
+    # and the traced run actually recorded its evidence
+    records = telemetry.read_events(tmp_path / "traced")
+    trials = [r for r in records if r["kind"] == "trial"]
+    assert len(trials) == sum(r.n_trials for r in plain.values())
+    assert {r["kind"] for r in records} >= {"trial", "cell.activate",
+                                            "cell.done"}
+    # ...while the plain run wrote nothing
+    assert telemetry.read_events(tmp_path / "plain") == []
+    assert not (tmp_path / "plain" / telemetry.EVENTS_NAME).exists()
+
+
+# -------------------------------------------------------------- logger
+def test_logger_levels_and_prefix(monkeypatch):
+    monkeypatch.delenv(telemetry.LOG_ENV, raising=False)
+    out = io.StringIO()
+    log = telemetry.get_logger("w3")
+    log.stream = out
+    log.debug("hidden")                  # default level is info
+    log.info("visible")
+    log.warn("loud")
+    lines = out.getvalue().splitlines()
+    assert lines == ["[info] [w3] visible", "[warn] [w3] loud"]
+
+
+def test_logger_env_level(monkeypatch):
+    monkeypatch.setenv(telemetry.LOG_ENV, "warn")
+    out = io.StringIO()
+    log = telemetry.Logger(prefix="w0", stream=out)
+    log.info("hidden")
+    log.warn("shown")
+    assert out.getvalue() == "[warn] [w0] shown\n"
+    monkeypatch.setenv(telemetry.LOG_ENV, "debug")
+    log2 = telemetry.Logger(stream=out)
+    log2.debug("now visible")
+    assert out.getvalue().endswith("[debug] now visible\n")
+
+
+def test_logger_never_raises_on_dead_stream():
+    class Dead:
+        def write(self, *_):
+            raise OSError("broken pipe")
+
+        def flush(self):
+            raise OSError("broken pipe")
+
+    log = telemetry.Logger(prefix="w0", stream=Dead())
+    log.warn("into the void")            # swallowed
