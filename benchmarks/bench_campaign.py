@@ -29,10 +29,22 @@ with the blocking ``run_sensitivity`` on the SAME evaluator — the
 KnobImpact tables must match exactly and the direct pass must pay zero
 extra compiles (proof the campaign populated the shared cache).
 
+A fifth arm measures the learned proposer (core/proposer.py):
+budget-matched ``model`` vs ``tree`` vs ``random`` walks on the
+deterministic fabric surface with a pre-seeded trial history (three
+finished same-kind tree walks — the cumulative-campaign situation the
+strategy exists for).  Reported per arm: trials-to-best (how many
+trials until the walk first evaluates its best-found config) and
+trials-to-first-improvement.  The ``model`` arm must reach its best
+in strictly fewer trials than both baselines.
+
 Results land in results/benchmarks/BENCH_campaign.json and a copy at
 the repo root (BENCH_campaign.json) for CI tracking.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_campaign [--cells ...]
+      (``--proposer-only`` re-runs just the proposer arm — it is
+      synthetic-surface and seconds, not minutes — and merges it into
+      the existing JSON.)
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -142,6 +154,86 @@ def run_sensitivity_arm(cells, scratch: pathlib.Path):
     }
 
 
+PROPOSER_SEED_CELLS = ("smollm-135m:train_4k,glm4-9b:train_4k,"
+                       "xlstm-1.3b:train_4k")
+PROPOSER_TARGET_CELLS = "olmoe-1b-7b:train_4k,zamba2-7b:train_4k"
+
+
+def _walk_metrics(rep):
+    """Trials-to-best / -to-first-improvement of one walk's log."""
+    costs = []
+    for e in rep.log:
+        r = e["result"] if isinstance(e["result"], dict) \
+            else e["result"].__dict__
+        costs.append(r.get("cost_s", float("inf")))
+    finite = [c for c in costs if c == c and c != float("inf")]
+    best = min(finite) if finite else float("inf")
+    to_best = next((i + 1 for i, c in enumerate(costs) if c == best),
+                   len(costs))
+    to_improve = next((i + 1 for i, c in enumerate(costs)
+                       if c < rep.baseline_cost), None)
+    return {"final_cost_s": rep.final_cost, "n_trials": rep.n_trials,
+            "trials_to_best": to_best,
+            "trials_to_first_improvement": to_improve}
+
+
+def run_proposer_arm(scratch: pathlib.Path, budget: int = 10,
+                     threshold: float = 0.05):
+    """Budget-matched model vs tree vs random on the deterministic
+    fabric surface, with a history pre-seeded by three finished
+    same-kind tree walks (the cumulative-campaign situation the
+    ``model`` strategy exists for)."""
+    from benchmarks.fabric_surface import surface_cost
+    from repro.core.campaign import Campaign, parse_cells
+    seed_cells = parse_cells(PROPOSER_SEED_CELLS)
+    targets = parse_cells(PROPOSER_TARGET_CELLS)
+    scratch.mkdir(parents=True, exist_ok=True)
+    Campaign(seed_cells, evaluator=surface_cost,
+             baseline_factory=_baseline, threshold=threshold,
+             checkpoint_dir=scratch / "seed").run()
+    seed_history = scratch / "seed" / "history.jsonl"
+
+    arms = {}
+    for arm, options in (("tree", {}),
+                         ("random", {"budget": budget, "seed": 0}),
+                         ("model", {"budget": budget, "seed": 0})):
+        arm_dir = scratch / arm
+        arm_dir.mkdir(parents=True, exist_ok=True)
+        shutil.copy(seed_history, arm_dir / "history.jsonl")
+        camp = Campaign(targets, strategy=arm,
+                        strategy_options=options,
+                        evaluator=surface_cost,
+                        baseline_factory=_baseline,
+                        threshold=threshold,
+                        checkpoint_dir=arm_dir)
+        reports = camp.run()
+        cells = {k: _walk_metrics(r) for k, r in reports.items()}
+        arms[arm] = {
+            "cells": cells,
+            "trials_to_best": sum(m["trials_to_best"]
+                                  for m in cells.values()),
+            "final_cost_s": round(sum(m["final_cost_s"]
+                                      for m in cells.values()), 6),
+        }
+    out = {
+        "seed_cells": [c.key() for c in seed_cells],
+        "target_cells": [c.key() for c in targets],
+        "budget": budget,
+        "seed_history_records": sum(
+            1 for _ in seed_history.open()),
+        "arms": arms,
+        "model_fewest_trials_to_best":
+            arms["model"]["trials_to_best"]
+            < min(arms["tree"]["trials_to_best"],
+                  arms["random"]["trials_to_best"]),
+        "model_final_no_worse":
+            arms["model"]["final_cost_s"]
+            <= min(arms["tree"]["final_cost_s"],
+                   arms["random"]["final_cost_s"]) + 1e-9,
+    }
+    return out
+
+
 def main(cells_spec: str, threshold: float = 0.05):
     from repro.core.campaign import parse_cells, tuning_fingerprint
     from repro.core.trial import RooflineEvaluator
@@ -168,6 +260,10 @@ def main(cells_spec: str, threshold: float = 0.05):
     print(f"sensitivity campaign: {sens['compiles']} compiles, "
           f"{sens['wall_s']:.0f}s, "
           f"identical={sens['identical_to_run_sensitivity']}")
+    proposer = run_proposer_arm(scratch / "proposer")
+    print("proposer arm trials-to-best: " + ", ".join(
+        f"{arm}={d['trials_to_best']}"
+        for arm, d in proposer["arms"].items()))
 
     # resume from the checkpoints: must replay everything, evaluate nothing
     camp2 = Campaign(cells, threshold=threshold,
@@ -208,6 +304,7 @@ def main(cells_spec: str, threshold: float = 0.05):
                      "trials": camp_stats["trials"],
                      "cache": ev.compile_cache.stats()},
         "sensitivity_campaign": sens,
+        "proposer": proposer,
         "compile_reduction_x": round(naive_compiles
                                      / max(1, camp_compiles), 2),
         "wall_speedup_x": round(naive_wall / max(1e-9, camp_wall), 2),
@@ -226,7 +323,29 @@ def main(cells_spec: str, threshold: float = 0.05):
     assert resume_ok, "campaign resume re-paid trials!"
     assert sens["identical_to_run_sensitivity"], \
         "sensitivity-via-campaign changed the KnobImpact table!"
+    assert proposer["model_fewest_trials_to_best"], \
+        "model arm did not beat tree/random on trials-to-best!"
     return out
+
+
+def proposer_only():
+    """Re-run just the (synthetic, seconds-long) proposer arm and merge
+    it into the existing BENCH_campaign.json — the compile-bound arms
+    are untouched."""
+    scratch = ROOT / "results" / "bench_campaign_scratch"
+    shutil.rmtree(scratch, ignore_errors=True)
+    proposer = run_proposer_arm(scratch / "proposer")
+    shutil.rmtree(scratch, ignore_errors=True)
+    res = ROOT / "results" / "benchmarks" / "BENCH_campaign.json"
+    out = json.loads(res.read_text()) if res.exists() else {}
+    out["proposer"] = proposer
+    res.parent.mkdir(parents=True, exist_ok=True)
+    res.write_text(json.dumps(out, indent=1))
+    (ROOT / "BENCH_campaign.json").write_text(json.dumps(out, indent=1))
+    print(json.dumps(proposer, indent=1))
+    assert proposer["model_fewest_trials_to_best"], \
+        "model arm did not beat tree/random on trials-to-best!"
+    return proposer
 
 
 if __name__ == "__main__":
@@ -234,5 +353,11 @@ if __name__ == "__main__":
     ap.add_argument("--cells", default=DEFAULT_CELLS,
                     help="comma-separated arch:shape[:pod|multipod]")
     ap.add_argument("--threshold", type=float, default=0.05)
+    ap.add_argument("--proposer-only", action="store_true",
+                    help="re-run just the learned-proposer arm and "
+                         "merge it into the existing JSON")
     a = ap.parse_args()
-    main(a.cells, a.threshold)
+    if a.proposer_only:
+        proposer_only()
+    else:
+        main(a.cells, a.threshold)

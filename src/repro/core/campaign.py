@@ -235,6 +235,7 @@ class _CellRun:
         self.replayed = 0                # trials served from checkpoint
         self.report: Optional[Any] = None
         self.warmstart: List[Dict] = []  # seed configs offered the cursor
+        self.primer: Optional[Dict] = None   # learned-proposer fit state
 
 
 class Campaign:
@@ -518,6 +519,36 @@ class Campaign:
         cursor.warm_start([config_from_dict(d) for d in ws])
         return ws
 
+    def _resolve_primer(self, cursor: SearchCursor,
+                        ckpt: Optional[Dict]) -> Optional[Dict]:
+        """Prime a history-fit cursor (core/proposer.py) with its
+        checkpointable fit state; returns the state used (None for
+        strategies without the prime/build_primer hooks).
+
+        A checkpoint's stored state wins over a fresh fit — the history
+        may have grown since the interrupted run, and replay must see
+        the fit the checkpoint's walk was proposed from.  The stored
+        state is self-validating: ``prime`` re-fits from the
+        append-only history *prefix* it names and raises if the bytes
+        no longer match (rewritten store), in which case a fresh fit is
+        built and the stale checkpoint is discarded downstream by the
+        signature check."""
+        prime = getattr(cursor, "prime", None)
+        build = getattr(cursor, "build_primer", None)
+        if not callable(prime) or not callable(build):
+            return None
+        stored = (ckpt or {}).get("primer")
+        if stored is not None:
+            try:
+                prime(stored, self.history)
+            except (ValueError, TypeError, KeyError):
+                pass                     # stale/foreign state: refit
+            else:
+                return dict(stored)
+        state = build(self.history)
+        prime(state, self.history)
+        return state
+
     def cell_done(self, spec: CellSpec) -> bool:
         """Full-validation completion probe: True iff the cell's
         checkpoint is done under this campaign's *exact* parameters —
@@ -542,6 +573,7 @@ class Campaign:
         baseline = self.baseline_factory(spec)
         runner = TrialRunner(spec.workload(), self.evaluator)
         cursor = self._make_cursor(spec, runner, baseline)
+        self._resolve_primer(cursor, ckpt)
         self._resolve_warmstart(spec, baseline, cursor, ckpt)
         return ckpt.get("signature") \
             == self._signature(spec, baseline, cursor)
@@ -564,6 +596,8 @@ class Campaign:
         }
         if self.warm_start:
             state["warmstart"] = cr.warmstart
+        if cr.primer is not None:
+            state["primer"] = cr.primer
         health = cell_health(cr.runner.log)
         if health:                       # fault-free checkpoints unchanged
             state["health"] = health
@@ -726,10 +760,12 @@ class Campaign:
             if self.history is not None else None)
         cursor = self._make_cursor(spec, runner, baseline)
         ckpt = self._read_checkpoint(spec)
+        primer = self._resolve_primer(cursor, ckpt)
         warmstart = self._resolve_warmstart(spec, baseline, cursor, ckpt)
         cr = _CellRun(spec, runner, cursor,
                       self._signature(spec, baseline, cursor))
         cr.warmstart = warmstart
+        cr.primer = primer
         self._apply_checkpoint(cr, ckpt)
         if self.telemetry.enabled:
             self.telemetry.emit("cell.activate", cell=spec.key(),

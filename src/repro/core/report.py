@@ -83,6 +83,9 @@ def tuning_markdown(rep: TuningReport) -> str:
     md = getattr(rep, "measured", None)
     if isinstance(md, dict):             # model-only reports unchanged
         out += ["", measured_markdown(md)]
+    pd = getattr(rep, "proposer", None)
+    if isinstance(pd, dict):             # learned-proposer walks only
+        out += ["", proposer_markdown(pd)]
     return "\n".join(out)
 
 
@@ -118,6 +121,35 @@ def measured_markdown(md: Dict) -> str:
             f"{verdict} |")
     if md.get("note"):
         out += ["", f"_{md['note']}_"]
+    return "\n".join(out)
+
+
+def proposer_markdown(pd: Dict) -> str:
+    """The learned proposer's predicted-vs-actual table
+    (``TuningReport.proposer``, core/proposer.py): the fit it rode
+    (record counts + digest prefix) and, per proposed trial, the
+    ridge model's predicted cost next to the evaluated one — the
+    inspection surface for "is the model earning its trials"."""
+    head = (f"**Learned proposer** (fit on {pd.get('records', 0)} of "
+            f"{pd.get('raw', 0)} history records, "
+            f"digest `{str(pd.get('digest', ''))[:12]}`)")
+    rows = pd.get("rows") or []
+    if not rows:
+        return head + ": no model-proposed trials"
+    out = [head, "",
+           "| trial | predicted | actual | error |",
+           "|---|---|---|---|"]
+    for r in rows:
+        pred = r.get("predicted_s", float("nan"))
+        if r.get("crashed"):
+            actual, err = "CRASH", "—"
+        else:
+            cost = r.get("cost_s", float("nan"))
+            actual = _fmt_s(cost)
+            err = (f"{(pred - cost) / cost * 100.0:+.1f}%"
+                   if cost == cost and cost > 0 else "—")
+        out.append(f"| {r.get('name') or '—'} | {_fmt_s(pred)} | "
+                   f"{actual} | {err} |")
     return "\n".join(out)
 
 
@@ -227,6 +259,15 @@ def campaign_markdown(reports: Dict[str, TuningReport],
         if overturned:
             line += " — " + ", ".join(f"`{c}`" for c in overturned)
         lines.insert(-2, line)
+    fitted = {k: r.proposer for k, r in reports.items()
+              if isinstance(getattr(r, "proposer", None), dict)}
+    if fitted:                           # tree-only output unchanged
+        lines.insert(-2, (
+            f"* learned proposer: {len(fitted)} cell(s) fit "
+            f"(on {sum(p.get('records', 0) for p in fitted.values())} "
+            f"history records), "
+            f"{sum(len(p.get('rows') or []) for p in fitted.values())} "
+            f"model-proposed trial(s)"))
     degraded = sorted(d["cell"] for d in (queue or {}).get("cells", [])
                       if (d.get("health") or {}).get("degraded"))
     if degraded:                         # fault-free output unchanged

@@ -22,7 +22,9 @@ trial budget where the expected gain is highest (online tuning à la
     first-seen-arch order bit-for-bit; ``history`` estimates each
     cell's expected speedup from the accumulated trial history
     (:meth:`~repro.core.history.TrialHistory.expected_speedup` —
-    best-of-nearest-cells via the registry-derived similarity).  Cells
+    best-of-nearest-cells via the history-fit similarity weights,
+    falling back to the static registry-derived weights while the
+    history is too thin to fit).  Cells
     the history knows nothing about sort *first* (explore-first: an
     unknown cell is where information is cheapest).  The first-seen-arch
     order survives as the tie-break, so same-arch calibration compiles
@@ -231,8 +233,10 @@ class ArchPrioritizer:
 class HistoryPrioritizer:
     """Expected speedup from the accumulated trial history: the best
     observed speedup among the ``k_cells`` nearest already-tuned cells
-    (registry-derived signature similarity, core/history.py).  A cell
-    with no usable neighbours scores ``None`` → explore-first."""
+    (signature similarity with weights *fit from the history itself*
+    once it holds enough comparable cell pairs, else the static
+    registry-derived weights — core/history.py).  A cell with no
+    usable neighbours scores ``None`` → explore-first."""
 
     name = "history"
 

@@ -29,7 +29,12 @@ Registered strategies:
     campaign schedules sensitivity cells concurrently;
   * ``random`` — a budget-matched random-search baseline
     (:class:`RandomCursor`): same ≤10-trial budget as the tree, purely
-    random candidates, seeded per cell for determinism.
+    random candidates, seeded per cell for determinism;
+  * ``model`` — the learned cost-model proposer
+    (:class:`~repro.core.proposer.ModelCursor`): a ridge fit on the
+    trial history proposes the top-k predicted configs per batch and
+    refits online; thin histories fall back bit-identically to the
+    ``tree`` walk (1808.06008, 2503.03826).
 
 Adding a strategy = one cursor class + one ``register_strategy`` call.
 """
@@ -44,6 +49,8 @@ import numpy as np
 
 from repro.core.executor import SweepExecutor, run_trials
 from repro.core.params import DOMAINS, TunableConfig
+from repro.core.proposer import (MIN_RECORDS, POOL_SIZE, RIDGE_LAMBDA,
+                                 TOP_K, ModelCursor)
 from repro.core.sensitivity import (KnobImpact, SensitivityCursor,
                                     SensitivityReport)
 from repro.core.tree import (MAX_TRIALS, Candidate, TreeCursor,
@@ -326,6 +333,19 @@ def _random_factory(runner, baseline, threshold, options):
                         seed=options.get("seed", 0))
 
 
+def _model_factory(runner, baseline, threshold, options):
+    return ModelCursor(
+        runner, baseline, threshold=threshold,
+        budget=options.get("budget", MAX_TRIALS),
+        seed=options.get("seed", 0),
+        top_k=options.get("top_k", TOP_K),
+        min_records=options.get("min_records", MIN_RECORDS),
+        pool_size=options.get("pool_size", POOL_SIZE),
+        ridge_lambda=options.get("ridge_lambda", RIDGE_LAMBDA),
+        stages=options.get("stages"),
+        history=options.get("history"))
+
+
 register_strategy(StrategySpec(
     "tree", TreeCursor.strategy_version, _tree_factory,
     _load_tuning_report,
@@ -343,3 +363,10 @@ register_strategy(StrategySpec(
     "random", RandomCursor.strategy_version, _random_factory,
     _load_tuning_report,
     "budget-matched random-search baseline"))
+
+
+register_strategy(StrategySpec(
+    "model", ModelCursor.strategy_version, _model_factory,
+    _load_tuning_report,
+    "history-fit ridge cost model proposing top-k predicted configs; "
+    "falls back to the tree walk on thin history"))

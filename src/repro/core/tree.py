@@ -96,6 +96,12 @@ class TuningReport:
     #: and deliberately excluded from ``tuning_fingerprint``, so
     #: model-tier decisions stay bit-identical with or without it
     measured: Optional[Dict] = None
+    #: learned-proposer fit summary + per-trial predicted-vs-actual
+    #: rows (core/proposer.py); None for every other strategy *and*
+    #: for the model strategy's cold-start fallback (whose report is
+    #: the tree's, verbatim).  Excluded from ``tuning_fingerprint``
+    #: like ``measured``.
+    proposer: Optional[Dict] = None
 
     @property
     def speedup(self) -> float:

@@ -16,7 +16,13 @@ composes with both modes:
   * ``sensitivity`` — the Sec.-4 OFAT matrix (Table 2);
     ``--sweep-knobs`` restricts it to a knob subset;
   * ``random`` — budget-matched random-search baseline
-    (``--budget``, ``--seed``).
+    (``--budget``, ``--seed``);
+  * ``model`` — learned cost-model proposer (core/proposer.py): a
+    ridge fit on the shared trial history proposes the top-k predicted
+    configs per batch and refits online (``--budget``, ``--seed``,
+    ``--model-min-records``, ``--model-top-k``); with fewer than
+    ``--model-min-records`` usable same-kind history records the cell
+    falls back bit-identically to the ``tree`` walk.
 
 Fabric modes (core/fabric.py) shard a campaign's cells across worker
 *processes* that coordinate through lease files in one shared
@@ -121,7 +127,9 @@ def _baseline(overrides=None):
                           **(overrides or {}))
 
 
-def _strategy_options(strategy, sweep_knobs=None, budget=None, seed=None):
+def _strategy_options(strategy, sweep_knobs=None, budget=None, seed=None,
+                      model_min_records=None, model_top_k=None,
+                      history=None):
     """CLI flags -> the strategy's cursor-factory options."""
     if strategy in ("sensitivity",) and sweep_knobs:
         names = [k.strip() for k in sweep_knobs.split(",") if k.strip()]
@@ -131,12 +139,21 @@ def _strategy_options(strategy, sweep_knobs=None, budget=None, seed=None):
                 f"--sweep-knobs: {', '.join(unknown)} not in the "
                 f"sensitivity sweep ({', '.join(SENSITIVITY_SWEEP)})")
         return {"knobs": {k: SENSITIVITY_SWEEP[k] for k in names}}
-    if strategy == "random":
+    if strategy in ("random", "model"):
         opts = {}
         if budget is not None:
             opts["budget"] = budget
         if seed is not None:
             opts["seed"] = seed
+        if strategy == "model":
+            if model_min_records is not None:
+                opts["min_records"] = model_min_records
+            if model_top_k is not None:
+                opts["top_k"] = model_top_k
+            if history is not None:
+                # single-cell mode fit source; campaigns prime their
+                # cursors from their own history explicitly instead
+                opts["history"] = str(history)
         return opts
     return {}
 
@@ -498,6 +515,10 @@ def _worker_passthrough(args) -> list:
         extra += ["--budget", str(args.budget)]
     if args.seed is not None:
         extra += ["--seed", str(args.seed)]
+    if args.model_min_records is not None:
+        extra += ["--model-min-records", str(args.model_min_records)]
+    if args.model_top_k is not None:
+        extra += ["--model-top-k", str(args.model_top_k)]
     return extra
 
 
@@ -521,15 +542,27 @@ def main(argv=None) -> int:
                     help="campaign mode: every applicable cell of the "
                          "assignment")
     ap.add_argument("--strategy", default="tree",
-                    choices=["tree", "short", "sensitivity", "random"],
+                    choices=["tree", "short", "sensitivity", "random",
+                             "model"],
                     help="search strategy (core/strategy.py registry)")
     ap.add_argument("--sweep-knobs",
                     help="sensitivity strategy: comma-separated knob "
                          "subset (default: the full SENSITIVITY_SWEEP)")
     ap.add_argument("--budget", type=int,
-                    help="random strategy: trial budget (default 10)")
+                    help="random/model strategies: trial budget "
+                         "(default 10)")
     ap.add_argument("--seed", type=int,
-                    help="random strategy: sampling seed (default 0)")
+                    help="random/model strategies: sampling seed "
+                         "(default 0)")
+    ap.add_argument("--model-min-records", type=int, default=None,
+                    metavar="N",
+                    help="model strategy: cold-start rule — with fewer "
+                         "than N usable same-kind history records the "
+                         "cell falls back bit-identically to the tree "
+                         "walk (default 24)")
+    ap.add_argument("--model-top-k", type=int, default=None, metavar="K",
+                    help="model strategy: predicted configs proposed "
+                         "per batch (default 3)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--threshold", type=float, default=0.05)
     ap.add_argument("--fresh", action="store_true",
@@ -660,8 +693,14 @@ def main(argv=None) -> int:
     if args.sweep_knobs and args.strategy != "sensitivity":
         ap.error("--sweep-knobs only applies to --strategy sensitivity")
     if (args.budget is not None or args.seed is not None) \
-            and args.strategy != "random":
-        ap.error("--budget/--seed only apply to --strategy random")
+            and args.strategy not in ("random", "model"):
+        ap.error("--budget/--seed only apply to --strategy "
+                 "random/model")
+    if (args.model_min_records is not None
+            or args.model_top_k is not None) \
+            and args.strategy != "model":
+        ap.error("--model-min-records/--model-top-k only apply to "
+                 "--strategy model")
     if args.add_cells or args.stop:
         # standalone actions against a campaign directory: any other
         # mode flag would be silently ignored, so reject the combination
@@ -737,8 +776,12 @@ def main(argv=None) -> int:
             ap.error("--status is a read-only action; "
                      f"{', '.join(ignored)} would be ignored — "
                      "drop it or run it separately")
-    options = _strategy_options(args.strategy, args.sweep_knobs,
-                                args.budget, args.seed)
+    from repro.core.history import HISTORY_FILENAME
+    options = _strategy_options(
+        args.strategy, args.sweep_knobs, args.budget, args.seed,
+        model_min_records=args.model_min_records,
+        model_top_k=args.model_top_k,
+        history=campaign_dir(args.strategy, args.dir) / HISTORY_FILENAME)
     if args.measure_top_k < 0:
         ap.error("--measure-top-k must be >= 0")
     if args.measured_evaluator and not args.measure_top_k:

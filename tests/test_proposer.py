@@ -1,0 +1,267 @@
+"""Learned cost-model proposer (core/proposer.py): fit, cold start,
+checkpointable fit state, determinism.
+
+Load-bearing invariants:
+
+  * records from an older knob space are *skipped* by the featurizer
+    and the fit-row builder — never a crash, never a proposal;
+  * with thin history the ``model`` strategy is bit-identical to the
+    ``tree`` walk (cold-start rule), and the decision is checkpointed;
+  * a campaign killed mid-walk resumes replay-exact even after the
+    history has grown underneath the checkpointed fit (the primer
+    re-fits on the stored append-only record *prefix*);
+  * same history bytes + same seed ⇒ same fit digest and same proposal
+    order in *any* process (subprocess-verified).
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.campaign import Campaign, CellSpec, tuning_fingerprint
+from repro.core.history import (TrialHistory, cell_signature, featurize)
+from repro.core.params import default_config
+from repro.core.proposer import (MIN_RECORDS, ModelCursor, fit_rows)
+from repro.core.strategy import drive, make_cursor
+from repro.core.tree import run_tuning
+from repro.core.trial import TrialResult, TrialRunner, Workload
+
+ARCH, SHAPE = "smollm-135m", "train_4k"
+WL = Workload(ARCH, SHAPE)
+SIG = cell_signature(ARCH, SHAPE, False)
+BASE = default_config(shard_strategy="fsdp_tp")
+
+
+def surface(wl, rt):
+    """Multiplicative synthetic surface — log-cost is exactly linear
+    in the knob one-hots, so the ridge fit can nail it."""
+    if rt.remat_policy == "full":
+        return TrialResult(cost_s=float("inf"), crashed=True)
+    c = 100.0
+    if rt.compute_dtype == "bfloat16":
+        c *= 0.7
+    if rt.shard_strategy == "tp":
+        c *= 0.9
+    if rt.remat_policy == "none":
+        c *= 0.85
+    if rt.microbatches == 2:
+        c *= 0.97
+    if rt.attn_block_q == 256:
+        c *= 0.92
+    return TrialResult(cost_s=round(c, 6))
+
+
+def _rec(cost, config, arch=ARCH, shape=SHAPE, **over):
+    d = {"v": 1, "ts": 1.0, "cell": Workload(arch, shape).key(),
+         "arch": arch, "shape": shape, "multi_pod": False,
+         "strategy": "tree", "name": "t", "delta": {},
+         "config": config, "cost_s": cost, "crashed": False,
+         "compiles": 0, "compile_s": 0.0, "cached": False}
+    d.update(over)
+    return d
+
+
+def seed_history(path, n=MIN_RECORDS + 6):
+    """Append ``n`` viable same-kind records sampled from the synthetic
+    surface (deterministic knob sweep — no RNG)."""
+    h = TrialHistory(path)
+    combos = [(cd, ss, rp, mb, q)
+              for cd in ("float32", "bfloat16")
+              for ss in ("fsdp_tp", "tp", "dp")
+              for rp in ("dots", "none")
+              for mb in (1, 2)
+              for q in (128, 256)]
+    for i, (cd, ss, rp, mb, q) in enumerate(combos[:n]):
+        cfg = BASE.replace(compute_dtype=cd, shard_strategy=ss,
+                           remat_policy=rp, microbatches=mb,
+                           attn_block_q=q)
+        res = surface(WL, cfg)
+        arch = (ARCH, "glm4-9b")[i % 2]   # two same-kind cells
+        h.append(_rec(res.cost_s, cfg.as_dict(), arch=arch))
+    return h
+
+
+# --------------------------------------------------------- featurizing
+def test_old_space_records_skipped_not_crashed(tmp_path):
+    h = TrialHistory(tmp_path / "h.jsonl")
+    good = _rec(70.0, BASE.as_dict())
+    h.append(good)
+    # value outside today's domain
+    h.append(_rec(65.0, {**BASE.as_dict(), "compute_dtype": "fp8"}))
+    # knob renamed away in an older space — unknown keys are dropped by
+    # config_from_dict, so the record degrades to defaults and stays
+    h.append(_rec(60.0, {**BASE.as_dict(), "tensor_parallel": 4}))
+    # crash + nonpositive cost rows can't feed a log-cost fit
+    h.append(_rec(float("inf"), BASE.as_dict(), crashed=True))
+    h.append(_rec(0.0, BASE.as_dict()))
+    rows, raw, digest = fit_rows(h, SIG)
+    assert raw == 5
+    assert len(rows) == 2                 # good + renamed-knob record
+    assert digest == fit_rows(h, SIG)[2]  # deterministic
+
+
+def test_featurize_out_of_domain_raises():
+    x = featurize(BASE.as_dict(), SIG)
+    assert x.ndim == 1 and x[0] == 1.0    # bias is set
+    with pytest.raises(ValueError):
+        featurize({**BASE.as_dict(), "compute_dtype": "fp8"}, SIG)
+
+
+def test_fit_rows_skips_other_kinds(tmp_path):
+    h = TrialHistory(tmp_path / "h.jsonl")
+    h.append(_rec(70.0, BASE.as_dict()))
+    decode = default_config()
+    h.append(_rec(10.0, decode.as_dict(), shape="decode_32k"))
+    rows, raw, _ = fit_rows(h, SIG)
+    assert (len(rows), raw) == (1, 2)     # decode row filtered out
+
+
+# ---------------------------------------------------------- cold start
+def test_cold_start_bit_identical_to_tree(tmp_path):
+    h = TrialHistory(tmp_path / "h.jsonl")
+    for _ in range(3):                    # well under MIN_RECORDS
+        h.append(_rec(70.0, BASE.as_dict()))
+    cursor = make_cursor("model", TrialRunner(WL, surface), BASE,
+                         options={"history": str(tmp_path / "h.jsonl")})
+    rep = drive(cursor)
+    assert cursor.cold is True
+    ref = run_tuning(TrialRunner(WL, surface), BASE)
+    assert rep.__dict__ == ref.__dict__   # bytes, not just decisions
+    assert rep.proposer is None
+
+
+def test_warm_model_reports_fit_and_predictions(tmp_path):
+    seed_history(tmp_path / "h.jsonl")
+    cursor = make_cursor("model", TrialRunner(WL, surface), BASE,
+                         threshold=0.0,   # accept every real improvement
+                         options={"history": str(tmp_path / "h.jsonl")})
+    rep = drive(cursor)
+    assert cursor.cold is False
+    p = rep.proposer
+    assert p and p["cold"] is False and p["records"] >= MIN_RECORDS
+    assert p["rows"] and all("predicted_s" in r for r in p["rows"])
+    assert rep.n_trials <= cursor.budget
+    # the surface's optimum is reachable from history signal alone
+    assert rep.final_cost == pytest.approx(100.0 * 0.7 * 0.9 * 0.85
+                                           * 0.97 * 0.92, rel=1e-6)
+
+
+def test_cold_decision_is_checkpointed(tmp_path):
+    h = seed_history(tmp_path / "h.jsonl", n=5)
+    cursor = ModelCursor(TrialRunner(WL, surface), BASE)
+    state = cursor.build_primer(h)
+    assert state["cold"] is True
+    cursor.prime(state, h)
+    assert cursor.cold is True
+    assert any(isinstance(p, dict) and p.get("cold") is True
+               for p in cursor.signature_parts())
+
+
+# ------------------------------------------------- campaign kill/resume
+def test_kill_mid_campaign_resumes_fitted_model(tmp_path):
+    """Kill a warm model walk mid-campaign; resume after the history
+    has grown (its own appended trials): the checkpointed primer
+    re-fits on the stored record prefix and the final report is
+    bit-identical to the uninterrupted run."""
+    spec = CellSpec(ARCH, SHAPE)
+    for d in ("a", "b"):
+        (tmp_path / d).mkdir()
+        seed_history(tmp_path / d / "history.jsonl")
+
+    class Killer:
+        calls = 0
+
+        def __call__(self, wl, rt):
+            Killer.calls += 1
+            if Killer.calls > 3:
+                raise KeyboardInterrupt("simulated kill")
+            return surface(wl, rt)
+
+    camp = Campaign([spec], strategy="model", evaluator=Killer(),
+                    baseline_factory=lambda s: BASE,
+                    checkpoint_dir=tmp_path / "a")
+    with pytest.raises(KeyboardInterrupt):
+        camp.run()
+    ckpt = json.loads((tmp_path / "a" / f"{spec.key()}.json").read_text())
+    assert ckpt["primer"]["cold"] is False
+    assert ckpt["log"]                     # the kill landed mid-walk
+    # history grew past the primed prefix before the resume
+    h = TrialHistory(tmp_path / "a" / "history.jsonl")
+    assert h.n_records() > ckpt["primer"]["raw"]
+
+    replayed = []
+
+    def resumer(wl, rt):
+        replayed.append(rt.as_dict())
+        return surface(wl, rt)
+
+    camp2 = Campaign([spec], strategy="model", evaluator=resumer,
+                     baseline_factory=lambda s: BASE,
+                     checkpoint_dir=tmp_path / "a")
+    resumed = camp2.run()[spec.key()]
+    absorbed = {json.dumps(e["config"], sort_keys=True)
+                for e in ckpt["log"]}
+    assert not absorbed & {json.dumps(c, sort_keys=True)
+                           for c in replayed}    # nothing re-paid
+    ref = Campaign([spec], strategy="model", evaluator=surface,
+                   baseline_factory=lambda s: BASE,
+                   checkpoint_dir=tmp_path / "b").run()[spec.key()]
+    assert tuning_fingerprint(resumed) == tuning_fingerprint(ref)
+    assert resumed.proposer == ref.proposer
+
+
+def test_rewritten_history_invalidates_primer(tmp_path):
+    h = seed_history(tmp_path / "h.jsonl")
+    cursor = ModelCursor(TrialRunner(WL, surface), BASE)
+    state = cursor.build_primer(h)
+    lines = (tmp_path / "h.jsonl").read_text().splitlines()
+    (tmp_path / "h.jsonl").write_text("\n".join(lines[1:]) + "\n")
+    with pytest.raises(ValueError):
+        cursor.prime(state, TrialHistory(tmp_path / "h.jsonl"))
+
+
+# ------------------------------------------------------- determinism
+_SUBPROC = r"""
+import json, sys
+sys.path.insert(0, {src!r})
+from repro.core.executor import run_trials
+from repro.core.history import TrialHistory, cell_signature
+from repro.core.params import default_config
+from repro.core.proposer import ModelCursor, fit_rows
+from repro.core.trial import TrialResult, TrialRunner, Workload
+
+def surface(wl, rt):
+    return TrialResult(cost_s=70.0)
+
+wl = Workload({arch!r}, {shape!r})
+h = TrialHistory({path!r})
+base = default_config(shard_strategy="fsdp_tp")
+cursor = ModelCursor(TrialRunner(wl, surface), base, history=h)
+_, _, digest = fit_rows(h, cell_signature(wl.arch, wl.shape, False))
+batch = cursor.propose()                       # baseline
+pairs = run_trials(cursor.runner, [c.as_trial() for c in batch])
+cursor.absorb([r for _, r in pairs], [i for i, _ in pairs])
+batch = cursor.propose()                       # first model round
+print(json.dumps({{"digest": digest,
+                   "names": [c.name for c in batch],
+                   "configs": [c.config.as_dict() for c in batch]}},
+                 sort_keys=True))
+"""
+
+
+def test_cross_process_fit_determinism(tmp_path):
+    """Same history bytes ⇒ same digest and same proposal order from
+    two fresh interpreter processes."""
+    seed_history(tmp_path / "h.jsonl")
+    import repro.core.proposer as _p
+    src = str(pathlib.Path(_p.__file__).resolve().parents[2])
+    code = _SUBPROC.format(src=src, arch=ARCH, shape=SHAPE,
+                           path=str(tmp_path / "h.jsonl"))
+    outs = [subprocess.run([sys.executable, "-c", code],
+                           capture_output=True, text=True, check=True,
+                           ).stdout for _ in range(2)]
+    assert outs[0] == outs[1]
+    got = json.loads(outs[0])
+    assert got["names"] and got["names"][0].startswith("model:1.")

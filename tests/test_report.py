@@ -171,6 +171,35 @@ def test_cell_markdown_dispatches_on_report_type():
     assert report.cell_markdown(tuned_report()) == TUNING_GOLDEN
 
 
+PROPOSER_GOLDEN = """\
+**Learned proposer** (fit on 28 of 30 history records, \
+digest `abcdef123456`)
+
+| trial | predicted | actual | error |
+|---|---|---|---|
+| model:1.1 | 1.200 s | 1.250 s | -4.0% |
+| model:1.2 | 1.100 s | CRASH | — |\
+"""
+
+
+def test_proposer_markdown_golden():
+    pd = {"version": 1, "cold": False, "records": 28, "raw": 30,
+          "digest": "abcdef1234567890", "rows": [
+              {"name": "model:1.1", "predicted_s": 1.2,
+               "cost_s": 1.25, "crashed": False},
+              {"name": "model:1.2", "predicted_s": 1.1,
+               "cost_s": float("inf"), "crashed": True}]}
+    assert report.proposer_markdown(pd) == PROPOSER_GOLDEN
+    # a warm walk whose rounds proposed nothing still shows the fit
+    assert report.proposer_markdown({**pd, "rows": []}).endswith(
+        "no model-proposed trials")
+    # and tuning_markdown appends the block for model reports only
+    rep = tuned_report()
+    assert "Learned proposer" not in report.tuning_markdown(rep)
+    rep.proposer = pd
+    assert report.tuning_markdown(rep).endswith(PROPOSER_GOLDEN)
+
+
 QUEUE_HEALTH_GOLDEN = """\
 ### Queue: 2 cells admitted (1 via intake), prioritize=arch
 

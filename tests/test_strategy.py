@@ -58,7 +58,7 @@ def fingerprint(rep):
 # ------------------------------------------------------------- registry
 def test_registry_contents():
     assert set(list_strategies()) == {"tree", "short", "sensitivity",
-                                      "random"}
+                                      "random", "model"}
     for name in list_strategies():
         spec = get_strategy(name)
         assert spec.version >= 1 and callable(spec.factory)
